@@ -1,0 +1,115 @@
+"""Fig 7: CAPSim (functional sim + batched predictor) vs the O3 oracle.
+
+Honest accounting on this host: the paper compares gem5 (~10^5 inst/s on a
+Xeon) against an RTX 4090; here BOTH paths share one CPU core and our
+greedy O3 oracle is itself ~5x10^5 inst/s — ~500x faster than gem5 — so an
+absolute wall-clock speedup is not reproducible and is reported as-is.
+What does reproduce is the *structure* of the paper's claim:
+
+  1. the oracle is inherently sequential: its wall time grows linearly
+     with instruction count (measured below),
+  2. the predictor path is embarrassingly parallel over clips: per-clip
+     cost falls with batch size (measured below, compile amortized),
+  3. on the target accelerator the clip batch is one dry-run cell:
+     the compiled capsim x serve_clips artifact bounds throughput at
+     16384 clips (~2.1M instructions) per step-time (derived below from
+     results/dryrun), which is what the paper's Fig-7 GPU bars measure.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import full_cfg
+from repro.core import predictor
+from repro.core.simulate import capsim_simulate
+from repro.core.standardize import build_vocab
+from repro.isa import funcsim, progen, timing
+
+BENCHES = ["503.bwaves", "505.mcf", "548.exchange2"]
+
+
+def run(emit) -> None:
+    vocab = build_vocab()
+    cfg = full_cfg()
+    params = predictor.init_params(cfg, jax.random.PRNGKey(0))
+
+    # 1. oracle sequential scaling
+    bench = progen.build_benchmark("505.mcf")
+    st = progen.fresh_state(bench)
+    times = []
+    for n in (5_000, 10_000, 20_000):
+        trace, _, _ = funcsim.run(bench.program, n,
+                                  state=progen.fresh_state(bench))
+        t0 = time.time()
+        timing.simulate(trace)
+        times.append(time.time() - t0)
+    emit.emit("speed.oracle_scaling", times[-1] * 1e6 / 20_000,
+              f"oracle seconds for 5k/10k/20k insts: "
+              f"{times[0]:.3f}/{times[1]:.3f}/{times[2]:.3f} (linear — "
+              "sequential, cannot parallelize)")
+
+    # 2. predictor batch amortization (compile amortized by warmup)
+    rng = np.random.RandomState(0)
+    def batch(B):
+        return {
+            "clip_tokens": jnp.asarray(
+                rng.randint(0, vocab.size, (B, 128, cfg.clip_tokens)),
+                jnp.int32),
+            "context_tokens": jnp.asarray(
+                rng.randint(0, vocab.size, (B, cfg.context_tokens)),
+                jnp.int32),
+            "clip_mask": jnp.ones((B, 128), jnp.float32)}
+    pred = jax.jit(lambda p, b: predictor.predict_step(p, b, cfg))
+    per_clip = {}
+    for B in (8, 32):
+        b = batch(B)
+        jax.block_until_ready(pred(params, b))          # compile+warm
+        t0 = time.time()
+        jax.block_until_ready(pred(params, b))
+        per_clip[B] = (time.time() - t0) / B * 1e6
+    emit.emit("speed.predictor_batching", per_clip[32],
+              f"us/clip at batch 8 vs 32: {per_clip[8]:.0f} -> "
+              f"{per_clip[32]:.0f}: flat per-clip cost on 1 core — the "
+              "batch dimension is free parallelism on real accelerators "
+              "(see v5e_projection)")
+
+    # 3. end-to-end on this host (compile already amortized above)
+    for name in BENCHES:
+        bench = progen.build_benchmark(name)
+        r = capsim_simulate(bench, params, cfg, vocab,
+                            interval_size=10_000, max_checkpoints=1,
+                            batch_size=32)
+        emit.emit(f"speed.{name}",
+                  r.capsim_seconds * 1e6 / max(r.n_instructions, 1),
+                  f"oracle {r.oracle_seconds:.2f}s vs capsim "
+                  f"{r.capsim_seconds:.2f}s = {r.speedup:.3f}x on 1 CPU "
+                  f"core ({r.n_instructions} insts; paper: 2.2-8.3x with "
+                  "gem5-vs-GPU cost ratio)")
+
+    # 4. target-accelerator projection from the compiled dry-run cell
+    rec_path = Path("results/dryrun/capsim__serve_clips__pod_16x16.json")
+    if rec_path.exists():
+        rec = json.loads(rec_path.read_text())
+        m = rec["scanned"]["memory"]
+        traffic = (m["argument_bytes"] + m["output_bytes"]
+                   + 2 * m["temp_bytes"])
+        step_s = max(traffic / 819e9,
+                     (rec["scanned"]["cost"]["flops"] or 0) / 197e12)
+        clips = 16_384
+        insts = clips * 128
+        emit.emit("speed.v5e_projection", step_s * 1e6 / clips,
+                  f"serve_clips dry-run: {clips} clips "
+                  f"({insts/1e6:.1f}M insts) per {step_s*1e3:.1f}ms pod "
+                  f"step = {insts/step_s/1e9:.1f}G inst/s structural "
+                  "bound vs oracle 5e5 inst/s/core")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import CsvEmitter
+    run(CsvEmitter())

@@ -1,0 +1,121 @@
+"""Shared infrastructure for the benchmark harness.
+
+Scale note: the paper trains E=128 / 4+4 layers on an RTX 4090; this
+container is a single CPU core, so every *training-based* benchmark uses
+the structure-faithful "bench scale" (E=64, same 4 heads / 4+4 layers /
+full 360-row context matrix, clips of 50-64 instructions) and fewer steps.
+The paper-exact model is exercised by examples/train_capsim.py and the
+multi-pod dry-run.  Datasets are cached under results/bench_data/.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import predictor
+from repro.core.standardize import build_vocab
+from repro.data.dataset import (BuildConfig, ClipDataset, batches,
+                                build_dataset, split_dataset)
+from repro.isa import progen
+from repro.training.train_loop import (TrainConfig, init_train_state,
+                                       make_train_step)
+
+DATA_DIR = Path("results/bench_data")
+VOCAB = build_vocab()
+
+BENCH_BCFG = BuildConfig(interval_size=6_000, warmup=600,
+                         max_checkpoints=2, l_min=50, l_clip=64,
+                         l_token=16, threshold=50, coef=0.1)
+
+
+def bench_cfg():
+    return get_config("capsim").replace(
+        d_model=64, head_dim=16, d_ff=256, dtype="float32")
+
+
+def full_cfg():
+    return get_config("capsim").replace(dtype="float32")
+
+
+def get_dataset(names, tag: str, bcfg: Optional[BuildConfig] = None,
+                verbose: bool = True) -> ClipDataset:
+    """Build-or-load the clip dataset for a benchmark list."""
+    DATA_DIR.mkdir(parents=True, exist_ok=True)
+    path = DATA_DIR / f"{tag}.npz"
+    if path.exists():
+        return ClipDataset.load(path)
+    t0 = time.time()
+    ds = build_dataset(names, bcfg or BENCH_BCFG, VOCAB, verbose=verbose)
+    ds.save(path)
+    if verbose:
+        print(f"  [{tag}] built {len(ds)} clips in {time.time()-t0:.0f}s")
+    return ds
+
+
+def get_set_dataset(set_no: int) -> ClipDataset:
+    names = [b.name for b in progen.benchmarks_in_set(set_no)]
+    return get_dataset(names, f"set{set_no}")
+
+
+def get_mixed_dataset(n_benchmarks: int = 12) -> ClipDataset:
+    names = list(progen.TABLE_II)[:n_benchmarks]
+    return get_dataset(names, f"mixed{n_benchmarks}")
+
+
+def train_model(loss_fn: Callable, params, train_ds: ClipDataset, *,
+                steps: int = 80, batch_size: int = 16, lr: float = 1e-3,
+                seed: int = 0, init_state=None, log_every: int = 0
+                ) -> Tuple[dict, float]:
+    """SGD-momentum training (paper recipe).  Returns (state, final loss)."""
+    tcfg = TrainConfig(optimizer="sgdm", base_lr=lr,
+                       warmup_steps=max(1, steps // 10), total_steps=steps)
+    state = init_state or init_train_state(params, tcfg)
+    step = jax.jit(make_train_step(loss_fn, tcfg))
+    it = batches(train_ds, batch_size, seed=seed, epochs=100_000)
+    loss = float("nan")
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, m = step(state, b)
+        loss = float(m["loss"])
+        if log_every and (i + 1) % log_every == 0:
+            print(f"    step {i+1:4d} loss {loss:.4f}")
+    return state, loss
+
+
+def eval_mape(predict_fn: Callable, params, ds: ClipDataset,
+              batch_size: int = 16) -> float:
+    errs = []
+    batch_size = max(1, min(batch_size, len(ds)))
+    for b in batches(ds, batch_size, shuffle=False):
+        bj = {k: jnp.asarray(v) for k, v in b.items()}
+        pred = np.asarray(predict_fn(params, bj))
+        fact = np.maximum(np.asarray(b["time"]), 1.0)
+        errs.extend(np.abs(pred - fact) / fact)
+    return float(np.mean(errs)) if errs else float("nan")
+
+
+def per_bench_mape(predict_fn: Callable, params, ds: ClipDataset,
+                   batch_size: int = 16) -> Dict[str, float]:
+    names = np.array(ds.bench_names)
+    out = {}
+    for name in sorted(set(ds.bench_names)):
+        sub = ds.select(np.flatnonzero(names == name))
+        out[name] = eval_mape(predict_fn, params, sub, batch_size)
+    return out
+
+
+class CsvEmitter:
+    """Benchmarks print ``name,us_per_call,derived`` rows via this."""
+
+    def __init__(self):
+        self.rows = []
+
+    def emit(self, name: str, us_per_call: float, derived: str = "") -> None:
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,67 @@
+"""Quickstart: the CAPSim pipeline end to end in ~a minute on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. generate a synthetic benchmark (SPEC-2017 stand-in),
+2. trace it functionally, time it with the O3 oracle,
+3. slice the timed trace into code clips (Algorithm 1), sample them,
+4. tokenize (standardization + context matrix),
+5. run the attention predictor on the clips and compare against the oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import predictor
+from repro.core.context import context_token_ids
+from repro.core.sampler import sample_clips
+from repro.core.slicer import slice_trace
+from repro.core.standardize import build_vocab, encode_clip
+from repro.isa import funcsim, progen, timing
+
+
+def main() -> None:
+    # 1. a benchmark from the suite (Table II)
+    bench = progen.build_benchmark("503.bwaves")
+    print(f"benchmark {bench.name}: tags={bench.tags}, "
+          f"{len(bench.program)} static instructions")
+
+    # 2. functional trace + O3 oracle commit times
+    state = progen.fresh_state(bench)
+    trace, snaps, _ = funcsim.run(bench.program, 20_000, state=state,
+                                  snapshot_every=100)
+    commits = timing.simulate(trace)
+    print(f"traced {len(trace)} instructions -> {commits[-1]} cycles "
+          f"(IPC {len(trace)/commits[-1]:.2f})")
+
+    # 3. slice + sample
+    clips = slice_trace([e.inst for e in trace], commits, l_min=100)
+    sampled, stats = sample_clips(clips, threshold=50, coef=0.1)
+    print(f"sliced {stats.n_in} clips ({stats.n_groups} unique contents) "
+          f"-> sampled {stats.n_out}")
+
+    # 4. tokenize
+    vocab = build_vocab()
+    cfg = get_config("capsim").replace(dtype="float32")
+    batch = {"clip_tokens": [], "context_tokens": [], "clip_mask": []}
+    for i, clip in enumerate(sampled[:16]):
+        toks, mask = encode_clip(clip.insts, vocab, 128, cfg.clip_tokens)
+        batch["clip_tokens"].append(toks)
+        batch["clip_mask"].append(mask)
+        snap = snaps[min(clip.start // 100, len(snaps) - 1)]
+        batch["context_tokens"].append(context_token_ids(snap, vocab))
+    batch = {k: jnp.asarray(np.stack(v)) for k, v in batch.items()}
+
+    # 5. predict (untrained weights here; see train_capsim.py)
+    params = predictor.init_params(cfg, jax.random.PRNGKey(0))
+    pred = predictor.predict_step(params, batch, cfg)
+    fact = np.array([c.time for c in sampled[:16]])
+    print("\n  clip  predicted  oracle")
+    for i in range(8):
+        print(f"  {i:4d} {float(pred[i]):9.1f} {fact[i]:7.1f}")
+    print("\n(untrained predictor — run examples/train_capsim.py to fit it)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""CAPSim vs the O3 oracle on whole benchmarks (paper Fig 1 / Fig 7).
+
+    PYTHONPATH=src python examples/simulate_benchmark.py [--ckpt results/ckpt_capsim]
+
+For each benchmark: run the functional simulator + batched predictor
+(CAPSim path) and the cycle-level oracle (conventional path); report both
+wall times, the speedup, and the prediction error.  With an untrained
+predictor the error column is meaningless — pass --ckpt to use weights
+from examples/train_capsim.py.
+"""
+import argparse
+
+import jax
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.configs import get_config
+from repro.core import predictor
+from repro.core.simulate import capsim_simulate
+from repro.core.standardize import build_vocab
+from repro.isa import progen
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--benchmarks", nargs="*",
+                    default=["503.bwaves", "505.mcf", "548.exchange2"])
+    ap.add_argument("--interval-size", type=int, default=20_000)
+    ap.add_argument("--max-checkpoints", type=int, default=4)
+    args = ap.parse_args()
+
+    vocab = build_vocab()
+    cfg = get_config("capsim").replace(dtype="float32")
+    params = predictor.init_params(cfg, jax.random.PRNGKey(0))
+    if args.ckpt:
+        mgr = CheckpointManager(args.ckpt)
+        from repro.training.train_loop import TrainConfig, init_train_state
+        state_like = init_train_state(params, TrainConfig())
+        restored, step = mgr.restore_latest(state_like)
+        if restored is not None:
+            params = restored["params"]
+            print(f"restored predictor from step {step}")
+
+    print(f"{'benchmark':16s} {'insts':>8s} {'oracle_s':>9s} "
+          f"{'capsim_s':>9s} {'speedup':>8s} {'rel_err':>8s}")
+    for name in args.benchmarks:
+        bench = progen.build_benchmark(name)
+        r = capsim_simulate(bench, params, cfg, vocab,
+                            interval_size=args.interval_size,
+                            max_checkpoints=args.max_checkpoints)
+        print(f"{name:16s} {r.n_instructions:8d} "
+              f"{r.oracle_seconds:9.2f} {r.capsim_seconds:9.2f} "
+              f"{r.speedup:7.2f}x {100*r.rel_error:7.1f}%")
+
+
+if __name__ == "__main__":
+    main()

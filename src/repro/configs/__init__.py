@@ -1,0 +1,196 @@
+"""Architecture / shape config system.
+
+Every runnable model in the framework — the 10 assigned LM-family architectures
+plus the paper's own CAPSim predictor — is described by an ``ArchConfig``.
+Configs are plain frozen dataclasses so they hash, compare, and print cleanly;
+the registry maps the public ``--arch <id>`` names to builder functions.
+
+Shapes follow the assignment:
+    train_4k      seq_len=4096,   global_batch=256   (training)
+    prefill_32k   seq_len=32768,  global_batch=32    (inference prefill)
+    decode_32k    seq_len=32768,  global_batch=128   (one-token decode w/ KV cache)
+    long_500k     seq_len=524288, global_batch=1     (long-context decode)
+
+``long_500k`` is only runnable for sub-quadratic archs (ssm / hybrid); pure
+full-attention archs mark it skipped (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# --------------------------------------------------------------------------- #
+# Shape configs
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+LM_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+# CAPSim predictor shapes: "seq_len" is the clip length (instructions per clip),
+# batch is clips per step.  Kinds map onto the same train/serve entry points.
+CAPSIM_SHAPES = {
+    "train_clips": ShapeConfig("train_clips", 128, 4_096, "train"),
+    "serve_clips": ShapeConfig("serve_clips", 128, 16_384, "prefill"),
+}
+
+
+# --------------------------------------------------------------------------- #
+# Architecture config
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio | predictor
+    num_layers: int
+    d_model: int
+    num_heads: int                   # query heads (0 for attention-free)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1               # MoE FFN on layers with (i % moe_every == moe_offset)
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+
+    # --- SSM / hybrid ---
+    ssm_state: int = 0               # Mamba2 d_state (0 -> no ssm layers)
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256             # SSD chunk size
+    attn_every: int = 0              # hybrid: attention on layers with (i % attn_every == attn_offset)
+    attn_offset: int = 0
+
+    # --- attention features ---
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    mrope_sections: Tuple[int, ...] = ()   # qwen2-vl M-RoPE (temporal, h, w) dims
+    attn_window: int = 0                   # >0: sliding-window attention
+    attn_logit_softcap: float = 0.0
+
+    # --- FFN / norm features ---
+    activation: str = "swiglu"       # swiglu | squared_relu | gelu
+    nonparametric_norm: bool = False # olmo: LN without learnable params
+    tie_embeddings: bool = False
+
+    # --- modality frontend stubs ---
+    frontend: str = "none"           # none | vision | audio
+    frontend_len: int = 0            # number of precomputed frontend embeddings
+    num_codebooks: int = 1           # musicgen: parallel EnCodec streams
+
+    # --- CAPSim predictor extras (family == "predictor") ---
+    clip_tokens: int = 32            # L_token: padded tokens per instruction
+    context_tokens: int = 360        # M: context-matrix rows (register state)
+
+    # --- numerics / execution ---
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    remat: bool = True
+    attn_impl: str = "chunked"       # chunked (XLA) | pallas (TPU flash kernel)
+    ssm_impl: str = "chunked"        # chunked (XLA) | pallas (TPU SSD kernel)
+    attn_chunk: int = 1024           # q-chunk for memory-bounded XLA attention
+    scan_layers: bool = True
+    pattern_len: int = 1             # layers per scanned super-block (jamba: 8)
+
+    # --- which assigned shape names apply ---
+    shape_names: Tuple[str, ...] = ("train_4k", "prefill_32k", "decode_32k")
+    skipped_shapes: Tuple[str, ...] = ("long_500k",)
+    skip_reason: str = "pure full-attention arch: 500k decode needs sub-quadratic mixer"
+
+    # ------------------------------------------------------------------ #
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_layers % self.pattern_len != 0:
+            raise ValueError(
+                f"{self.name}: num_layers={self.num_layers} not divisible by "
+                f"pattern_len={self.pattern_len}")
+
+    # --- layer-schedule helpers (which mixer / ffn at layer i) --------- #
+    def mixer_at(self, i: int) -> str:
+        """'attn' | 'ssm' for layer i."""
+        if self.ssm_state == 0:
+            return "attn"
+        if self.attn_every == 0:
+            return "ssm"
+        return "attn" if (i % self.attn_every) == self.attn_offset else "ssm"
+
+    def ffn_at(self, i: int) -> str:
+        """'dense' | 'moe' | 'none' for layer i."""
+        if self.d_ff == 0 and self.num_experts == 0:
+            return "none"
+        if self.num_experts and (i % self.moe_every) == self.moe_offset:
+            return "moe"
+        return "dense" if self.d_ff else "none"
+
+    def pattern(self) -> Tuple[Tuple[str, str], ...]:
+        """The (mixer, ffn) schedule of one scanned super-block."""
+        return tuple((self.mixer_at(i), self.ffn_at(i))
+                     for i in range(self.pattern_len))
+
+    @property
+    def num_repeats(self) -> int:
+        return self.num_layers // self.pattern_len
+
+    def shapes(self):
+        table = CAPSIM_SHAPES if self.family == "predictor" else LM_SHAPES
+        return {n: table[n] for n in self.shape_names}
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# Registry
+# --------------------------------------------------------------------------- #
+
+_ARCH_MODULES = {
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "mamba2-780m": "mamba2_780m",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "qwen3-4b": "qwen3_4b",
+    "internlm2-20b": "internlm2_20b",
+    "olmo-1b": "olmo_1b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "musicgen-large": "musicgen_large",
+    "capsim": "capsim",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+ASSIGNED_ARCH_NAMES = tuple(n for n in ARCH_NAMES if n != "capsim")
+
+
+def get_config(name: str) -> ArchConfig:
+    """Load the full (paper-exact) config for ``--arch <name>``."""
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {list(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.config()
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.smoke_config()

@@ -1,0 +1,38 @@
+"""CAPSim attention performance predictor — the paper's own model (§V, Fig 4).
+
+E=128 embeddings, 4-head MHA, 4 instruction-encoder layers + 4 block-encoder
+layers, MLP head with arithmetic mean (paper §VI-B).  "seq_len" in its shapes
+is the clip length L_clip; batch is clips per step.  Context matrix: Table I
+register file -> (name token + byte-pair value tokens) rows.
+"""
+from repro.configs import ArchConfig, CAPSIM_SHAPES
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="capsim",
+        family="predictor",
+        num_layers=8,                 # 4 instruction-encoder + 4 block-encoder
+        d_model=128,                  # E
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=32,
+        d_ff=512,
+        vocab_size=512,               # standardized-token vocab is 382; padded
+                                      # to 512 for clean TPU lane tiling
+        clip_tokens=16,               # L_token: max standardized length is 14
+        context_tokens=360,           # M = 40 registers x (1 name + 8 value tokens)
+        shape_names=tuple(CAPSIM_SHAPES),
+        skipped_shapes=(),
+        skip_reason="",
+        dtype="bfloat16",
+        param_dtype="float32",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return config().replace(
+        d_model=32, num_heads=2, head_dim=16, d_ff=64, vocab_size=256,
+        clip_tokens=16, context_tokens=36,
+        dtype="float32", param_dtype="float32", remat=False,
+    )

@@ -1,0 +1,11 @@
+"""CAPSim core — the paper's contribution.
+
+    standardize   instruction -> structured token sequence (Fig 5)
+    context       architectural register state -> context matrix (Fig 6)
+    slicer        Algorithm 1: timed trace -> code trace clips
+    sampler       occurrence-threshold clip sampler (Fig 3/8)
+    intervals     SimPoint-style BBV/k-means interval picking
+    predictor     the attention performance predictor (Fig 4, Eq 3-9)
+    lstm_baseline Ithemal-style hierarchical LSTM (Fig 10 baseline)
+    simulate      end-to-end CAPSim vs O3-oracle runs (Fig 1/7)
+"""

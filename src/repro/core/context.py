@@ -1,0 +1,46 @@
+"""Context matrix construction (paper §V-B, Fig 6, Table I).
+
+The context is the architectural register state *before* a trace clip
+executes.  Each of the 40 context registers (32 GPRs + 8 specials; VSRs are
+folded per the paper's FPR note) contributes 9 rows to the context matrix:
+
+    [ <reg-name token> , <byte 7> , <byte 6> , ... , <byte 0> ]
+
+where each byte of the 64-bit value maps to one of the 256 ``<Bxx>`` tokens
+(Fig 6a: "the register's value is segmented into 16 groups based on each two
+of hexadecimal numbers" — two hex digits = one byte).  Stacking all registers
+yields the (M, E)-shaped context matrix after embedding, M = 40 * 9 = 360
+(Fig 6b, Eq 10).
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import numpy as np
+
+from repro.core.standardize import BYTE_TOKENS, Vocab
+from repro.isa.isa import CONTEXT_REGS
+
+TOKENS_PER_REG = 9          # 1 name + 8 value bytes
+CONTEXT_LEN = len(CONTEXT_REGS) * TOKENS_PER_REG
+assert CONTEXT_LEN == 360
+
+
+def context_token_ids(snapshot: Dict[str, int], vocab: Vocab) -> np.ndarray:
+    """snapshot: {reg_name: 64-bit value} -> (360,) int32 token ids."""
+    out = np.empty(CONTEXT_LEN, np.int32)
+    byte0 = vocab[BYTE_TOKENS[0]]
+    i = 0
+    for reg in CONTEXT_REGS:
+        out[i] = vocab[reg]
+        v = snapshot.get(reg, 0) & ((1 << 64) - 1)
+        for shift in range(56, -8, -8):                  # big-endian bytes
+            out[i + 1 + (56 - shift) // 8] = byte0 + ((v >> shift) & 0xFF)
+        i += TOKENS_PER_REG
+    return out
+
+
+def batch_context_tokens(snapshots: Sequence[Dict[str, int]],
+                         vocab: Vocab) -> np.ndarray:
+    """(B, 360) int32."""
+    return np.stack([context_token_ids(s, vocab) for s in snapshots])

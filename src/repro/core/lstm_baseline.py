@@ -1,0 +1,100 @@
+"""Ithemal-style LSTM baseline (paper Fig 10 comparison).
+
+Hierarchical LSTM exactly per Ithemal [16]: a token-level LSTM summarizes
+each instruction's standardized tokens into an instruction embedding, an
+instruction-level LSTM runs over the clip's instruction embeddings, and a
+linear head maps the final hidden state to the clip runtime.  Same
+softplus(CPI) * length output parameterization as the attention predictor so
+the Fig-10 comparison isolates the *architecture*, not the output scaling.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    ParamSpec, abstract_from_specs, dense_spec, init_from_specs)
+
+
+def _lstm_specs(d_in: int, d_h: int) -> dict:
+    return {"wx": dense_spec(d_in, 4 * d_h, ("embed", "mlp")),
+            "wh": dense_spec(d_h, 4 * d_h, ("embed", "mlp")),
+            "b": ParamSpec((4 * d_h,), ("mlp",), std=0.0)}
+
+
+def model_specs(cfg) -> dict:
+    E = cfg.d_model
+    return {
+        "embed": ParamSpec((cfg.vocab_size, E), ("vocab_in", "embed"),
+                           std=1.0 / math.sqrt(E)),
+        "tok_lstm": _lstm_specs(E, E),
+        "inst_lstm": _lstm_specs(E, E),
+        "head": {"w": dense_spec(E, 1, ("embed", None)),
+                 "b": ParamSpec((1,), (None,), std=0.0)},
+    }
+
+
+def init_params(cfg, key):
+    return init_from_specs(model_specs(cfg), key, cfg.param_dtype)
+
+
+def abstract_params(cfg):
+    return abstract_from_specs(model_specs(cfg), cfg.param_dtype)
+
+
+def _lstm(p, xs, mask):
+    """xs: (B, S, D); mask: (B, S) 1=valid.  Returns last valid hidden (B, H).
+
+    Masked positions carry state through unchanged, so the 'final' hidden is
+    the one at each sequence's true end.
+    """
+    B, S, D = xs.shape
+    H = p["wh"].shape[0]
+    h0 = jnp.zeros((B, H), xs.dtype)
+    c0 = jnp.zeros((B, H), jnp.float32)
+
+    def step(carry, inp):
+        h, c = carry
+        x, m = inp
+        gates = (jnp.einsum("bd,dh->bh", x, p["wx"]) +
+                 jnp.einsum("bd,dh->bh", h, p["wh"]) + p["b"])
+        i, f, g, o = jnp.split(gates.astype(jnp.float32), 4, axis=-1)
+        c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h_new = (jax.nn.sigmoid(o) * jnp.tanh(c_new)).astype(h.dtype)
+        m = m[:, None]
+        return (jnp.where(m > 0, h_new, h),
+                jnp.where(m > 0, c_new, c)), None
+
+    (h, _), _ = jax.lax.scan(step, (h0, c0),
+                             (jnp.moveaxis(xs, 1, 0),
+                              jnp.moveaxis(mask, 1, 0)))
+    return h
+
+
+def forward(params, batch, cfg):
+    """Same batch layout as the attention predictor; context unused
+    (Ithemal has no context stream)."""
+    clip_tokens = batch["clip_tokens"]                   # (B, L, T)
+    clip_mask = batch["clip_mask"].astype(jnp.float32)   # (B, L)
+    B, L, T = clip_tokens.shape
+    tok_mask = (clip_tokens != 0).astype(jnp.float32)
+
+    x = params["embed"][clip_tokens.reshape(B * L, T)].astype(cfg.dtype)
+    inst_emb = _lstm(params["tok_lstm"], x, tok_mask.reshape(B * L, T))
+    inst_emb = inst_emb.reshape(B, L, -1)
+
+    h = _lstm(params["inst_lstm"], inst_emb, clip_mask)  # (B, E)
+    y = (jnp.einsum("bd,do->bo", h, params["head"]["w"])
+         + params["head"]["b"])[:, 0].astype(jnp.float32)
+    n_inst = jnp.maximum(clip_mask.sum(-1), 1.0)
+    return jax.nn.softplus(y) * n_inst
+
+
+def mape_loss(params, batch, cfg):
+    pred = forward(params, batch, cfg)
+    fact = jnp.maximum(batch["time"].astype(jnp.float32), 1.0)
+    mape = jnp.mean(jnp.abs(pred - fact) / fact)
+    return mape, {"mape": mape}

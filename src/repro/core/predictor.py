@@ -1,0 +1,344 @@
+"""CAPSim attention-based performance predictor (paper §III/§V, Fig 4).
+
+Two-level architecture, exactly Eq 5-9:
+
+  instruction encoder   4 pre-LN transformer layers of self-attention over
+                        each instruction's standardized tokens (L_token, E);
+                        the <REP> position's output is the instruction's
+                        ideal-execution-time vector RT_i (Eq 5-8).  All
+                        (B, L_clip) instructions run as one folded batch —
+                        the clip-level parallelism that is the paper's speed
+                        story, and on TPU one Pallas flash-attention grid.
+  block encoder         sinusoidal positional encoding over the clip
+                        sequence, then 4 layers in which the *context matrix*
+                        (register-state rows, §V-B) self-attends and
+                        cross-attends into the stacked instruction vectors
+                        (Eq 9) — the learnable T_total = Σ t_i·α_i
+                        factorization of Eq 3-4.
+  head                  MLP -> per-row scalar -> arithmetic mean.  The mean
+                        is passed through softplus and scaled by the clip's
+                        instruction count, i.e. the head predicts
+                        cycles-per-instruction; positivity + the length prior
+                        stabilize MAPE training without changing the
+                        architecture.
+
+Loss = MAPE (Eq 11).  The no-context ablation (Fig 10) drops the context
+stream: the block encoder then self-attends over the instruction vectors and
+the head averages over instruction positions instead.
+
+Sharding: the model is ~2M params — weights replicate; the batch axis shards
+over EVERY mesh axis (pod, data, model): clips are i.i.d. so a 512-chip pod
+group is pure clip-parallelism.  See LOGICAL_RULES_PREDICTOR.
+"""
+from __future__ import annotations
+
+import math
+import time
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_logical
+from repro.models.layers import (
+    ParamSpec, abstract_from_specs, dense_spec, init_from_specs, rms_norm,
+    shardings_from_specs, specs_with_leading_stack)
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# Param specs
+# --------------------------------------------------------------------------- #
+
+def _mha_specs(cfg, prefix: str = "") -> dict:
+    E = cfg.d_model
+    H, Dh = cfg.num_heads, cfg.head_dim
+    return {
+        f"{prefix}wq": dense_spec(E, H * Dh, ("embed", "qkv")),
+        f"{prefix}wk": dense_spec(E, H * Dh, ("embed", "qkv")),
+        f"{prefix}wv": dense_spec(E, H * Dh, ("embed", "qkv")),
+        f"{prefix}wo": dense_spec(H * Dh, E, ("qkv", "embed")),
+    }
+
+
+def _ffn_specs(cfg) -> dict:
+    E, F = cfg.d_model, cfg.d_ff
+    return {"w1": dense_spec(E, F, ("embed", "mlp")),
+            "w2": dense_spec(F, E, ("mlp", "embed"))}
+
+
+def _norm_spec(cfg) -> ParamSpec:
+    return ParamSpec((cfg.d_model,), ("embed",), std=0.0, dtype="float32")
+
+
+def _encoder_layer_specs(cfg) -> dict:
+    return {**_mha_specs(cfg), **_ffn_specs(cfg),
+            "norm1": _norm_spec(cfg), "norm2": _norm_spec(cfg)}
+
+
+def _block_layer_specs(cfg) -> dict:
+    return {**_mha_specs(cfg, "self_"), **_mha_specs(cfg, "cross_"),
+            **_ffn_specs(cfg),
+            "norm1": _norm_spec(cfg), "norm2": _norm_spec(cfg),
+            "norm3": _norm_spec(cfg)}
+
+
+N_INST_LAYERS = 4
+N_BLOCK_LAYERS = 4
+
+
+def model_specs(cfg) -> dict:
+    E, V = cfg.d_model, cfg.vocab_size
+    return {
+        "embed": ParamSpec((V, E), ("vocab_in", "embed"),
+                           std=1.0 / math.sqrt(E)),
+        "inst": specs_with_leading_stack(_encoder_layer_specs(cfg),
+                                         N_INST_LAYERS),
+        "block": specs_with_leading_stack(_block_layer_specs(cfg),
+                                          N_BLOCK_LAYERS),
+        "final_norm": _norm_spec(cfg),
+        "head": {"w1": dense_spec(E, E, ("embed", "mlp")),
+                 "b1": ParamSpec((E,), ("mlp",), std=0.0),
+                 "w2": dense_spec(E, 1, ("mlp", None)),
+                 "b2": ParamSpec((1,), (None,), std=0.0)},
+    }
+
+
+def init_params(cfg, key):
+    return init_from_specs(model_specs(cfg), key, cfg.param_dtype)
+
+
+def abstract_params(cfg):
+    return abstract_from_specs(model_specs(cfg), cfg.param_dtype)
+
+
+def param_shardings(cfg, mesh, rules):
+    return shardings_from_specs(model_specs(cfg), mesh, rules)
+
+
+# --------------------------------------------------------------------------- #
+# Attention primitives
+# --------------------------------------------------------------------------- #
+
+def _heads(x, cfg):
+    B, S, _ = x.shape
+    return x.reshape(B, S, cfg.num_heads, cfg.head_dim)
+
+
+def _w(p, name, cfg):
+    """fp32 master params compute in cfg.dtype (mixed precision): without
+    this cast every matmul output promotes to f32 and the backward saves
+    f32 activations — 2x the HBM traffic and scan-residual memory (§Perf
+    capsim iteration v2)."""
+    return p[name].astype(cfg.dtype)
+
+
+def _mha(p, q_in, kv_in, cfg, kv_mask=None, prefix: str = ""):
+    """q_in: (B, Sq, E); kv_in: (B, Sk, E); kv_mask: (B, Sk) 1=valid."""
+    q = _heads(jnp.einsum("bsd,dh->bsh", q_in, _w(p, f"{prefix}wq", cfg)),
+               cfg)
+    k = _heads(jnp.einsum("bsd,dh->bsh", kv_in, _w(p, f"{prefix}wk", cfg)),
+               cfg)
+    v = _heads(jnp.einsum("bsd,dh->bsh", kv_in, _w(p, f"{prefix}wv", cfg)),
+               cfg)
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        o = fa_ops.flash_attention(q, k, v, causal=False, kv_mask=kv_mask)
+    else:
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                       preferred_element_type=jnp.float32)
+        s = s / math.sqrt(cfg.head_dim)
+        if kv_mask is not None:
+            s = jnp.where(kv_mask[:, None, None, :] > 0, s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", a, v)
+    o = o.reshape(q_in.shape[0], q_in.shape[1], -1)
+    out = jnp.einsum("bsh,hd->bsd", o, _w(p, f"{prefix}wo", cfg))
+    return out.astype(q_in.dtype)
+
+
+def _ffn(p, x, cfg):
+    h = jnp.einsum("bsd,df->bsf", x, _w(p, "w1", cfg))
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(h), _w(p, "w2", cfg))
+    return out.astype(x.dtype)
+
+
+def _scan_layers(layer_fn, stacked_params, x, *extra, remat: bool = False):
+    def body(carry, lp):
+        return layer_fn(lp, carry, *extra), None
+    if remat:
+        # recompute encoder layers in the backward: the scan then saves
+        # only the layer carries instead of ~10 intermediates per layer
+        # (§Perf capsim iteration v3); the predictor is memory-bound with
+        # compute 30x below the HBM roof, so recompute is nearly free.
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    y, _ = jax.lax.scan(body, x, stacked_params)
+    return y
+
+
+# --------------------------------------------------------------------------- #
+# Forward
+# --------------------------------------------------------------------------- #
+
+def _sinusoidal(n: int, e: int, dtype) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(e // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2.0 * dim / e)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def instruction_encoder(params, clip_tokens, cfg):
+    """clip_tokens: (B, L_clip, L_token) int32 -> RT vectors (B, L_clip, E).
+
+    The (B, L_clip) axes fold into one batch: every instruction encodes
+    independently (Eq 7), which is what the TPU grid parallelizes.
+    """
+    B, L, T = clip_tokens.shape
+    tok_mask = (clip_tokens != 0).astype(jnp.float32)   # <PAD> == 0
+    flat = clip_tokens.reshape(B * L, T)
+    x = params["embed"][flat].astype(cfg.dtype)          # (B*L, T, E)
+    x = shard_logical(x, "batch", None, None)
+    mask = tok_mask.reshape(B * L, T)
+
+    def layer(p, h, m):
+        h = h + _mha(p, rms_norm(h, p["norm1"]), rms_norm(h, p["norm1"]),
+                     cfg, kv_mask=m)
+        h = h + _ffn(p, rms_norm(h, p["norm2"]), cfg)
+        return h
+
+    x = _scan_layers(layer, params["inst"], x, mask,
+                     remat=cfg.remat)
+    rt = x[:, 0, :]                                      # <REP> slot (Eq 8)
+    return rt.reshape(B, L, cfg.d_model)
+
+
+def block_encoder(params, rt, ctx, clip_mask, cfg):
+    """rt: (B, L_clip, E) instruction vectors; ctx: (B, M, E) context rows.
+
+    Context stream queries the instruction stream (Eq 9).  Without context
+    (ablation) the instruction stream self-attends instead.
+    """
+    B, L, E = rt.shape
+    rt = rt + _sinusoidal(L, E, rt.dtype)[None]
+
+    if ctx is None:                                      # no-context ablation
+        def layer(p, h, m):
+            h = h + _mha(p, rms_norm(h, p["norm1"]), rms_norm(h, p["norm1"]),
+                         cfg, kv_mask=m, prefix="self_")
+            h = h + _mha(p, rms_norm(h, p["norm2"]), rt, cfg, kv_mask=m,
+                         prefix="cross_")
+            h = h + _ffn(p, rms_norm(h, p["norm3"]), cfg)
+            return h
+        out = _scan_layers(layer, params["block"], rt, clip_mask,
+                           remat=cfg.remat)
+        return out, clip_mask
+
+    def layer(p, h, m):
+        h = h + _mha(p, rms_norm(h, p["norm1"]), rms_norm(h, p["norm1"]),
+                     cfg, prefix="self_")
+        h = h + _mha(p, rms_norm(h, p["norm2"]), rt, cfg, kv_mask=m,
+                     prefix="cross_")
+        h = h + _ffn(p, rms_norm(h, p["norm3"]), cfg)
+        return shard_logical(h, "batch", None, None)
+
+    out = _scan_layers(layer, params["block"], ctx, clip_mask,
+                       remat=cfg.remat)
+    return out, None                                     # all M rows valid
+
+
+def forward(params, batch, cfg, use_context: bool = True):
+    """batch: clip_tokens (B,L,T), context_tokens (B,M), clip_mask (B,L).
+
+    Returns predicted clip times (B,) in cycles.
+    """
+    clip_tokens = batch["clip_tokens"]
+    clip_mask = batch["clip_mask"].astype(jnp.float32)
+    B = clip_tokens.shape[0]
+
+    rt = instruction_encoder(params, clip_tokens, cfg)
+    rt = shard_logical(rt, "batch", None, None)
+
+    ctx = None
+    if use_context:
+        ctx = params["embed"][batch["context_tokens"]].astype(cfg.dtype)
+        ctx = shard_logical(ctx, "batch", None, None)
+    out, out_mask = block_encoder(params, rt, ctx, clip_mask, cfg)
+    out = shard_logical(out, "batch", None, None)
+
+    h = rms_norm(out, params["final_norm"])
+    hw = params["head"]
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, hw["w1"].astype(cfg.dtype))
+                    + hw["b1"].astype(cfg.dtype))
+    y = (jnp.einsum("bsf,fo->bso", h, hw["w2"].astype(cfg.dtype))
+         + hw["b2"].astype(cfg.dtype))[..., 0]           # (B, rows)
+    y = y.astype(jnp.float32)
+    if out_mask is None:
+        cpi = jnp.mean(y, axis=-1)                       # arithmetic mean
+    else:
+        denom = jnp.maximum(out_mask.sum(-1), 1.0)
+        cpi = (y * out_mask).sum(-1) / denom
+    n_inst = jnp.maximum(clip_mask.sum(-1), 1.0)
+    return jax.nn.softplus(cpi) * n_inst                 # cycles
+
+
+def mape_loss(params, batch, cfg, use_context: bool = True):
+    """Eq 11: |prediction - fact| / fact, averaged over the batch."""
+    pred = forward(params, batch, cfg, use_context)
+    fact = jnp.maximum(batch["time"].astype(jnp.float32), 1.0)
+    mape = jnp.mean(jnp.abs(pred - fact) / fact)
+    return mape, {"mape": mape}
+
+
+def predict_step(params, batch, cfg, use_context: bool = True):
+    return forward(params, batch, cfg, use_context)
+
+
+# --------------------------------------------------------------------------- #
+# Dry-run lowering (called from launch/dryrun.py for --arch capsim)
+# --------------------------------------------------------------------------- #
+
+def lower_cell(cfg, shape, mesh, rules, tcfg):
+    """Lower the predictor's train / serve step on the production mesh."""
+    from repro.distributed.sharding import (
+        LOGICAL_RULES_PREDICTOR, use_mesh_and_rules)
+    from repro.launch.specs import batch_shardings, input_specs
+    from repro.training.train_loop import (
+        abstract_train_state, make_train_step)
+
+    rules = LOGICAL_RULES_PREDICTOR
+    with use_mesh_and_rules(mesh, rules):
+        batch_abs = input_specs(cfg, shape, shape.kind)
+        batch_sh = batch_shardings(batch_abs, mesh, rules)
+        param_abs = abstract_params(cfg)
+        param_sh = param_shardings(cfg, mesh, rules)
+        t0 = time.time()
+        if shape.kind == "train":
+            state_abs = abstract_train_state(param_abs, tcfg)
+            scalar = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            if tcfg.optimizer == "sgdm":
+                opt_sh = {"mu": param_sh}
+            else:
+                opt_sh = {"mu": param_sh, "nu": param_sh, "count": scalar}
+            state_sh = {"params": param_sh, "opt": opt_sh, "step": scalar}
+            if tcfg.compress_grads:
+                state_sh["err_fb"] = param_sh
+            step = make_train_step(
+                lambda p, b: mape_loss(p, b, cfg), tcfg)
+            metric_sh = {k: scalar for k in
+                         ("loss", "grad_norm", "lr", "mape")}
+            lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                              out_shardings=(state_sh, metric_sh)
+                              ).lower(state_abs, batch_abs)
+        else:
+            from repro.distributed.sharding import axis_rules
+            out_sh = jax.sharding.NamedSharding(
+                mesh, axis_rules(("batch",), rules=rules, mesh=mesh))
+            lowered = jax.jit(
+                lambda p, b: predict_step(p, b, cfg),
+                in_shardings=(param_sh, batch_sh),
+                out_shardings=out_sh).lower(param_abs, batch_abs)
+        return lowered, time.time() - t0

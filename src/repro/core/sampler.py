@@ -1,0 +1,85 @@
+"""Code trace clip sampler (paper §IV-B, Fig 3, Fig 8).
+
+Intervals are dominated by a few clip *contents* repeated thousands of times
+(loop bodies) plus a long tail of rare unique clips (Fig 8).  The sampler:
+
+  1. groups clips by content key and sorts groups by occurrence count,
+  2. splits at ``threshold`` (paper: 200):
+       frequent groups  -> sample *within* each group: keep
+                           ``max(1, round(count * coef))`` occurrences so the
+                           category distribution is preserved while the
+                           occurrence numbers drop (paper's "lowering the
+                           occurrence number ... preserving category
+                           distribution"),
+       rare groups      -> sample *across* groups: keep every occurrence of a
+                           periodic ``coef`` fraction of the groups (paper's
+                           "reduction of categories represented ... instead
+                           of adjusting their occurrence number"),
+  3. coefficient 0.02 turns the paper's 300 h training corpus into ~10 h.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.slicer import Clip
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleStats:
+    n_in: int
+    n_out: int
+    n_groups: int
+    n_frequent_groups: int
+    n_rare_groups: int
+    n_rare_groups_kept: int
+
+    @property
+    def reduction(self) -> float:
+        return self.n_out / max(self.n_in, 1)
+
+
+def group_by_content(clips: Sequence[Clip]) -> Dict[int, List[int]]:
+    """content key -> indices into ``clips`` (order of appearance)."""
+    groups: Dict[int, List[int]] = defaultdict(list)
+    for i, c in enumerate(clips):
+        groups[c.key].append(i)
+    return groups
+
+
+def occurrence_histogram(clips: Sequence[Clip]) -> List[int]:
+    """Occurrence count per unique content, descending (Fig 8b)."""
+    return sorted((len(v) for v in group_by_content(clips).values()),
+                  reverse=True)
+
+
+def sample_clips(clips: Sequence[Clip], threshold: int = 200,
+                 coef: float = 0.02) -> Tuple[List[Clip], SampleStats]:
+    groups = group_by_content(clips)
+    # deterministic order: by count desc, then first appearance
+    ordered = sorted(groups.items(), key=lambda kv: (-len(kv[1]), kv[1][0]))
+
+    keep: List[int] = []
+    n_freq = n_rare = n_rare_kept = 0
+    rare_period = max(1, round(1.0 / coef))
+    rare_rank = 0
+    for key, idxs in ordered:
+        count = len(idxs)
+        if count > threshold:
+            n_freq += 1
+            n_keep = max(1, round(count * coef))
+            stride = count / n_keep
+            keep.extend(idxs[int(j * stride)] for j in range(n_keep))
+        else:
+            n_rare += 1
+            if rare_rank % rare_period == 0:       # periodic across groups
+                n_rare_kept += 1
+                keep.extend(idxs)
+            rare_rank += 1
+
+    keep.sort()
+    stats = SampleStats(n_in=len(clips), n_out=len(keep),
+                        n_groups=len(ordered), n_frequent_groups=n_freq,
+                        n_rare_groups=n_rare, n_rare_groups_kept=n_rare_kept)
+    return [clips[i] for i in keep], stats

@@ -1,0 +1,92 @@
+"""Instruction sequence slicer (paper §IV-A, Algorithm 1).
+
+Cuts a committed instruction trace into *code trace clips*.  A clip closes
+once (a) it holds at least ``l_min`` instructions AND (b) the current
+commit time differs from the previous instruction's commit time — so a
+clip boundary never splits a group of instructions that committed in the
+same cycle, which keeps the clip runtime well defined (the paper's two
+principles).  The clip's ground-truth runtime is the difference between
+the previous commit time and the clip's begin time.
+
+At inference CAPSim has no commit times (the functional simulator is
+atomic), so ``slice_fixed`` cuts every ``l_min`` instructions; the
+commit-boundary rule exists to make *training* targets exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+from repro.isa.isa import Instruction
+
+
+@dataclasses.dataclass
+class Clip:
+    insts: List[Instruction]
+    time: float                 # runtime in cycles (0.0 when unknown)
+    start: int                  # trace position of first instruction
+    # content key for the sampler (filled lazily)
+    _key: int = 0
+
+    def __len__(self) -> int:
+        return len(self.insts)
+
+    @property
+    def key(self) -> int:
+        if self._key == 0:
+            self._key = hash(tuple(
+                (i.op, i.dsts, i.srcs, i.imm is not None,
+                 i.mem_base) for i in self.insts))
+        return self._key
+
+
+def slice_trace(insts: Sequence[Instruction],
+                commit_times: Sequence[float],
+                l_min: int) -> List[Clip]:
+    """Algorithm 1.  ``commit_times[i]`` is instruction i's commit cycle."""
+    assert len(insts) == len(commit_times)
+    clips: List[Clip] = []
+    if not insts:
+        return clips
+    b: List[Instruction] = []
+    b_start = 0
+    inst_prev = insts[0]
+    block_length = 0
+    time_prev = 0.0
+    time_begin = 0.0
+    for idx in range(len(insts)):
+        inst_now = insts[idx]
+        time_now = float(commit_times[idx])
+        b.append(inst_prev)
+        block_length += 1
+        if block_length >= l_min and time_now != time_prev:
+            clips.append(Clip(insts=b, time=time_prev - time_begin,
+                              start=b_start))
+            time_begin = time_prev
+            b = []
+            b_start = idx
+            block_length = 0
+        inst_prev = inst_now
+        time_prev = time_now
+    return clips
+
+
+def slice_fixed(insts: Sequence[Instruction], l_min: int) -> List[Clip]:
+    """Fixed-length slicing for inference (no commit times available)."""
+    clips = []
+    for off in range(0, len(insts) - l_min + 1, l_min):
+        clips.append(Clip(insts=list(insts[off: off + l_min]), time=0.0,
+                          start=off))
+    rem = len(insts) % l_min
+    if rem:
+        off = len(insts) - rem
+        clips.append(Clip(insts=list(insts[off:]), time=0.0, start=off))
+    return clips
+
+
+def clip_boundaries(clips: Sequence[Clip]) -> List[int]:
+    return [c.start for c in clips]
+
+
+def total_time(clips: Sequence[Clip]) -> float:
+    return sum(c.time for c in clips)

@@ -1,0 +1,161 @@
+"""Standardization transformation (paper §V-A, Fig 5).
+
+Raw assembly instructions become a structured token sequence:
+
+    <REP> <OPCODE> op <DSTS> d... </DSTS> <SRCS> s... </SRCS>
+          [<MEM> base <CONST> </MEM>] <END>
+
+- constants are replaced by the token ``<CONST>`` (Fig 5a)
+- memory operands get their own segment (Fig 5b)
+- implicit control registers (CR written by compares, LR by calls, CTR by
+  bdnz, NIA by every branch, CIA read by every branch) are inserted
+  manually (Fig 5c) — they are not spelled in the assembly but matter to
+  the execution flow
+- all four segments are optional; <REP> is the learnable representation
+  slot whose encoder output becomes the instruction's ideal-execution-time
+  vector (Eq 5-8)
+
+The same vocabulary also covers the context matrix's value tokens
+(``<B00>``..``<BFF>``, one per byte; context.py) so one embedding table
+serves both streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.isa.isa import OPCODES, REGS, Instruction
+
+# --------------------------------------------------------------------------- #
+# Vocabulary
+# --------------------------------------------------------------------------- #
+
+PAD = "<PAD>"
+REP = "<REP>"
+END = "<END>"
+OPCODE = "<OPCODE>"
+DSTS, DSTS_E = "<DSTS>", "</DSTS>"
+SRCS, SRCS_E = "<SRCS>", "</SRCS>"
+MEM, MEM_E = "<MEM>", "</MEM>"
+CONST = "<CONST>"
+
+SPECIAL_TOKENS = (PAD, REP, END, OPCODE, DSTS, DSTS_E, SRCS, SRCS_E,
+                  MEM, MEM_E, CONST)
+
+BYTE_TOKENS = tuple(f"<B{b:02X}>" for b in range(256))
+
+
+@dataclasses.dataclass(frozen=True)
+class Vocab:
+    token_to_id: Dict[str, int]
+    id_to_token: Tuple[str, ...]
+
+    @property
+    def size(self) -> int:
+        return len(self.id_to_token)
+
+    def __getitem__(self, tok: str) -> int:
+        return self.token_to_id[tok]
+
+    def encode(self, tokens: Sequence[str]) -> List[int]:
+        t2i = self.token_to_id
+        return [t2i[t] for t in tokens]
+
+
+def build_vocab() -> Vocab:
+    toks: List[str] = list(SPECIAL_TOKENS)
+    toks.extend(sorted(OPCODES))
+    toks.extend(REGS)
+    toks.extend(BYTE_TOKENS)
+    assert len(set(toks)) == len(toks), "duplicate vocabulary tokens"
+    return Vocab(token_to_id={t: i for i, t in enumerate(toks)},
+                 id_to_token=tuple(toks))
+
+
+# The PAD token must be id 0 so zero-padded arrays are valid token ids.
+assert SPECIAL_TOKENS[0] == PAD
+
+
+# --------------------------------------------------------------------------- #
+# Instruction -> standardized tokens
+# --------------------------------------------------------------------------- #
+
+def standardize(inst: Instruction) -> List[str]:
+    """Fig 5 transformation with implicit-register insertion (Fig 5c)."""
+    info = inst.info
+    toks = [REP, OPCODE, inst.op]
+
+    dsts = list(inst.dsts)
+    if info.writes_cr and "CR" not in dsts:
+        dsts.append("CR")
+    if info.writes_lr and "LR" not in dsts:
+        dsts.append("LR")
+    if info.uses_ctr and "CTR" not in dsts:
+        dsts.append("CTR")
+    if info.is_branch and "NIA" not in dsts:
+        dsts.append("NIA")
+    if dsts:
+        toks.append(DSTS)
+        toks.extend(dsts)
+        toks.append(DSTS_E)
+
+    srcs = list(inst.srcs)
+    if inst.op == "bc" and "CR" not in srcs:
+        srcs.append("CR")
+    if info.uses_ctr and "CTR" not in srcs:
+        srcs.append("CTR")
+    if inst.op == "blr" and "LR" not in srcs:
+        srcs.append("LR")
+    if info.is_branch and "CIA" not in srcs:
+        srcs.append("CIA")
+    has_const = inst.imm is not None or (info.is_branch and
+                                         inst.target is not None)
+    if srcs or has_const:
+        toks.append(SRCS)
+        toks.extend(srcs)
+        if has_const:
+            toks.append(CONST)
+        toks.append(SRCS_E)
+
+    if inst.mem_base is not None:
+        toks.append(MEM)
+        toks.append(inst.mem_base)
+        toks.append(CONST)
+        toks.append(MEM_E)
+
+    toks.append(END)
+    return toks
+
+
+def max_token_len() -> int:
+    """Upper bound on standardized length across the ISA (for L_token)."""
+    # <REP> <OPCODE> op + <DSTS> d CR LR CTR NIA </DSTS>
+    # + <SRCS> s s s CR CTR LR CIA <CONST> </SRCS> + <MEM> b <CONST> </MEM>
+    # + <END>; the practical max over OPCODES is much smaller.
+    return 16
+
+
+def encode_instruction(inst: Instruction, vocab: Vocab,
+                       l_token: int) -> np.ndarray:
+    """(l_token,) int32, zero (=<PAD>) padded."""
+    ids = vocab.encode(standardize(inst))
+    assert len(ids) <= l_token, (
+        f"standardized length {len(ids)} > L_token={l_token}: "
+        f"{standardize(inst)}")
+    out = np.zeros(l_token, np.int32)
+    out[: len(ids)] = ids
+    return out
+
+
+def encode_clip(insts: Sequence[Instruction], vocab: Vocab, l_clip: int,
+                l_token: int) -> Tuple[np.ndarray, np.ndarray]:
+    """((l_clip, l_token) int32 tokens, (l_clip,) float32 mask)."""
+    toks = np.zeros((l_clip, l_token), np.int32)
+    mask = np.zeros(l_clip, np.float32)
+    n = min(len(insts), l_clip)
+    for i in range(n):
+        toks[i] = encode_instruction(insts[i], vocab, l_token)
+        mask[i] = 1.0
+    return toks, mask

@@ -1,0 +1,3 @@
+from repro.data.dataset import (  # noqa: F401
+    ClipDataset, BuildConfig, build_dataset, build_set_datasets, batches,
+    split_dataset)

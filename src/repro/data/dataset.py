@@ -1,0 +1,198 @@
+"""Clip dataset pipeline (paper Fig 2): benchmarks -> intervals -> timed
+traces -> sliced clips -> sampled + tokenized tensors.
+
+Per benchmark checkpoint (interval):
+  1. functional warm-up, then trace the interval (isa/funcsim),
+  2. O3 oracle assigns commit cycles (isa/timing) — the golden runtimes,
+  3. Algorithm 1 slices the trace into clips (core/slicer),
+  4. the occurrence sampler thins the clip set (core/sampler),
+  5. a replay pass snapshots the architectural context at each surviving
+     clip's start (the CPU state *before* the clip, §V-B),
+  6. standardization + context tokenization produce fixed-shape int32
+     tensors ready for the predictor.
+
+The arrays are plain numpy: each data-parallel host builds/loads its own
+shard (clips are i.i.d., so sharding is a pure range split — see
+``shard_range``), and ``batches`` yields ready-to-jit dict batches.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import time
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import context as ctx_mod
+from repro.core import sampler as sampler_mod
+from repro.core import slicer as slicer_mod
+from repro.core import standardize as std_mod
+from repro.isa import funcsim, progen, timing
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildConfig:
+    interval_size: int = 20_000       # paper: 5M; scaled for offline CPU
+    warmup: int = 2_000               # paper: 1M
+    max_checkpoints: int = 4          # cap Table II counts for wall time
+    l_min: int = 100                  # paper §IV-B
+    l_clip: int = 128                 # pad target (l_min..~l_min+width)
+    l_token: int = 16
+    threshold: int = 200              # sampler occurrence threshold
+    coef: float = 0.02                # sampler coefficient
+    sample: bool = True
+    timing_params: timing.TimingParams = timing.TimingParams()
+
+
+@dataclasses.dataclass
+class ClipDataset:
+    clip_tokens: np.ndarray           # (N, l_clip, l_token) int32
+    context_tokens: np.ndarray        # (N, 360) int32
+    clip_mask: np.ndarray             # (N, l_clip) float32
+    time: np.ndarray                  # (N,) float32
+    bench_names: List[str]            # provenance per clip
+
+    def __len__(self) -> int:
+        return self.clip_tokens.shape[0]
+
+    def select(self, idx: np.ndarray) -> "ClipDataset":
+        return ClipDataset(self.clip_tokens[idx], self.context_tokens[idx],
+                           self.clip_mask[idx], self.time[idx],
+                           [self.bench_names[i] for i in idx])
+
+    @staticmethod
+    def concat(parts: Sequence["ClipDataset"]) -> "ClipDataset":
+        return ClipDataset(
+            np.concatenate([p.clip_tokens for p in parts]),
+            np.concatenate([p.context_tokens for p in parts]),
+            np.concatenate([p.clip_mask for p in parts]),
+            np.concatenate([p.time for p in parts]),
+            sum((p.bench_names for p in parts), []))
+
+    def save(self, path) -> None:
+        np.savez_compressed(
+            path, clip_tokens=self.clip_tokens,
+            context_tokens=self.context_tokens, clip_mask=self.clip_mask,
+            time=self.time, bench_names=np.array(self.bench_names))
+
+    @staticmethod
+    def load(path) -> "ClipDataset":
+        z = np.load(path, allow_pickle=False)
+        return ClipDataset(z["clip_tokens"], z["context_tokens"],
+                           z["clip_mask"], z["time"],
+                           [str(s) for s in z["bench_names"]])
+
+
+def build_bench_clips(bench: progen.Benchmark, bcfg: BuildConfig,
+                      vocab: std_mod.Vocab) -> ClipDataset:
+    """Steps 1-6 for one benchmark."""
+    st = progen.fresh_state(bench)
+    _, _, st = funcsim.run(bench.program, bcfg.warmup, state=st)
+
+    tok_list, ctx_list, mask_list, time_list = [], [], [], []
+    n_ckp = min(bench.ckp_num, bcfg.max_checkpoints)
+    for _ in range(n_ckp):
+        st_ckp = copy.deepcopy(st)                      # replay anchor
+        trace, _, st = funcsim.run(bench.program, bcfg.interval_size,
+                                   state=st)
+        if not trace:
+            break
+        commits = timing.simulate(trace, bcfg.timing_params)
+        clips = slicer_mod.slice_trace([e.inst for e in trace], commits,
+                                       bcfg.l_min)
+        if bcfg.sample and clips:
+            clips, _ = sampler_mod.sample_clips(clips, bcfg.threshold,
+                                                bcfg.coef)
+        if not clips:
+            continue
+        starts = [c.start for c in clips]
+        _, snaps, _ = funcsim.run(bench.program, bcfg.interval_size,
+                                  state=st_ckp, snapshot_at=starts)
+        assert len(snaps) == len(clips), (len(snaps), len(clips))
+        for clip, snap in zip(clips, snaps):
+            toks, mask = std_mod.encode_clip(clip.insts, vocab,
+                                             bcfg.l_clip, bcfg.l_token)
+            tok_list.append(toks)
+            ctx_list.append(ctx_mod.context_token_ids(snap, vocab))
+            mask_list.append(mask)
+            time_list.append(clip.time)
+
+    n = len(tok_list)
+    if n == 0:
+        return ClipDataset(
+            np.zeros((0, bcfg.l_clip, bcfg.l_token), np.int32),
+            np.zeros((0, ctx_mod.CONTEXT_LEN), np.int32),
+            np.zeros((0, bcfg.l_clip), np.float32),
+            np.zeros((0,), np.float32), [])
+    return ClipDataset(np.stack(tok_list), np.stack(ctx_list),
+                       np.stack(mask_list),
+                       np.asarray(time_list, np.float32),
+                       [bench.name] * n)
+
+
+def build_dataset(bench_names: Sequence[str], bcfg: BuildConfig,
+                  vocab: Optional[std_mod.Vocab] = None,
+                  verbose: bool = False) -> ClipDataset:
+    vocab = vocab or std_mod.build_vocab()
+    parts = []
+    for name in bench_names:
+        t0 = time.time()
+        part = build_bench_clips(progen.build_benchmark(name), bcfg, vocab)
+        parts.append(part)
+        if verbose:
+            print(f"  {name}: {len(part)} clips ({time.time()-t0:.1f}s)")
+    return ClipDataset.concat(parts)
+
+
+def build_set_datasets(bcfg: BuildConfig,
+                       vocab: Optional[std_mod.Vocab] = None,
+                       verbose: bool = False) -> Dict[int, ClipDataset]:
+    """The six Table-II benchmark sets (Fig 11 train/test protocol)."""
+    vocab = vocab or std_mod.build_vocab()
+    out = {}
+    for s in progen.SET_NUMBERS:
+        names = [b.name for b in progen.benchmarks_in_set(s)]
+        out[s] = build_dataset(names, bcfg, vocab, verbose=verbose)
+    return out
+
+
+def split_dataset(ds: ClipDataset, fractions=(0.8, 0.1, 0.1),
+                  seed: int = 0) -> Tuple[ClipDataset, ...]:
+    """Random 80/10/10 split (paper §VI-B method 1)."""
+    rng = np.random.RandomState(seed)
+    idx = rng.permutation(len(ds))
+    out = []
+    lo = 0
+    for i, f in enumerate(fractions):
+        hi = len(ds) if i == len(fractions) - 1 else lo + int(f * len(ds))
+        out.append(ds.select(idx[lo:hi]))
+        lo = hi
+    return tuple(out)
+
+
+def shard_range(n: int, host: int, n_hosts: int) -> Tuple[int, int]:
+    """Contiguous per-host shard bounds (clips are i.i.d.)."""
+    per = n // n_hosts
+    lo = host * per
+    hi = n if host == n_hosts - 1 else lo + per
+    return lo, hi
+
+
+def batches(ds: ClipDataset, batch_size: int, seed: int = 0,
+            shuffle: bool = True, epochs: int = 1,
+            include_time: bool = True) -> Iterator[Dict[str, np.ndarray]]:
+    """Yields dict batches; short final batches are dropped (fixed shapes
+    keep XLA from recompiling)."""
+    n = len(ds)
+    rng = np.random.RandomState(seed)
+    for _ in range(epochs):
+        order = rng.permutation(n) if shuffle else np.arange(n)
+        for lo in range(0, n - batch_size + 1, batch_size):
+            idx = order[lo: lo + batch_size]
+            b = {"clip_tokens": ds.clip_tokens[idx],
+                 "context_tokens": ds.context_tokens[idx],
+                 "clip_mask": ds.clip_mask[idx]}
+            if include_time:
+                b["time"] = ds.time[idx]
+            yield b

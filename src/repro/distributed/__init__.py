@@ -1,0 +1,11 @@
+from repro.distributed.sharding import (  # noqa: F401
+    LOGICAL_RULES_TRAIN,
+    LOGICAL_RULES_DECODE,
+    LOGICAL_RULES_DECODE_LONG,
+    axis_rules,
+    current_mesh,
+    current_rules,
+    logical_sharding,
+    shard_logical,
+    use_mesh_and_rules,
+)

@@ -1,0 +1,47 @@
+"""Gradient compression with error feedback.
+
+At 1000+ node scale the inter-pod (DCN) gradient all-reduce dominates step
+time for DP-heavy meshes.  The standard mitigation is lossy gradient
+compression with an error-feedback buffer (1-bit Adam / PowerSGD lineage).
+We implement int8 per-tensor-scaled quantization:
+
+    q = round(g / s),  s = max|g| / 127        (int8 wire format)
+    e' = g - s*q                               (residual fed back next step)
+
+On a real multi-pod deployment the int8 payload is what crosses the DCN
+boundary (the all-reduce runs on the quantized tensor + fp32 scale); in this
+framework the quantize->dequantize pair is applied to the gradients right
+before the optimizer, so convergence behavior (the part that needs testing)
+is exactly what production would see, and the wire-format saving is 4x
+(fp32->int8) / 2x (bf16->int8) recorded in the roofline collective term.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_decompress(grads, error_fb) -> Tuple[Any, Any]:
+    """Returns (effective_grads, new_error_fb)."""
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.max(jnp.abs(g)) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq, g - deq
+
+    out = jax.tree_util.tree_map(one, grads, error_fb)
+    eff = jax.tree_util.tree_map(lambda o: o[0], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree_util.tree_map(lambda o: o[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return eff, new_e

@@ -1,0 +1,1 @@
+from repro.isa.isa import Instruction, OPCODES, REGS  # noqa: F401

@@ -1,0 +1,223 @@
+"""Atomic functional simulator (the paper's gem5 AtomicSimple stand-in).
+
+Executes a program (list of Instruction) at register/memory semantics with no
+timing: every instruction completes in one atomic step.  Produces the dynamic
+instruction trace the slicer consumes, plus architectural register snapshots
+at requested trace positions (context matrices for the predictor).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.isa.isa import CONTEXT_REGS, Instruction
+
+MASK64 = (1 << 64) - 1
+
+
+@dataclasses.dataclass
+class MachineState:
+    regs: Dict[str, int]
+    fregs: Dict[str, float]
+    mem: Dict[int, int]
+
+    @classmethod
+    def fresh(cls) -> "MachineState":
+        regs = {f"R{i}": 0 for i in range(32)}
+        regs.update({"CR": 0, "LR": 0, "CTR": 0, "XER": 0, "FPSCR": 0,
+                     "VSCR": 0, "CIA": 0, "NIA": 0})
+        fregs = {f"F{i}": 0.0 for i in range(32)}
+        return cls(regs=regs, fregs=fregs, mem={})
+
+    def snapshot_context(self) -> Dict[str, int]:
+        return {r: self.regs[r] & MASK64 for r in CONTEXT_REGS}
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEntry:
+    pc: int
+    inst: Instruction
+    ea: Optional[int]          # effective address for mem ops
+    taken: Optional[bool]      # branch outcome
+
+
+def _val(st: MachineState, name: str):
+    if name.startswith("F"):
+        return st.fregs[name]
+    return st.regs[name]
+
+
+def _setval(st: MachineState, name: str, v):
+    if name.startswith("F"):
+        st.fregs[name] = float(v)
+    else:
+        st.regs[name] = int(v) & MASK64
+
+
+def _sext(v: int) -> int:
+    v &= MASK64
+    return v - (1 << 64) if v >> 63 else v
+
+
+def step(st: MachineState, pc: int, inst: Instruction
+         ) -> Tuple[int, Optional[int], Optional[bool]]:
+    """Execute one instruction; returns (next_pc, effective_addr, taken)."""
+    op = inst.op
+    s = inst.srcs
+    ea = None
+    taken = None
+    next_pc = pc + 1
+    st.regs["CIA"] = pc
+
+    if op == "addi":
+        _setval(st, inst.dsts[0], _val(st, s[0]) + inst.imm if s
+                else inst.imm)
+    elif op == "add":
+        _setval(st, inst.dsts[0], _val(st, s[0]) + _val(st, s[1]))
+    elif op == "subf":
+        _setval(st, inst.dsts[0], _val(st, s[1]) - _val(st, s[0]))
+    elif op == "neg":
+        _setval(st, inst.dsts[0], -_val(st, s[0]))
+    elif op == "and":
+        _setval(st, inst.dsts[0], _val(st, s[0]) & _val(st, s[1]))
+    elif op == "or":
+        _setval(st, inst.dsts[0], _val(st, s[0]) | _val(st, s[1]))
+    elif op == "xor":
+        _setval(st, inst.dsts[0], _val(st, s[0]) ^ _val(st, s[1]))
+    elif op in ("rldicl", "sld"):
+        sh = inst.imm if inst.imm is not None else (_val(st, s[1]) & 63)
+        _setval(st, inst.dsts[0], (_val(st, s[0]) << sh) & MASK64)
+    elif op == "srd":
+        sh = inst.imm if inst.imm is not None else (_val(st, s[1]) & 63)
+        _setval(st, inst.dsts[0], (_val(st, s[0]) & MASK64) >> sh)
+    elif op == "extsw":
+        v = _val(st, s[0]) & 0xFFFFFFFF
+        _setval(st, inst.dsts[0], v - (1 << 32) if v >> 31 else v)
+    elif op in ("mulld", "mulhd"):
+        prod = _sext(_val(st, s[0])) * _sext(_val(st, s[1]))
+        _setval(st, inst.dsts[0],
+                prod if op == "mulld" else (prod >> 64))
+    elif op in ("divd", "modsd"):
+        a, b = _sext(_val(st, s[0])), _sext(_val(st, s[1]))
+        b = b if b != 0 else 1
+        q, r = abs(a) // abs(b), abs(a) % abs(b)
+        if (a < 0) != (b < 0):
+            q = -q
+        _setval(st, inst.dsts[0], q if op == "divd" else r)
+    elif op in ("cmpi", "cmpl", "cmpd"):
+        a = _sext(_val(st, s[0]))
+        b = inst.imm if op == "cmpi" else _sext(_val(st, s[1]))
+        st.regs["CR"] = (4 if a < b else (2 if a > b else 1))
+    elif op == "fcmpu":
+        a, b = _val(st, s[0]), _val(st, s[1])
+        st.regs["CR"] = (4 if a < b else (2 if a > b else 1))
+    elif op in ("ld", "lwz", "lbz"):
+        ea = (_val(st, inst.mem_base) + inst.mem_offset) & MASK64
+        v = st.mem.get(ea >> 3, 0)
+        if op == "lwz":
+            v &= 0xFFFFFFFF
+        elif op == "lbz":
+            v &= 0xFF
+        _setval(st, inst.dsts[0], v)
+    elif op == "lfd":
+        ea = (_val(st, inst.mem_base) + inst.mem_offset) & MASK64
+        raw = st.mem.get(ea >> 3, 0)
+        st.fregs[inst.dsts[0]] = float(_sext(raw)) * 2.0 ** -16
+    elif op in ("std", "stw", "stb"):
+        ea = (_val(st, inst.mem_base) + inst.mem_offset) & MASK64
+        st.mem[ea >> 3] = _val(st, s[0]) & MASK64
+    elif op == "stfd":
+        ea = (_val(st, inst.mem_base) + inst.mem_offset) & MASK64
+        st.mem[ea >> 3] = int(st.fregs[s[0]] * 2 ** 16) & MASK64
+    elif op in ("fadd", "fsub", "fmul", "fmadd", "fdiv", "fsqrt", "fmr"):
+        a = st.fregs[s[0]]
+        if op == "fadd":
+            r = a + st.fregs[s[1]]
+        elif op == "fsub":
+            r = a - st.fregs[s[1]]
+        elif op == "fmul":
+            r = a * st.fregs[s[1]]
+        elif op == "fmadd":
+            r = a * st.fregs[s[1]] + st.fregs[s[2]]
+        elif op == "fdiv":
+            d = st.fregs[s[1]]
+            r = a / d if abs(d) > 1e-30 else 0.0
+        elif op == "fsqrt":
+            r = abs(a) ** 0.5
+        else:
+            r = a
+        if abs(r) > 1e30:
+            r = 0.0
+        st.fregs[inst.dsts[0]] = r
+    elif op == "b":
+        next_pc = inst.target
+        taken = True
+    elif op == "bc":
+        # branch if CR bit set per imm: 0 -> lt(4), 1 -> gt(2), 2 -> eq(1),
+        # 3 -> not-eq
+        cr = st.regs["CR"]
+        cond = {0: cr & 4, 1: cr & 2, 2: cr & 1, 3: (cr & 1) == 0}[
+            inst.imm or 0]
+        taken = bool(cond)
+        if taken:
+            next_pc = inst.target
+    elif op == "bl":
+        st.regs["LR"] = pc + 1
+        next_pc = inst.target
+        taken = True
+    elif op == "blr":
+        next_pc = st.regs["LR"]
+        taken = True
+    elif op == "bdnz":
+        st.regs["CTR"] = (st.regs["CTR"] - 1) & MASK64
+        taken = st.regs["CTR"] != 0
+        if taken:
+            next_pc = inst.target
+    elif op == "mtctr":
+        st.regs["CTR"] = _val(st, s[0])
+    elif op == "mtlr":
+        st.regs["LR"] = _val(st, s[0])
+    elif op == "mflr":
+        _setval(st, inst.dsts[0], st.regs["LR"])
+    elif op == "nop":
+        pass
+    else:
+        raise ValueError(f"unimplemented opcode {op}")
+
+    st.regs["NIA"] = next_pc
+    return next_pc, ea, taken
+
+
+def run(program: Sequence[Instruction], max_instructions: int,
+        state: Optional[MachineState] = None,
+        snapshot_every: Optional[int] = None,
+        snapshot_at: Optional[Sequence[int]] = None
+        ) -> Tuple[List[TraceEntry], List[Dict[str, int]], MachineState]:
+    """Execute until program exit or ``max_instructions``.
+
+    Returns (trace, snapshots, final_state).  With ``snapshot_every``,
+    ``snapshots[i]`` is the architectural context BEFORE trace position
+    i*snapshot_every; with ``snapshot_at`` (a sorted sequence of trace
+    positions, e.g. clip starts from the slicer), one snapshot per
+    requested position.
+    """
+    st = state or MachineState.fresh()
+    trace: List[TraceEntry] = []
+    snapshots: List[Dict[str, int]] = []
+    at = list(snapshot_at) if snapshot_at is not None else None
+    at_i = 0
+    pc = 0
+    n = 0
+    while 0 <= pc < len(program) and n < max_instructions:
+        if snapshot_every and n % snapshot_every == 0:
+            snapshots.append(st.snapshot_context())
+        if at is not None:
+            while at_i < len(at) and at[at_i] == n:
+                snapshots.append(st.snapshot_context())
+                at_i += 1
+        inst = program[pc]
+        next_pc, ea, taken = step(st, pc, inst)
+        trace.append(TraceEntry(pc=pc, inst=inst, ea=ea, taken=taken))
+        pc = next_pc
+        n += 1
+    return trace, snapshots, st

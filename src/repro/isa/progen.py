@@ -1,0 +1,312 @@
+"""Synthetic benchmark suite (the SPEC 2017 stand-in, paper Table II).
+
+SPEC 2017 binaries are unavailable offline, so the framework carries 24
+generated Power-ISA programs named and tagged after Table II.  Each program
+is a composition of behaviour motifs matched to its CTRL / COMP / MEM tags:
+
+    COMP  floating-point fmadd chains, integer mul/div kernels
+    MEM   streaming loads/stores (stride > cache line), pointer chasing
+          (serial D-cache misses), blocked gather/scatter
+    CTRL  data-dependent branch ladders (mispredict pressure), call/return
+          chains, short irregular loops
+
+The per-benchmark RNG (seeded by the benchmark name) varies loop lengths,
+chain depths, strides, and register assignments, so the 24 programs exercise
+distinct code and distinct microarchitectural bottlenecks — which is what
+the 6-set train/test generalization protocol (Fig 11) needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.isa.funcsim import MachineState
+from repro.isa.isa import Instruction
+
+I = Instruction
+
+# Table II: name -> (ckp_num, tags, set_no)
+TABLE_II: Dict[str, Tuple[int, str, int]] = {
+    "500.perlbench": (7, "CTRL", 1),
+    "502.gcc": (1, "CTRL", 2),
+    "503.bwaves": (24, "COMP+MEM", 1),
+    "505.mcf": (32, "COMP+MEM", 2),
+    "507.cactuBSSN": (20, "COMP+MEM", 3),
+    "508.namd": (70, "COMP+MEM", 4),
+    "510.parest": (78, "COMP+MEM", 5),
+    "511.povray": (16, "COMP+MEM", 6),
+    "519.lbm": (16, "COMP+MEM", 1),
+    "520.omnetpp": (26, "CTRL", 3),
+    "521.wrf": (71, "COMP+MEM", 2),
+    "523.xalancbmk": (5, "CTRL+MEM", 4),
+    "525.x264": (13, "COMP", 3),
+    "526.blender": (13, "COMP+MEM", 4),
+    "527.cam4": (86, "COMP+MEM", 5),
+    "531.deepsjeng": (4, "CTRL", 5),
+    "538.imagick": (4, "COMP+MEM", 6),
+    "541.leela": (11, "CTRL+MEM", 1),
+    "544.nab": (17, "COMP+MEM", 2),
+    "548.exchange2": (40, "CTRL+MEM", 6),
+    "549.fotonik3d": (15, "COMP+MEM", 3),
+    "554.roms": (43, "COMP+MEM", 4),
+    "557.xz": (8, "COMP+MEM", 5),
+    "999.specrand": (3, "COMP+MEM", 6),
+}
+
+SET_NUMBERS = (1, 2, 3, 4, 5, 6)
+
+
+@dataclasses.dataclass
+class Benchmark:
+    name: str
+    tags: str
+    set_no: int
+    ckp_num: int
+    program: List[Instruction]
+    setup: Callable[[MachineState], None]
+
+    @property
+    def tag_list(self) -> Tuple[str, ...]:
+        return tuple(self.tags.split("+"))
+
+
+# --------------------------------------------------------------------------- #
+# Motif generators.  Each returns a list of instructions with branch targets
+# RELATIVE to its own start; ``_emit`` rebases them into the program.
+# --------------------------------------------------------------------------- #
+
+def _loop(body: List[Instruction], iters_reg_val: int,
+          scratch: str = "R9") -> List[Instruction]:
+    """mtctr <n>; body; bdnz -> len(head) (loop start).
+
+    Body-internal relative targets shift by len(head) so they stay correct
+    after the head is prepended.
+    """
+    head = [I("addi", dsts=(scratch,), imm=iters_reg_val),
+            I("mtctr", srcs=(scratch,))]
+    shifted = [dataclasses.replace(i, target=i.target + len(head))
+               if i.target is not None else i for i in body]
+    loop = shifted + [I("bdnz", target=len(head))]
+    return head + loop
+
+
+def fp_chain(rng: np.random.RandomState, depth: int, base_reg: str,
+             mem_ratio: float) -> List[Instruction]:
+    """fmadd dependency chain, optionally fed from / drained to memory."""
+    body: List[Instruction] = []
+    fr = [f"F{i}" for i in rng.choice(16, size=6, replace=False)]
+    if rng.rand() < mem_ratio:
+        body.append(I("lfd", dsts=(fr[0],), mem_base=base_reg,
+                      mem_offset=int(rng.randint(0, 16)) * 8))
+    for d in range(depth):
+        a, b, c = fr[d % 3], fr[(d + 1) % 3], fr[3 + d % 3]
+        op = rng.choice(["fmadd", "fmul", "fadd", "fsub"])
+        if op == "fmadd":
+            body.append(I("fmadd", dsts=(a,), srcs=(a, b, c)))
+        else:
+            body.append(I(op, dsts=(a,), srcs=(a, b)))
+    if rng.rand() < mem_ratio:
+        body.append(I("stfd", srcs=(fr[0],), mem_base=base_reg,
+                      mem_offset=int(rng.randint(0, 16)) * 8))
+        body.append(I("addi", dsts=(base_reg,), srcs=(base_reg,), imm=64))
+    return body
+
+
+def int_kernel(rng: np.random.RandomState, n: int,
+               div_ratio: float) -> List[Instruction]:
+    body: List[Instruction] = []
+    gr = [f"R{i}" for i in rng.choice(range(16, 28), size=6, replace=False)]
+    for k in range(n):
+        a, b = gr[k % 4], gr[(k + 1) % 4]
+        r = rng.rand()
+        if r < div_ratio:
+            body.append(I("divd", dsts=(a,), srcs=(a, gr[4])))
+        elif r < div_ratio + 0.25:
+            body.append(I("mulld", dsts=(a,), srcs=(a, b)))
+        else:
+            op = rng.choice(["add", "xor", "and", "or", "subf"])
+            body.append(I(op, dsts=(a,), srcs=(a, b)))
+    body.append(I("addi", dsts=(gr[4],), srcs=(gr[4],), imm=3))
+    return body
+
+
+def stream_kernel(rng: np.random.RandomState, ptr: str, stride: int,
+                  store: bool) -> List[Instruction]:
+    """Strided load(+store) sweep; stride > 64 B defeats the line cache."""
+    v = f"R{int(rng.randint(16, 28))}"
+    body = [I("ld", dsts=(v,), mem_base=ptr, mem_offset=0),
+            I("add", dsts=(v,), srcs=(v, v))]
+    if store:
+        body.append(I("std", srcs=(v,), mem_base=ptr, mem_offset=8))
+    body.append(I("addi", dsts=(ptr,), srcs=(ptr,), imm=stride))
+    return body
+
+
+def chase_kernel(ptr: str) -> List[Instruction]:
+    """Pointer chase: each load's address depends on the previous load."""
+    return [I("ld", dsts=(ptr,), mem_base=ptr, mem_offset=0)]
+
+
+def branch_ladder(rng: np.random.RandomState, ptr: str,
+                  n_rungs: int) -> List[Instruction]:
+    """Data-dependent compare+branch rungs over a random-valued array.
+
+    Each rung: load, compare against a threshold, conditionally skip a
+    couple of ALU ops.  Random data -> ~50% taken -> mispredict pressure.
+    """
+    body: List[Instruction] = []
+    v = f"R{int(rng.randint(16, 24))}"
+    t = f"R{int(rng.randint(24, 28))}"
+    for _ in range(n_rungs):
+        body.append(I("ld", dsts=(v,), mem_base=ptr, mem_offset=0))
+        body.append(I("cmpi", srcs=(v,), imm=int(rng.randint(10, 120))))
+        skip = [I("add", dsts=(t,), srcs=(t, v)),
+                I("xor", dsts=(v,), srcs=(v, t))]
+        # bc cond=0 (branch if lt) over the skip block
+        body.append(I("bc", imm=0, target=None))
+        patch_at = len(body) - 1
+        body.extend(skip)
+        body[patch_at] = I("bc", imm=0, target=len(body))
+        body.append(I("addi", dsts=(ptr,), srcs=(ptr,), imm=8))
+    return body
+
+
+def call_block(rng: np.random.RandomState,
+               fn_bodies: int) -> List[Instruction]:
+    """bl/blr call chain: emit N tiny leaf functions + a caller sequence.
+
+    Layout: [caller: bl f0; bl f1; ...; b end] [f0 ... blr] [f1 ... blr] end.
+    """
+    callers: List[Instruction] = []
+    fns: List[List[Instruction]] = []
+    for _ in range(fn_bodies):
+        g = f"R{int(rng.randint(16, 28))}"
+        fn = [I("addi", dsts=(g,), srcs=(g,), imm=int(rng.randint(1, 9))),
+              I("mulld", dsts=(g,), srcs=(g, g)),
+              I("blr")]
+        fns.append(fn)
+    n_callers = fn_bodies + 1                       # bl xN + trailing b
+    out: List[Instruction] = []
+    fn_starts = []
+    off = n_callers
+    for fn in fns:
+        fn_starts.append(off)
+        off += len(fn)
+    for k in range(fn_bodies):
+        out.append(I("bl", target=fn_starts[k]))
+    out.append(I("b", target=off))                  # jump past the bodies
+    for fn in fns:
+        out.extend(fn)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Program assembly
+# --------------------------------------------------------------------------- #
+
+def _emit(program: List[Instruction], block: List[Instruction]) -> None:
+    base = len(program)
+    for inst in block:
+        if inst.target is not None:
+            inst = dataclasses.replace(inst, target=inst.target + base)
+        program.append(inst)
+
+
+def build_benchmark(name: str) -> Benchmark:
+    ckp, tags, set_no = TABLE_II[name]
+    seed = zlib.crc32(name.encode()) & 0xFFFFFFFF
+    rng = np.random.RandomState(seed)
+    tagset = set(tags.split("+"))
+
+    program: List[Instruction] = []
+    # pointer registers with well-separated heaps
+    p_stream, p_chase, p_data = "R11", "R12", "R13"
+    heap_stream, heap_chase, heap_data = 0x10000, 0x400000, 0x800000
+    prologue = [
+        I("addi", dsts=(p_stream,), imm=heap_stream),
+        I("addi", dsts=(p_chase,), imm=heap_chase),
+        I("addi", dsts=(p_data,), imm=heap_data),
+        I("addi", dsts=("R28",), imm=int(rng.randint(3, 60))),
+    ]
+    _emit(program, prologue)
+    outer_start = len(program)
+
+    n_motifs = int(rng.randint(3, 6))
+    for _ in range(n_motifs):
+        choices = []
+        if "COMP" in tagset:
+            choices += ["fp", "int"] * 2
+        if "MEM" in tagset:
+            choices += ["stream", "chase"] * 2
+        if "CTRL" in tagset:
+            choices += ["branch", "call"] * 2
+        kind = rng.choice(choices)
+        iters = int(rng.randint(24, 120))
+        if kind == "fp":
+            body = fp_chain(rng, depth=int(rng.randint(3, 9)),
+                            base_reg=p_stream,
+                            mem_ratio=0.7 if "MEM" in tagset else 0.15)
+            block = _loop(body, iters)
+        elif kind == "int":
+            body = int_kernel(rng, n=int(rng.randint(4, 10)),
+                              div_ratio=float(rng.uniform(0.0, 0.15)))
+            block = _loop(body, iters)
+        elif kind == "stream":
+            stride = int(rng.choice([8, 64, 72, 136, 264]))
+            body = stream_kernel(rng, p_stream, stride,
+                                 store=bool(rng.rand() < 0.5))
+            block = _loop(body, iters)
+        elif kind == "chase":
+            block = _loop(chase_kernel(p_chase) * int(rng.randint(1, 4)),
+                          iters)
+        elif kind == "branch":
+            body = branch_ladder(rng, p_data, n_rungs=int(rng.randint(2, 5)))
+            block = _loop(body, iters)
+        else:  # call
+            block = _loop(call_block(rng, fn_bodies=int(rng.randint(2, 4))),
+                          max(8, iters // 4))
+        _emit(program, block)
+        # re-anchor the pointers so repeated outer iterations stay in-heap
+        _emit(program, [
+            I("addi", dsts=(p_stream,), imm=heap_stream +
+              int(rng.randint(0, 64)) * 8),
+            I("addi", dsts=(p_data,), imm=heap_data),
+        ])
+    program.append(I("b", target=outer_start))     # absolute, no rebase
+
+    chase_slots = 4096
+    data_slots = 4096
+    perm = rng.permutation(chase_slots)
+
+    def setup(st: MachineState, _perm=perm, _rng_seed=seed) -> None:
+        r = np.random.RandomState(_rng_seed ^ 0x5EED)
+        st.regs[p_chase] = heap_chase
+        # pointer-chase cycle: mem[heap + 8*i] -> heap + 8*perm[i]
+        for i in range(chase_slots):
+            ea = heap_chase + 8 * i
+            st.mem[ea >> 3] = heap_chase + 8 * int(_perm[i])
+        # random data for the branch ladders
+        for i in range(data_slots):
+            ea = heap_data + 8 * i
+            st.mem[ea >> 3] = int(r.randint(0, 128))
+
+    return Benchmark(name=name, tags=tags, set_no=set_no, ckp_num=ckp,
+                     program=program, setup=setup)
+
+
+def all_benchmarks() -> List[Benchmark]:
+    return [build_benchmark(n) for n in TABLE_II]
+
+
+def benchmarks_in_set(set_no: int) -> List[Benchmark]:
+    return [build_benchmark(n) for n, (_, _, s) in TABLE_II.items()
+            if s == set_no]
+
+
+def fresh_state(bench: Benchmark) -> MachineState:
+    st = MachineState.fresh()
+    bench.setup(st)
+    return st

@@ -1,0 +1,212 @@
+"""O3 superscalar timing oracle (the paper's gem5 O3 golden model stand-in).
+
+Computes per-instruction commit cycles for a dynamic trace under an
+out-of-order core model parameterized exactly by the paper's Table III
+knobs (FetchWidth, IssueWidth, CommitWidth, ROBEntry) plus functional-unit
+counts/latencies, I/D caches, and a 2-bit branch predictor.
+
+The model is *greedy-scheduled* rather than cycle-stepped: each instruction's
+fetch / issue / complete / commit cycles are derived in trace order from
+resource-availability bookkeeping.  That captures the first-order O3
+behaviour the predictor must learn — data-dependency chains, structural FU
+hazards, ROB back-pressure, cache locality, branch mispredict flushes —
+at ~10^5-10^6 instructions/second in pure Python, which is what makes the
+dataset pipeline runnable offline (gem5 itself is unavailable).
+
+Commit times feed Algorithm 1 (core/slicer.py): clip runtime is the delta
+of commit cycles across the clip boundary, exactly as the paper defines it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.isa.funcsim import TraceEntry
+from repro.isa.isa import OPCODES
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingParams:
+    # Table III knobs
+    fetch_width: int = 8
+    issue_width: int = 8
+    commit_width: int = 8
+    rob_entries: int = 192
+    # front end
+    icache_lines: int = 128          # direct-mapped, 8 insts per line
+    icache_line_insts: int = 8
+    icache_miss_cycles: int = 8
+    mispredict_penalty: int = 12
+    decode_depth: int = 4            # fetch->dispatch pipeline depth
+    # memory
+    dcache_lines: int = 512          # direct-mapped, 64 B lines
+    dcache_line_bytes: int = 64
+    dcache_hit_cycles: int = 2
+    dcache_miss_cycles: int = 40
+    mshr_entries: int = 4            # outstanding misses (bounds MLP)
+    # functional units: class -> number of units
+    fu_counts: Tuple[Tuple[str, int], ...] = (
+        ("int", 4), ("mul", 1), ("div", 1), ("fp", 2), ("fdiv", 1),
+        ("lsu", 2), ("br", 1))
+
+    def replace(self, **kw) -> "TimingParams":
+        return dataclasses.replace(self, **kw)
+
+
+class _TwoBitPredictor:
+    """Per-pc 2-bit saturating counters, initialized weakly taken."""
+
+    __slots__ = ("table",)
+
+    def __init__(self):
+        self.table: Dict[int, int] = {}
+
+    def predict_and_update(self, pc: int, taken: bool) -> bool:
+        c = self.table.get(pc, 2)
+        pred = c >= 2
+        self.table[pc] = min(3, c + 1) if taken else max(0, c - 1)
+        return pred == taken
+
+
+class _DirectMappedCache:
+    __slots__ = ("tags", "n")
+
+    def __init__(self, n_lines: int):
+        self.tags = [-1] * n_lines
+        self.n = n_lines
+
+    def access(self, line: int) -> bool:
+        idx = line % self.n
+        hit = self.tags[idx] == line
+        self.tags[idx] = line
+        return hit
+
+
+def simulate(trace: Sequence[TraceEntry],
+             params: TimingParams = TimingParams()) -> List[int]:
+    """Returns the commit cycle of every instruction in ``trace``."""
+    p = params
+    n = len(trace)
+    commit = [0] * n
+    if n == 0:
+        return commit
+
+    icache = _DirectMappedCache(p.icache_lines)
+    dcache = _DirectMappedCache(p.dcache_lines)
+    bpred = _TwoBitPredictor()
+    fu_free: Dict[str, List[int]] = {
+        cls: [0] * cnt for cls, cnt in p.fu_counts}
+    mshr: List[int] = [0] * p.mshr_entries
+    reg_ready: Dict[str, int] = {}          # reg -> cycle its value is ready
+    issue_used: Dict[int, int] = defaultdict(int)
+    store_ready: Dict[int, int] = {}        # mem line -> store completion
+
+    fetch_cycle = 0                          # cycle of the current fetch group
+    fetch_in_group = 0
+    fetch_barrier = 0                        # redirect/miss stall point
+    commit_cycle = 0
+    commit_in_group = 0
+
+    for i, e in enumerate(trace):
+        info = OPCODES[e.inst.op]
+
+        # ---------------- fetch ----------------
+        line = e.pc // p.icache_line_insts
+        if not icache.access(line):
+            fetch_barrier = max(fetch_barrier,
+                                fetch_cycle + p.icache_miss_cycles)
+        if fetch_cycle < fetch_barrier:
+            fetch_cycle = fetch_barrier
+            fetch_in_group = 0
+        elif fetch_in_group >= p.fetch_width:
+            fetch_cycle += 1
+            fetch_in_group = 0
+            if fetch_cycle < fetch_barrier:
+                fetch_cycle = fetch_barrier
+        f_cyc = fetch_cycle
+        fetch_in_group += 1
+
+        # ---------------- dispatch (ROB back-pressure) ----------------
+        disp = f_cyc + p.decode_depth
+        if i >= p.rob_entries:
+            disp = max(disp, commit[i - p.rob_entries])
+
+        # ---------------- operand readiness ----------------
+        ready = disp
+        for s in e.inst.srcs:
+            ready = max(ready, reg_ready.get(s, 0))
+        if e.inst.mem_base is not None:
+            ready = max(ready, reg_ready.get(e.inst.mem_base, 0))
+        if info.uses_ctr:
+            ready = max(ready, reg_ready.get("CTR", 0))
+        if e.inst.op == "bc":
+            ready = max(ready, reg_ready.get("CR", 0))
+        if e.inst.op == "blr":
+            ready = max(ready, reg_ready.get("LR", 0))
+
+        # ---------------- issue: FU + issue-bandwidth ----------------
+        units = fu_free[info.fu]
+        u = min(range(len(units)), key=units.__getitem__)
+        issue = max(ready, units[u])
+        while issue_used[issue] >= p.issue_width:
+            issue += 1
+        issue_used[issue] += 1
+
+        # ---------------- execute ----------------
+        lat = info.latency
+        if info.is_load:
+            mline = (e.ea or 0) // p.dcache_line_bytes
+            hit = dcache.access(mline)
+            lat = p.dcache_hit_cycles if hit else p.dcache_miss_cycles
+            dep = store_ready.get(mline)
+            if dep is not None:              # store-to-load forwarding point
+                issue = max(issue, dep)
+            if not hit:                      # MSHR slot bounds miss overlap
+                m = min(range(len(mshr)), key=mshr.__getitem__)
+                issue = max(issue, mshr[m])
+                mshr[m] = issue + lat
+        complete = issue + lat
+        units[u] = issue + 1                 # pipelined FUs: 1-cycle occupancy
+        if info.fu in ("div", "fdiv"):
+            units[u] = complete              # unpipelined dividers
+
+        # ---------------- writeback ----------------
+        for d in e.inst.dsts:
+            reg_ready[d] = complete
+        if info.writes_cr:
+            reg_ready["CR"] = complete
+        if info.writes_lr:
+            reg_ready["LR"] = complete
+        if info.uses_ctr:
+            reg_ready["CTR"] = complete
+        if info.is_store:
+            mline = (e.ea or 0) // p.dcache_line_bytes
+            dcache.access(mline)
+            store_ready[mline] = complete
+
+        # ---------------- branch resolution ----------------
+        if info.is_branch and e.taken is not None:
+            correct = bpred.predict_and_update(e.pc, e.taken)
+            if not correct:
+                fetch_barrier = max(fetch_barrier,
+                                    complete + p.mispredict_penalty)
+
+        # ---------------- commit (in order) ----------------
+        c = max(complete + 1, commit_cycle)
+        if c > commit_cycle:
+            commit_cycle = c
+            commit_in_group = 0
+        elif commit_in_group >= p.commit_width:
+            commit_cycle += 1
+            commit_in_group = 0
+        commit_in_group += 1
+        commit[i] = commit_cycle
+
+    return commit
+
+
+def total_cycles(trace: Sequence[TraceEntry],
+                 params: TimingParams = TimingParams()) -> int:
+    c = simulate(trace, params)
+    return c[-1] if c else 0

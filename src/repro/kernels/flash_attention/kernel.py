@@ -1,0 +1,134 @@
+"""Pallas TPU flash-attention kernel (online softmax, VMEM-tiled).
+
+Grid = (B*H, Sq/block_q, Skv/block_k) with the kv axis innermost and
+sequential ("arbitrary"): per (head, q-block) the kernel streams kv blocks
+through VMEM, maintaining the running max / normalizer / weighted
+accumulator in scratch (the Flash-Attention-2 recurrence), and writes the
+normalized output tile once on the last kv step.
+
+TPU adaptation notes (vs the CUDA original):
+  - tiles are (block_q x head_dim) / (block_k x head_dim) with head_dim on
+    the 128-wide lane axis and block sizes multiples of the 8-sublane f32
+    tile; the two matmuls per step hit the MXU at (128 x D x 128).
+  - there is no warp-level shuffle: the online-softmax reduction happens in
+    VREGs over lanes, which is exactly what jnp.max/sum lower to.
+  - masks (causal / sliding-window / kv-validity) are computed from iota on
+    the fly — no (Sq, Skv) mask tensor ever exists in HBM.
+  - the same kernel body serves self-attention (LM zoo, instruction
+    encoder) and cross-attention (block encoder: context rows query
+    instruction vectors) — cross is just causal=False with Sq != Skv.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, kvm_ref, o_ref, m_scr, l_scr, acc_scr,
+               *, scale: float, causal: bool, window: int, sq: int,
+               skv: int, block_q: int, block_k: int, q_offset: int):
+    """One (head, q-block, kv-block) grid step.
+
+    q_ref: (block_q, D); k_ref/v_ref: (block_k, D); kvm_ref: (1, block_k)
+    validity; o_ref: (block_q, D).  Scratch: m/l (block_q, 1) f32,
+    acc (block_q, D) f32.
+    """
+    kv_idx = pl.program_id(2)
+    q_idx = pl.program_id(1)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # (bq, bk)
+
+    # positions (q aligned to the END of kv, decode-style, via q_offset)
+    qpos = q_idx * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + q_offset
+    kpos = kv_idx * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = (qpos < sq + q_offset) & (kpos < skv)
+    if causal:
+        mask &= qpos >= kpos
+        if window > 0:
+            mask &= qpos - kpos < window
+    mask &= kvm_ref[0, :][None, :] > 0
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                  # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                               # (bq, bk)
+    p = jnp.where(mask, p, 0.0)
+
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kv_idx == pl.num_programs(2) - 1)
+    def _finish():
+        l = l_scr[...]
+        o_ref[...] = (acc_scr[...] /
+                      jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "sq", "skv", "block_q", "block_k",
+                     "interpret"))
+def flash_attention_bhsd(q, k, v, kv_mask, *, causal: bool, window: int,
+                         sq: int, skv: int, block_q: int, block_k: int,
+                         interpret: bool):
+    """q: (BH, Sq_pad, D); k/v: (BH, Skv_pad, D); kv_mask: (BH, Skv_pad).
+
+    Shapes already padded to block multiples; sq/skv are the true lengths.
+    """
+    BH, Sq_pad, D = q.shape
+    Skv_pad = k.shape[1]
+    n_q = Sq_pad // block_q
+    n_k = Skv_pad // block_k
+    scale = 1.0 / math.sqrt(D)
+    q_offset = skv - sq                     # align q to the end of kv
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window, sq=sq,
+        skv=skv, block_q=block_q, block_k=block_k, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((None, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, 1, block_k), lambda b, i, j: (b, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq_pad, D), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, 1)),      # running max
+            _vmem((block_q, 1)),      # running normalizer
+            _vmem((block_q, D)),      # weighted-value accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v, kv_mask)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

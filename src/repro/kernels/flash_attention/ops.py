@@ -1,0 +1,111 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Handles layout ((B, S, H, D) model convention -> (B*H, S, D) kernel
+convention), block-size selection, padding to block multiples, kv-mask
+plumbing, and the CPU fallback (interpret mode executes the kernel body in
+Python — used by every correctness test in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pick_blocks(sq: int, skv: int) -> tuple:
+    """(block_q, block_k): MXU-aligned 128 tiles, shrunk for short seqs
+    (the instruction encoder's L_token=16 shouldn't pad 8x)."""
+    bq = min(128, _round_up(sq, 16))
+    bk = min(128, _round_up(skv, 16))
+    return bq, bk
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = False, window: int = 0,
+                    kv_mask: Optional[jax.Array] = None,
+                    block_q: int = 0, block_k: int = 0,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Skv, H, D) (kv heads already broadcast);
+    kv_mask: (B, Skv), 1 = valid.  Returns (B, Sq, H, D).
+
+    Differentiable: the forward runs the Pallas kernel; the backward is a
+    custom_vjp through the pure-jnp reference (recompute — flash-style
+    no-residual autodiff).  A dedicated backward kernel is a possible next
+    step; training on this host uses the chunked XLA path anyway.
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bq, bk = _pick_blocks(Sq, Skv)
+    block_q = block_q or bq
+    block_k = block_k or bk
+    if kv_mask is None:
+        kv_mask = jnp.ones((B, Skv), jnp.float32)
+    return _fa(q, k, v, kv_mask.astype(jnp.float32), causal, window,
+               block_q, block_k, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _fa(q, k, v, kv_mask, causal, window, block_q, block_k, interpret):
+    return _fa_impl(q, k, v, kv_mask, causal, window, block_q, block_k,
+                    interpret)
+
+
+def _fa_fwd(q, k, v, kv_mask, causal, window, block_q, block_k, interpret):
+    out = _fa_impl(q, k, v, kv_mask, causal, window, block_q, block_k,
+                   interpret)
+    return out, (q, k, v, kv_mask)
+
+
+def _fa_bwd(causal, window, block_q, block_k, interpret, res, g):
+    from repro.kernels.flash_attention.ref import attention_ref
+    q, k, v, kv_mask = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window, kv_mask=kv_mask),
+        q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, jnp.zeros_like(kv_mask)
+
+
+_fa.defvjp(_fa_fwd, _fa_bwd)
+
+
+def _fa_impl(q, k, v, kv_mask, causal, window, block_q, block_k,
+             interpret):
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    Sq_pad = _round_up(Sq, block_q)
+    Skv_pad = _round_up(Skv, block_k)
+
+    def to_bhsd(x, s_pad):
+        x = jnp.swapaxes(x, 1, 2)                       # (B, H, S, D)
+        if s_pad != x.shape[2]:
+            x = jnp.pad(x, ((0, 0), (0, 0), (0, s_pad - x.shape[2]), (0, 0)))
+        return x.reshape(B * H, s_pad, D)
+
+    qb = to_bhsd(q, Sq_pad)
+    kb = to_bhsd(k, Skv_pad)
+    vb = to_bhsd(v, Skv_pad)
+
+    m = kv_mask
+    if Skv_pad != Skv:
+        m = jnp.pad(m, ((0, 0), (0, Skv_pad - Skv)))
+    m = jnp.broadcast_to(m[:, None, None, :], (B, H, 1, Skv_pad)) \
+        .reshape(B * H, 1, Skv_pad)
+
+    o = flash_attention_bhsd(
+        qb, kb, vb, m, causal=causal, window=window, sq=Sq, skv=Skv,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+
+    o = o.reshape(B, H, Sq_pad, D)[:, :, :Sq]
+    return jnp.swapaxes(o, 1, 2)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Materializes the full (Sq, Skv) score matrix with fp32 softmax — the
+mathematically obvious implementation the Pallas kernel must match.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = False, window: int = 0,
+                  kv_mask: Optional[jax.Array] = None) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Skv, H, D); kv_mask: (B, Skv) 1=valid.
+
+    window > 0 limits causal attention to the last ``window`` positions.
+    Returns (B, Sq, H, D) in q.dtype.
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)   # align ends (decode-style)
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+        if window > 0:
+            mask &= qpos - kpos < window
+    m = mask[None, None]
+    if kv_mask is not None:
+        m = m & (kv_mask[:, None, None, :] > 0)
+    s = jnp.where(m, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows produce NaN in softmax; zero them like the kernel
+    p = jnp.where(jnp.any(m, -1, keepdims=True), p, 0.0)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

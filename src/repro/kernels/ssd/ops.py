@@ -1,0 +1,47 @@
+"""jit'd public wrapper for the SSD scan kernel: layout, padding, fallback.
+
+Model convention (models/mamba2.py): x (Bt, S, H, P), dt (Bt, S, H),
+B/C (Bt, S, N), A (H,).  Kernel convention: head-major rows (Bt*H, S, P).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_scan_grid
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+             A: jax.Array, chunk: int = 256,
+             interpret: Optional[bool] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (Bt, S, H, P), final_state (Bt, H, P, N) f32)."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    q = min(chunk, S)
+
+    S_pad = _round_up(S, q)
+    pad = S_pad - S
+    if pad:
+        # dt = 0 on padded steps: no decay, no state injection
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+
+    xk = jnp.swapaxes(x, 1, 2).reshape(Bt * H, S_pad, P)
+    dtk = jnp.swapaxes(dt, 1, 2).reshape(Bt * H, 1, S_pad)
+    Ak = A.reshape(H, 1, 1).astype(jnp.float32)
+
+    y, state = ssd_scan_grid(xk, dtk, B, C, Ak, h=H, q=q,
+                             interpret=interpret)
+    y = jnp.swapaxes(y.reshape(Bt, H, S_pad, P), 1, 2)[:, :S]
+    return y, state.reshape(Bt, H, P, N)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the SSD (Mamba2) scan: the naive per-timestep
+recurrence.  Deliberately a *different algorithm* from both the Pallas
+kernel and models/mamba2.ssd_chunked (which are chunked), so agreement is
+meaningful:
+
+    state_t = state_{t-1} * exp(dt_t * A) + dt_t * B_t x_t^T
+    y_t     = C_t . state_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+            A: jax.Array):
+    """x: (Bt, S, H, P); dt: (Bt, S, H) positive; B/C: (Bt, S, N);
+    A: (H,) negative.  Returns (y (Bt, S, H, P), state (Bt, H, P, N))."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt_, Ct = inp                          # (Bt,H,P),(Bt,H),(Bt,N)x2
+        decay = jnp.exp(dtt * Af[None, :])              # (Bt, H)
+        upd = jnp.einsum("bn,bh,bhp->bhpn", Bt_, dtt, xt)
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Ct, state)
+        return state, y
+
+    state0 = jnp.zeros((Bt, H, P, N), jnp.float32)
+    state, ys = jax.lax.scan(
+        step, state0,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+         jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)          # (Bt, S, H, P)
+    return y, state

@@ -1,0 +1,333 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Per cell this produces results/dryrun/<arch>__<shape>__<mesh>.json with:
+  - memory_analysis (bytes per device: args/outputs/temps/code)
+  - cost_analysis of the scanned artifact (loop bodies counted ONCE by XLA)
+  - per-layer extrapolated FLOPs/bytes/collectives from two small unrolled
+    compiles (R=1, R=2), which is what §Roofline consumes
+  - the collective schedule summary parsed from the compiled HLO
+
+The 512-device count is forced above, BEFORE any jax import, so
+jax.make_mesh can build the (2,16,16) multi-pod mesh on this CPU-only host.
+The dry-run never allocates an array: inputs are ShapeDtypeStructs.
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ArchConfig, ShapeConfig, ARCH_NAMES, get_config
+from repro.distributed.sharding import (
+    LOGICAL_RULES_DECODE, LOGICAL_RULES_DECODE_LONG, LOGICAL_RULES_TRAIN,
+    LOGICAL_RULES_PREFILL_SP, LOGICAL_RULES_TRAIN_FSDP,
+    LOGICAL_RULES_TRAIN_ZERO3, use_mesh_and_rules)
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes, num_chips
+from repro.launch.specs import batch_shardings, input_specs
+from repro.models import transformer as tfm
+from repro.models.layers import shardings_from_specs
+from repro.training.train_loop import (
+    TrainConfig, abstract_train_state, make_train_step)
+
+RESULTS_DIR = Path("results/dryrun")
+
+
+def pick_rules(kind: str, shape: ShapeConfig, mesh, rules_name: str = ""):
+    if rules_name == "fsdp":
+        return LOGICAL_RULES_TRAIN_FSDP
+    if rules_name == "zero3":
+        return LOGICAL_RULES_TRAIN_ZERO3
+    if rules_name == "sp":
+        return LOGICAL_RULES_PREFILL_SP
+    if kind != "decode":
+        return LOGICAL_RULES_TRAIN
+    sizes = mesh_axis_sizes(mesh)
+    dp = sizes.get("pod", 1) * sizes.get("data", 1)
+    if shape.global_batch % dp != 0:
+        return LOGICAL_RULES_DECODE_LONG
+    return LOGICAL_RULES_DECODE
+
+
+def _state_shardings(cfg, tcfg: TrainConfig, mesh, rules):
+    psh = tfm.param_shardings(cfg, mesh, rules)
+    scalar = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    if tcfg.optimizer == "sgdm":
+        opt = {"mu": psh}
+    elif tcfg.optimizer == "adamw":
+        opt = {"mu": psh, "nu": psh, "count": scalar}
+    elif tcfg.optimizer == "adafactor":
+        # factored row/col stats are ~1e-4 of param bytes: replicate
+        abs_opt = tcfg.make_optimizer().abstract_state(
+            tfm.abstract_params(cfg))
+        opt = jax.tree_util.tree_map(lambda _: scalar, abs_opt)
+    else:
+        raise NotImplementedError(tcfg.optimizer)
+    sh = {"params": psh, "opt": opt,
+          "step": scalar}
+    if tcfg.compress_grads:
+        sh["err_fb"] = psh
+    return sh
+
+
+def _metric_shardings(mesh):
+    scalar = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    return {k: scalar for k in
+            ("loss", "grad_norm", "lr", "ce", "lb", "z")}
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+               tcfg: TrainConfig, rules_name: str = ""):
+    """Build (lowered, lower_seconds) for one cell on one mesh."""
+    kind = shape.kind
+    rules = pick_rules(kind, shape, mesh, rules_name)
+    B, S = shape.global_batch, shape.seq_len
+
+    if cfg.family == "predictor":
+        from repro.core import predictor as pred
+        return pred.lower_cell(cfg, shape, mesh, rules, tcfg)
+
+    with use_mesh_and_rules(mesh, rules):
+        batch_abs = input_specs(cfg, shape, kind)
+        batch_sh = batch_shardings(batch_abs, mesh, rules)
+        t0 = time.time()
+        if kind == "train":
+            param_abs = tfm.abstract_params(cfg)
+            state_abs = abstract_train_state(param_abs, tcfg)
+            state_sh = _state_shardings(cfg, tcfg, mesh, rules)
+            step = make_train_step(
+                lambda p, b: tfm.loss_fn(p, b, cfg), tcfg)
+            # donate the train state: new params/opt alias the old buffers
+            # (without this the step holds TWO copies of the 400B states)
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, _metric_shardings(mesh)),
+                donate_argnums=0,
+            ).lower(state_abs, batch_abs)
+        elif kind == "prefill":
+            param_abs = tfm.abstract_params(cfg)
+            param_sh = tfm.param_shardings(cfg, mesh, rules)
+            # prefill emits decode-layout caches (seq-sharded)
+            cache_sh = tfm.cache_shardings(
+                cfg, B, S, mesh, LOGICAL_RULES_DECODE
+                if shape.name != "long_500k" else LOGICAL_RULES_DECODE_LONG)
+            lowered = jax.jit(
+                lambda p, b: tfm.prefill_step(p, b, cfg),
+                in_shardings=(param_sh, batch_sh),
+                out_shardings=(None, cache_sh),
+            ).lower(param_abs, batch_abs)
+        else:  # decode
+            param_abs = tfm.abstract_params(cfg)
+            param_sh = tfm.param_shardings(cfg, mesh, rules)
+            cache_abs = tfm.abstract_cache(cfg, B, S)
+            cache_sh = tfm.cache_shardings(cfg, B, S, mesh, rules)
+            scalar_abs = jax.ShapeDtypeStruct((), jax.numpy.int32)
+            lowered = jax.jit(
+                lambda p, b, c, pos: tfm.decode_step(p, b, cfg, c, pos),
+                in_shardings=(param_sh, batch_sh, cache_sh, None),
+                out_shardings=(None, cache_sh),
+            ).lower(param_abs, batch_abs, cache_abs, scalar_abs)
+        return lowered, time.time() - t0
+
+
+def analyze_compiled(compiled) -> dict:
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    hlo = compiled.as_text()
+    colls = rf.parse_collectives(hlo)
+    return {
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "cost": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+        },
+        "collectives": colls,
+        "hlo_bytes": len(hlo),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             optimizer: str = "sgdm", extrapolate: bool = True,
+             out_dir: Path = RESULTS_DIR, overrides: dict = None,
+             rules_name: str = "", microbatches: int = 1,
+             accum_dtype: str = "float32", opt_state_dtype: str = "float32",
+             tag: str = "") -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    mesh_name0 = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    if shape_name in cfg.skipped_shapes:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name0,
+               "skipped": cfg.skip_reason}
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{arch}__{shape_name}__{mesh_name0}.json").write_text(
+            json.dumps(rec, indent=1))
+        return rec
+    shape = cfg.shapes()[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    tcfg = TrainConfig(optimizer=optimizer, microbatches=microbatches,
+                       accum_dtype=accum_dtype,
+                       opt_state_dtype=opt_state_dtype)
+
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "kind": shape.kind, "chips": num_chips(mesh),
+              "optimizer": optimizer}
+    if rules_name:
+        record["rules"] = rules_name
+    if microbatches > 1:
+        record["microbatches"] = microbatches
+    if overrides:
+        record["overrides"] = {k: str(v) for k, v in overrides.items()}
+
+    with mesh:
+        lowered, t_lower = lower_cell(cfg, shape, mesh, tcfg=tcfg,
+                                      rules_name=rules_name)
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        record["lower_s"] = round(t_lower, 2)
+        record["compile_s"] = round(t_compile, 2)
+        record["scanned"] = analyze_compiled(compiled)
+        print(f"[{arch} x {shape_name} x {mesh_name}] compiled "
+              f"in {t_compile:.1f}s; memory:")
+        print(" ", record["scanned"]["memory"])
+
+        if extrapolate and cfg.family != "predictor":
+            # two unrolled mini-depth compiles -> per-layer costs
+            per_layer = {}
+            for r in (1, 2):
+                mini = cfg.replace(num_layers=r * cfg.pattern_len,
+                                   scan_layers=False)
+                lo, _ = lower_cell(mini, shape, mesh, tcfg=tcfg,
+                                   rules_name=rules_name)
+                per_layer[r] = analyze_compiled(lo.compile())
+            record["unrolled_r1"] = per_layer[1]
+            record["unrolled_r2"] = per_layer[2]
+            record["extrapolated"] = extrapolate_costs(
+                per_layer[1], per_layer[2], cfg.num_repeats)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fname = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    fname.write_text(json.dumps(record, indent=1))
+    return record
+
+
+def extrapolate_costs(r1: dict, r2: dict, repeats: int) -> dict:
+    """cost(R) = outside + R*body, from measurements at R=1 and R=2."""
+    def lin(a, b):
+        if a is None or b is None:
+            return None
+        body = b - a
+        outside = a - body
+        return outside + repeats * body
+
+    out = {"flops": lin(r1["cost"]["flops"], r2["cost"]["flops"]),
+           "bytes_accessed": lin(r1["cost"]["bytes_accessed"],
+                                 r2["cost"]["bytes_accessed"])}
+    colls = {}
+    keys = set(r1["collectives"]) | set(r2["collectives"])
+    for k in keys:
+        c1 = r1["collectives"].get(k, {"count": 0, "bytes": 0,
+                                       "wire_bytes": 0})
+        c2 = r2["collectives"].get(k, {"count": 0, "bytes": 0,
+                                       "wire_bytes": 0})
+        colls[k] = {kk: lin(float(c1[kk]), float(c2[kk]))
+                    for kk in ("count", "bytes", "wire_bytes")}
+    out["collectives"] = colls
+    out["wire_bytes_total"] = sum(v["wire_bytes"] for v in colls.values())
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--optimizer", default="sgdm")
+    ap.add_argument("--no-extrapolate", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    ap.add_argument("--rules", default="", help="'' (default) | fsdp")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--accum-dtype", default="float32")
+    ap.add_argument("--opt-state-dtype", default="float32")
+    ap.add_argument("--tag", default="", help="suffix for the result file")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override, e.g. capacity_factor=1.0")
+    args = ap.parse_args()
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = eval(v)  # noqa: S307 — CLI-local literals
+        except Exception:
+            pass
+        overrides[k] = v
+
+    out_dir = Path(args.out)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        cells = []
+        for name in ARCH_NAMES:
+            cfg = get_config(name)
+            for sname in cfg.shape_names:
+                cells.append((name, sname))
+            for sname in cfg.skipped_shapes:
+                cells.append((name, sname))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, sname in cells:
+        for mp in meshes:
+            mesh_name = "multipod_2x16x16" if mp else "pod_16x16"
+            suffix = f"__{args.tag}" if args.tag else ""
+            fname = out_dir / f"{arch}__{sname}__{mesh_name}{suffix}.json"
+            if args.skip_existing and fname.exists():
+                print(f"skip existing {fname.name}")
+                continue
+            try:
+                run_cell(arch, sname, mp, optimizer=args.optimizer,
+                         extrapolate=not args.no_extrapolate,
+                         out_dir=out_dir, rules_name=args.rules,
+                         microbatches=args.microbatches, tag=args.tag,
+                         accum_dtype=args.accum_dtype,
+                         opt_state_dtype=args.opt_state_dtype,
+                         overrides=overrides or None)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                print(f"FAILED {arch} x {sname} x {mesh_name}: {e}")
+                traceback.print_exc()
+                failures.append((arch, sname, mesh_name, str(e)))
+    if failures:
+        print("\n== FAILURES ==")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall requested dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

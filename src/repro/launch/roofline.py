@@ -1,0 +1,209 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Terms (per device, TPU v5e targets):
+    compute term    = HLO_FLOPs / peak_FLOPs      (197 TFLOP/s bf16)
+    memory term     = HLO_bytes / HBM_bw          (819 GB/s)
+    collective term = wire_bytes / link_bw        (~50 GB/s ICI)
+
+``cost_analysis()`` gives per-device FLOPs / bytes.  Collective bytes are NOT
+in cost_analysis: we parse the compiled HLO text and sum the tensor sizes of
+every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute, modeling ring-transfer wire bytes per op from the replica
+group size g:
+    all-reduce      2 * bytes * (g-1)/g
+    all-gather      out_bytes * (g-1)/g
+    reduce-scatter  out_bytes * (g-1)          (out = in/g)
+    all-to-all      bytes * (g-1)/g
+    collective-permute  bytes                  (single hop)
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, Tuple
+
+# v5e-like hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# e.g. "bf16[256,4096,128]{2,1,0}" -> (dtype, numel)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# replica_groups={{0,1},{2,3}} or replica_groups=[32,16]<=[512]
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _result_bytes(result_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(result_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))       # [num_groups, group_size]<=[total]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 2                          # unknown: conservative
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns {op_type: {count, bytes, wire_bytes}} per-device totals."""
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not stripped or "=" not in stripped:
+            continue
+        # match ' = <result-type> <opname>(' ; skip -done ops (size counted
+        # at -start) but count plain and -start forms.
+        m = re.search(r"=\s+(\(?[\w\[\],{}\s]*?\)?)\s+([\w-]+)\(", stripped)
+        if not m:
+            continue
+        result_str, opname = m.group(1), m.group(2)
+        base = None
+        for op in _COLL_OPS:
+            if opname == op or opname == op + "-start":
+                base = op
+                break
+        if base is None:
+            continue
+        nbytes = _result_bytes(result_str)
+        g = _group_size(stripped)
+        if base == "all-reduce":
+            wire = 2.0 * nbytes * (g - 1) / g
+        elif base == "all-gather":
+            wire = nbytes * (g - 1) / g
+        elif base == "reduce-scatter":
+            wire = float(nbytes) * (g - 1)
+        elif base == "all-to-all":
+            wire = nbytes * (g - 1) / g
+        else:  # collective-permute
+            wire = float(nbytes)
+        d = out.setdefault(base, {"count": 0, "bytes": 0.0,
+                                  "wire_bytes": 0.0})
+        d["count"] += 1
+        d["bytes"] += nbytes
+        d["wire_bytes"] += wire
+    return out
+
+
+# NB: ops inside a scan/while body execute once per iteration; the HLO text
+# lists them once.  We scale by trip count via the enclosing while loop's
+# induction bound, which XLA annotates in the loop condition. Robustly
+# extracting that is brittle; instead the model code reports its own
+# trip counts (num_repeats, microbatches) and we scale here.
+def scale_collectives(colls: dict, scale_inner: float,
+                      hlo_text: str = "") -> dict:
+    """Dry-run HLO keeps scan as while-loops: collectives inside the loop
+    body run num_repeats times.  We conservatively scale ALL collectives by
+    the layer trip count except those clearly outside (grad all-reduces are
+    also per-step, so this is a good first-order model)."""
+    out = {}
+    for k, v in colls.items():
+        out[k] = {kk: vv * (scale_inner if kk != "count" else 1)
+                  for kk, vv in v.items()}
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   wire_bytes_per_dev: float) -> dict:
+    t_compute = flops_per_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_per_dev / HBM_BW
+    t_coll = wire_bytes_per_dev / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    terms["dominant"] = dom
+    terms["roofline_fraction"] = bound / total if total > 0 else 0.0
+    return terms
+
+
+# --------------------------------------------------------------------------- #
+# Model FLOPs (the "useful work" yardstick)
+# --------------------------------------------------------------------------- #
+
+def param_counts(cfg) -> Tuple[int, int]:
+    """(total_params, active_params) from the ParamSpec tree."""
+    from repro.models.layers import ParamSpec
+    import jax
+
+    if cfg.family == "predictor":
+        from repro.core.predictor import model_specs
+    else:
+        from repro.models.transformer import model_specs
+    specs = model_specs(cfg)
+    total = 0
+    active = 0.0
+    k_over_e = (cfg.experts_per_token / cfg.num_experts
+                if cfg.num_experts else 1.0)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))[0]
+    for path, spec in flat:
+        n = math.prod(spec.shape)
+        total += n
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        is_expert = (cfg.num_experts and "ffn" in keys
+                     and len(spec.shape) >= 3
+                     and cfg.num_experts in spec.shape)
+        active += n * (k_over_e if is_expert else 1.0)
+    return total, int(active)
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference forward.
+
+    For the CAPSim predictor, D is the number of tokens flowing through
+    the two encoders: per clip, L_clip instructions x L_token tokens in
+    the instruction encoder plus (M context rows + L_clip vectors) in the
+    block encoder.  The embedding table is excluded from N (lookup, not
+    matmul)."""
+    _, active = param_counts(cfg)
+    if cfg.family == "predictor":
+        from repro.core.predictor import model_specs as pred_specs
+        from repro.models.layers import ParamSpec
+        import jax as _jax
+
+        specs = pred_specs(cfg)
+
+        def count(tree):
+            return sum(math.prod(s.shape) for s in
+                       _jax.tree_util.tree_leaves(
+                           tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+                       if isinstance(x := s, ParamSpec))
+
+        n_inst = count(specs["inst"])
+        n_block = count(specs["block"]) + count(specs["head"])
+        B, L_clip = shape.global_batch, shape.seq_len
+        tok_inst = B * L_clip * cfg.clip_tokens
+        tok_block = B * cfg.context_tokens
+        mult = 6.0 if kind == "train" else 2.0
+        return mult * (n_inst * tok_inst + n_block * tok_block)
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    tokens = shape.global_batch  # one decoded token per sequence
+    return 2.0 * active * tokens

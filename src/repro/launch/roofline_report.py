@@ -1,0 +1,157 @@
+"""Roofline report: results/dryrun/*.json -> per-cell terms + markdown.
+
+    PYTHONPATH=src python -m repro.launch.roofline_report [--mesh pod_16x16]
+
+Per (arch x shape) cell on the single-pod mesh:
+    compute_s    = HLO_FLOPs_per_device / 197 TFLOP/s
+    memory_s     = HLO_bytes_per_device / 819 GB/s
+    collective_s = wire_bytes_per_device / 50 GB/s
+    dominant     = argmax
+    model_ratio  = MODEL_FLOPS (6*N_active*D or 2*N_active*D) / HLO_FLOPs
+    mfu_bound    = ideal model-FLOPs time / dominant term  (what MFU the
+                   compiled program could reach if the dominant bottleneck
+                   perfectly overlapped the others)
+
+FLOPs/bytes come from the per-layer extrapolation (outside + R*body) when
+present — cost_analysis counts a scanned loop body once — falling back to
+the scanned artifact's numbers otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Optional
+
+from repro.configs import get_config
+from repro.launch import roofline as rf
+
+RESULTS_DIR = Path("results/dryrun")
+
+
+def _mem_traffic(memory: dict) -> float:
+    """HBM traffic estimate from the POST-FUSION buffer assignment: every
+    argument is read once, every output written once, every temp buffer
+    written + read (>=1 each).  Far closer to real traffic than XLA's
+    cost_analysis 'bytes accessed', which assumes zero fusion."""
+    a = memory.get("argument_bytes") or 0
+    o = memory.get("output_bytes") or 0
+    t = memory.get("temp_bytes") or 0
+    return float(a + o + 2 * t)
+
+
+def cell_terms(rec: dict) -> Optional[dict]:
+    if "skipped" in rec:
+        return None
+    chips = rec["chips"]
+    src = rec.get("extrapolated")
+    scanned = rec["scanned"]
+    layers_scale = None
+    if src and src.get("flops"):
+        flops = src["flops"]
+        bts_unfused = src["bytes_accessed"]
+        wire = src["wire_bytes_total"]
+        # per-layer memory-traffic extrapolation from the R=1/R=2 compiles
+        m1 = _mem_traffic(rec["unrolled_r1"]["memory"])
+        m2 = _mem_traffic(rec["unrolled_r2"]["memory"])
+        body = m2 - m1
+        cfg = get_config(rec["arch"])
+        traffic = max(m1 - body, 0.0) + cfg.num_repeats * max(body, 0.0)
+        traffic = max(traffic, _mem_traffic(scanned["memory"]))
+    else:
+        cfg = get_config(rec["arch"])
+        if cfg.family == "predictor":
+            # the two 4-layer scans count once in cost_analysis; their
+            # saved-for-backward buffers are already stacked (4, ...) in
+            # the buffer assignment, so traffic is NOT layer-scaled
+            layers_scale = 4
+            traffic = _mem_traffic(scanned["memory"])
+        else:
+            layers_scale = cfg.num_repeats
+            mem = dict(scanned["memory"])
+            traffic = ((mem.get("argument_bytes") or 0)
+                       + (mem.get("output_bytes") or 0)
+                       + 2 * (mem.get("temp_bytes") or 0) * layers_scale)
+        flops = (scanned["cost"]["flops"] or 0.0) * layers_scale
+        bts_unfused = (scanned["cost"]["bytes_accessed"] or 0.0) \
+            * layers_scale
+        wire = sum(v["wire_bytes"]
+                   for v in scanned["collectives"].values()) * layers_scale
+
+    terms = rf.roofline_terms(flops, traffic, wire)
+    terms["memory_unfused_s"] = bts_unfused / rf.HBM_BW if bts_unfused \
+        else 0.0
+
+    cfg = get_config(rec["arch"])
+    shape = cfg.shapes().get(rec["shape"])
+    model_fl = rf.model_flops(cfg, shape, rec["kind"]) if shape else 0.0
+    model_fl_dev = model_fl / chips
+    terms["model_flops_ratio"] = (model_fl_dev / flops) if flops else 0.0
+    ideal_s = model_fl_dev / rf.PEAK_FLOPS_BF16
+    bound = max(terms["compute_s"], terms["memory_s"],
+                terms["collective_s"])
+    terms["mfu_bound"] = ideal_s / bound if bound else 0.0
+    terms["flops"] = flops
+    terms["bytes"] = traffic
+    terms["wire_bytes"] = wire
+    terms["approx"] = layers_scale is not None
+    return terms
+
+
+def load_cells(mesh: str, tag: str = "") -> dict:
+    cells = {}
+    suffix = f"__{mesh}__{tag}.json" if tag else f"__{mesh}.json"
+    for f in sorted(RESULTS_DIR.glob(f"*{suffix}")):
+        rec = json.loads(f.read_text())
+        cells[(rec["arch"], rec["shape"])] = rec
+    return cells
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def report(mesh: str, markdown: bool = True, tag: str = "") -> str:
+    cells = load_cells(mesh, tag)
+    lines = []
+    if markdown:
+        lines.append(
+            "| arch | shape | compute | memory | collective | dominant "
+            "| model/HLO FLOPs | MFU bound |")
+        lines.append("|---|---|---|---|---|---|---|---|")
+    for (arch, shape), rec in sorted(cells.items()):
+        if "skipped" in rec:
+            lines.append(f"| {arch} | {shape} | — | — | — | skipped: "
+                         f"{rec['skipped'][:48]} | — | — |")
+            continue
+        t = cell_terms(rec)
+        star = "*" if t["approx"] else ""
+        lines.append(
+            f"| {arch} | {shape} | {fmt_s(t['compute_s'])} | "
+            f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+            f"{t['dominant'].replace('_s','')}{star} | "
+            f"{t['model_flops_ratio']:.2f} | {t['mfu_bound']*100:.0f}% |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod_16x16")
+    ap.add_argument("--tag", default="", help="variant suffix, e.g. fsdp")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    if args.json:
+        cells = load_cells(args.mesh, args.tag)
+        out = {f"{a}__{s}": cell_terms(r)
+               for (a, s), r in cells.items() if "skipped" not in r}
+        print(json.dumps(out, indent=1))
+    else:
+        print(report(args.mesh, tag=args.tag))
+
+
+if __name__ == "__main__":
+    main()

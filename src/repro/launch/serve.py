@@ -1,0 +1,114 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch capsim``.
+
+Runs the clip-parallel PredictorEngine over functional-sim requests from
+the synthetic suite (the CAPSim deployment), or a KV-cache decode loop for
+an LM-zoo arch (prefill + N decode steps on the smoke config).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ShapeConfig, get_config, get_smoke_config
+from repro.distributed.sharding import (
+    LOGICAL_RULES_DECODE, LOGICAL_RULES_PREDICTOR, use_mesh_and_rules)
+from repro.launch.mesh import make_test_mesh
+
+
+def serve_capsim(args) -> None:
+    from repro.core import context as ctx_mod
+    from repro.core import predictor
+    from repro.core import slicer as slicer_mod
+    from repro.core import standardize as std_mod
+    from repro.isa import funcsim, progen
+    from repro.serving.engine import PredictorEngine, Request
+
+    vocab = std_mod.build_vocab()
+    cfg = get_config("capsim").replace(dtype="float32")
+    params = predictor.init_params(cfg, jax.random.PRNGKey(0))
+    engine = PredictorEngine(params, cfg, batch_size=args.batch_size)
+
+    names = list(progen.TABLE_II)[: args.n_benchmarks]
+    t0 = time.time()
+    for rid, name in enumerate(names):
+        bench = progen.build_benchmark(name)
+        st = progen.fresh_state(bench)
+        trace, snaps, _ = funcsim.run(bench.program, args.interval_size,
+                                      state=st, snapshot_every=100)
+        clips = slicer_mod.slice_fixed([e.inst for e in trace], 100)
+        tok, ctx, mask = [], [], []
+        for i, c in enumerate(clips):
+            t, m = std_mod.encode_clip(c.insts, vocab, 128, 16)
+            tok.append(t)
+            mask.append(m)
+            ctx.append(ctx_mod.context_token_ids(
+                snaps[min(i, len(snaps) - 1)], vocab))
+        engine.submit(Request(rid, np.stack(tok), np.stack(ctx),
+                              np.stack(mask)))
+    results = engine.flush()
+    for name, r in zip(names, results):
+        print(f"  {name:16s} clips={r.n_clips:5d} "
+              f"predicted={r.total_cycles:12.0f} cycles")
+    print(f"served {len(results)} intervals in {time.time()-t0:.1f}s")
+
+
+def serve_lm(args) -> None:
+    from repro.launch.specs import random_batch
+    from repro.models import transformer as tfm
+
+    cfg = get_smoke_config(args.arch)
+    B, S = 2, 64
+    mesh = make_test_mesh()
+    with use_mesh_and_rules(mesh, LOGICAL_RULES_DECODE):
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        pre = random_batch(cfg, ShapeConfig("p", S // 2, B, "prefill"),
+                           "prefill")
+        logits, caches = jax.jit(
+            lambda p, b: tfm.prefill_step(p, b, cfg))(params, pre)
+        full = tfm.init_cache(cfg, B, S)
+        # place prefill caches into the fixed-size decode cache
+        def put(dst, src):
+            if src.ndim >= 3 and src.shape[2] == S // 2:
+                return jax.lax.dynamic_update_slice_in_dim(
+                    dst, src.astype(dst.dtype), 0, axis=2)
+            return src.astype(dst.dtype)
+        caches = jax.tree_util.tree_map(put, full, caches)
+        step = jax.jit(lambda p, b, c, pos: tfm.decode_step(p, b, cfg, c,
+                                                            pos))
+        tok = jnp.argmax(logits[:, -1:], -1)
+        if cfg.num_codebooks > 1:
+            tok = jnp.broadcast_to(tok[..., None],
+                                   (B, 1, cfg.num_codebooks))
+        t0 = time.time()
+        for i in range(args.decode_steps):
+            logits, caches = step(params, {"tokens": tok}, caches,
+                                  jnp.int32(S // 2 + i))
+            tok = jnp.argmax(logits[:, -1:], -1)
+            if cfg.num_codebooks > 1:
+                tok = jnp.broadcast_to(tok[..., None],
+                                       (B, 1, cfg.num_codebooks))
+        jax.block_until_ready(tok)
+        print(f"{args.arch}: prefill {S//2} tokens + "
+              f"{args.decode_steps} decode steps in {time.time()-t0:.1f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="capsim")
+    ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--interval-size", type=int, default=10_000)
+    ap.add_argument("--n-benchmarks", type=int, default=4)
+    ap.add_argument("--decode-steps", type=int, default=8)
+    args = ap.parse_args()
+    if args.arch == "capsim":
+        serve_capsim(args)
+    else:
+        serve_lm(args)
+
+
+if __name__ == "__main__":
+    main()

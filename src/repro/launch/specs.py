@@ -1,0 +1,115 @@
+"""Input specs (ShapeDtypeStruct stand-ins) + real random batches per
+(arch x shape).  The dry-run lowers against the abstract version; smoke tests
+and examples draw the concrete version.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig, ShapeConfig
+from repro.distributed.sharding import axis_rules
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _token_len(cfg: ArchConfig, seq_len: int) -> int:
+    return seq_len - (cfg.frontend_len if cfg.frontend != "none" else 0)
+
+
+def lm_batch_shapes(cfg: ArchConfig, shape: ShapeConfig, kind: str) -> dict:
+    """Abstract structure of one input batch (without caches)."""
+    B, S = shape.global_batch, shape.seq_len
+    if kind == "decode":
+        tok_shape = (B, 1, cfg.num_codebooks) if cfg.num_codebooks > 1 \
+            else (B, 1)
+        return {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+    S_tok = _token_len(cfg, S)
+    tok_shape = (B, S_tok, cfg.num_codebooks) if cfg.num_codebooks > 1 \
+        else (B, S_tok)
+    batch = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+    if cfg.frontend != "none":
+        batch["frontend"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_len, cfg.d_model), jnp.float32)
+    if cfg.mrope_sections:
+        batch["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    if kind == "train":
+        lab_shape = (B, S, cfg.num_codebooks) if cfg.num_codebooks > 1 \
+            else (B, S)
+        batch["labels"] = jax.ShapeDtypeStruct(lab_shape, jnp.int32)
+        batch["loss_mask"] = jax.ShapeDtypeStruct((B, S), jnp.float32)
+    return batch
+
+
+def capsim_batch_shapes(cfg: ArchConfig, shape: ShapeConfig,
+                        kind: str) -> dict:
+    B, L_clip = shape.global_batch, shape.seq_len
+    batch = {
+        "clip_tokens": jax.ShapeDtypeStruct(
+            (B, L_clip, cfg.clip_tokens), jnp.int32),
+        "context_tokens": jax.ShapeDtypeStruct(
+            (B, cfg.context_tokens), jnp.int32),
+        "clip_mask": jax.ShapeDtypeStruct((B, L_clip), jnp.float32),
+    }
+    if kind == "train":
+        batch["time"] = jax.ShapeDtypeStruct((B,), jnp.float32)
+    return batch
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, kind: str) -> dict:
+    if cfg.family == "predictor":
+        return capsim_batch_shapes(cfg, shape, kind)
+    return lm_batch_shapes(cfg, shape, kind)
+
+
+_BATCH_AXES = {
+    "tokens": ("batch",),
+    "labels": ("batch",),
+    "loss_mask": ("batch",),
+    "frontend": ("batch",),
+    "clip_tokens": ("batch",),
+    "context_tokens": ("batch",),
+    "clip_mask": ("batch",),
+    "time": ("batch",),
+    "positions": (None, "batch"),  # (3, B, S): batch is dim 1
+}
+
+
+def batch_shardings(batch_abs: dict, mesh, rules) -> dict:
+    out = {}
+    for k, v in batch_abs.items():
+        lead = _BATCH_AXES[k]
+        logical = lead + (None,) * (len(v.shape) - len(lead))
+        out[k] = NamedSharding(mesh, axis_rules(logical, rules=rules,
+                                                mesh=mesh))
+    return out
+
+
+def random_batch(cfg: ArchConfig, shape: ShapeConfig, kind: str,
+                 seed: int = 0) -> dict:
+    """Concrete random batch matching input_specs (smoke tests/examples)."""
+    rng = np.random.RandomState(seed)
+    abs_batch = input_specs(cfg, shape, kind)
+    out = {}
+    for k, v in abs_batch.items():
+        if v.dtype == jnp.int32:
+            hi = cfg.vocab_size if "token" in k or k == "labels" else shape.seq_len
+            out[k] = jnp.asarray(
+                rng.randint(0, max(2, hi), size=v.shape), jnp.int32)
+        else:
+            if k == "loss_mask" or k == "clip_mask":
+                out[k] = jnp.ones(v.shape, jnp.float32)
+            elif k == "time":
+                out[k] = jnp.asarray(
+                    rng.uniform(50.0, 500.0, size=v.shape), jnp.float32)
+            else:
+                out[k] = jnp.asarray(
+                    rng.randn(*v.shape).astype(np.float32))
+    if "positions" in out:
+        B, S = shape.global_batch, shape.seq_len
+        pos = np.broadcast_to(np.arange(S, dtype=np.int32), (B, S))
+        out["positions"] = jnp.asarray(
+            np.broadcast_to(pos, (3, B, S)).copy())
+    return out

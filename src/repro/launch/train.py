@@ -1,0 +1,146 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``.
+
+Two families share this entry point:
+  - ``--arch capsim`` (default): build the clip dataset from the synthetic
+    suite, train the attention predictor (paper §VI-B: SGD momentum 0.9,
+    lr 1e-3, MAPE), with checkpoint/restart via ResilientTrainer.
+  - any LM-zoo arch: train the (smoke-scaled) LM on synthetic tokens —
+    the end-to-end driver for the assigned-architecture runtime.
+
+On a real pod this process runs once per host (jax.distributed initializes
+from the cluster env); the mesh comes from launch/mesh.py and all shardings
+from the logical rules.  On this CPU host it runs single-process.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.configs import ShapeConfig, get_config, get_smoke_config
+from repro.distributed.fault_tolerance import ResilientTrainer
+from repro.distributed.sharding import (
+    LOGICAL_RULES_PREDICTOR, LOGICAL_RULES_TRAIN, use_mesh_and_rules)
+from repro.launch.mesh import make_test_mesh
+from repro.training.train_loop import (
+    TrainConfig, init_train_state, make_train_step)
+
+
+def train_capsim(args) -> None:
+    from repro.core import predictor
+    from repro.core.standardize import build_vocab
+    from repro.data.dataset import (BuildConfig, batches, build_dataset,
+                                    split_dataset)
+    from repro.isa.progen import TABLE_II
+
+    vocab = build_vocab()
+    cfg = get_config("capsim").replace(dtype="float32")
+    if args.smoke:
+        cfg = get_smoke_config("capsim")
+    bcfg = BuildConfig(interval_size=args.interval_size,
+                       warmup=args.interval_size // 10,
+                       max_checkpoints=args.max_checkpoints)
+    names = list(TABLE_II)[: args.n_benchmarks]
+    print(f"building clip dataset from {len(names)} benchmarks ...")
+    ds = build_dataset(names, bcfg, vocab, verbose=True)
+    train, val, _ = split_dataset(ds)
+    print(f"clips: train={len(train)} val={len(val)}")
+
+    tcfg = TrainConfig(optimizer="sgdm", base_lr=args.lr,
+                       warmup_steps=min(20, args.steps // 10),
+                       total_steps=args.steps)
+    mesh = make_test_mesh()
+    with use_mesh_and_rules(mesh, LOGICAL_RULES_PREDICTOR):
+        params = predictor.init_params(cfg, jax.random.PRNGKey(args.seed))
+        state = init_train_state(params, tcfg)
+        step = jax.jit(make_train_step(
+            lambda p, b: predictor.mape_loss(p, b, cfg), tcfg))
+
+        ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+        trainer = ResilientTrainer(
+            step_fn=lambda s, b: step(
+                s, {k: jnp.asarray(v) for k, v in b.items()}),
+            ckpt=ckpt, save_every=args.save_every,
+            log_fn=lambda i, m: print(
+                f"  step {i:5d} mape {m['loss']:.4f} lr {m['lr']:.2e}"))
+        trainer.install_signal_handler()
+        t0 = time.time()
+        state, step_n = trainer.run(
+            state, batches(train, args.batch_size, epochs=10_000),
+            total_steps=args.steps)
+        print(f"trained to step {step_n} in {time.time()-t0:.0f}s")
+
+        # validation MAPE
+        errs = []
+        eval_bs = max(1, min(args.batch_size, len(val)))
+        for b in batches(val, eval_bs, shuffle=False):
+            bj = {k: jnp.asarray(v) for k, v in b.items()}
+            pred = predictor.predict_step(state["params"], bj, cfg)
+            fact = np.maximum(np.asarray(b["time"]), 1.0)
+            errs.extend(np.abs(np.asarray(pred) - fact) / fact)
+        if errs:
+            print(f"validation MAPE: {float(np.mean(errs)):.4f} "
+                  f"(accuracy {100*(1-float(np.mean(errs))):.1f}%)")
+
+
+def train_lm(args) -> None:
+    from repro.launch.specs import random_batch
+    from repro.models import transformer as tfm
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    shape = ShapeConfig("train", args.seq_len, args.batch_size, "train")
+    tcfg = TrainConfig(optimizer="adamw", base_lr=args.lr,
+                       warmup_steps=min(20, args.steps // 10),
+                       total_steps=args.steps)
+    mesh = make_test_mesh()
+    with use_mesh_and_rules(mesh, LOGICAL_RULES_TRAIN):
+        params = tfm.init_params(cfg, jax.random.PRNGKey(args.seed))
+        n = sum(p.size for p in jax.tree_util.tree_leaves(params))
+        print(f"{args.arch}: {n/1e6:.1f}M params (smoke={args.smoke})")
+        state = init_train_state(params, tcfg)
+        step = jax.jit(make_train_step(
+            lambda p, b: tfm.loss_fn(p, b, cfg), tcfg))
+        ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+        trainer = ResilientTrainer(
+            step_fn=step, ckpt=ckpt, save_every=args.save_every,
+            log_fn=lambda i, m: print(
+                f"  step {i:5d} loss {m['loss']:.4f} ce {m['ce']:.4f}"))
+
+        def batch_iter():
+            i = 0
+            while True:
+                yield random_batch(cfg, shape, "train", seed=i)
+                i += 1
+
+        state, step_n = trainer.run(state, batch_iter(),
+                                    total_steps=args.steps)
+        print(f"trained to step {step_n}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="capsim")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", default="results/ckpt")
+    ap.add_argument("--save-every", type=int, default=100)
+    ap.add_argument("--interval-size", type=int, default=10_000)
+    ap.add_argument("--max-checkpoints", type=int, default=2)
+    ap.add_argument("--n-benchmarks", type=int, default=8)
+    args = ap.parse_args()
+    if args.arch == "capsim":
+        train_capsim(args)
+    else:
+        train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Shared building blocks: param specs, norms, activations, rotary embeddings.
+
+Parameters are described by ``ParamSpec`` trees so the same definition yields
+(a) materialized params for execution, (b) ShapeDtypeStructs for AOT lowering
+(the multi-pod dry-run never allocates), and (c) NamedShardings from logical
+axis names.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    std: float = 0.0          # 0.0 -> zeros; <0 -> ones; >0 -> normal(std)
+    dtype: Optional[str] = None  # override param dtype (e.g. fp32 norms)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (
+            self.shape, self.logical_axes)
+
+
+def dense_spec(d_in: int, d_out: int, axes, scale: float = 1.0) -> ParamSpec:
+    return ParamSpec((d_in, d_out), axes, std=scale / math.sqrt(d_in))
+
+
+def is_spec_tree(t) -> bool:
+    return any(isinstance(l, ParamSpec) for l in jax.tree_util.tree_leaves(
+        t, is_leaf=lambda x: isinstance(x, ParamSpec)))
+
+
+def _map_specs(fn, specs):
+    return jax.tree_util.tree_map(
+        fn, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_from_specs(specs, key, param_dtype: str):
+    flat, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for spec, k in zip(flat, keys):
+        dt = jnp.dtype(spec.dtype or param_dtype)
+        if spec.std == 0.0:
+            leaves.append(jnp.zeros(spec.shape, dt))
+        elif spec.std < 0:
+            leaves.append(jnp.ones(spec.shape, dt))
+        else:
+            leaves.append(
+                (jax.random.normal(k, spec.shape, jnp.float32) * spec.std
+                 ).astype(dt))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def abstract_from_specs(specs, param_dtype: str):
+    return _map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or param_dtype)),
+        specs)
+
+
+def shardings_from_specs(specs, mesh, rules):
+    return _map_specs(
+        lambda s: logical_sharding(s.logical_axes, mesh=mesh, rules=rules),
+        specs)
+
+
+def specs_with_leading_stack(specs, n: int):
+    """Prepend a scanned 'layers' dimension of size n to every spec."""
+    return _map_specs(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.logical_axes,
+                            std=s.std, dtype=s.dtype),
+        specs)
+
+
+# --------------------------------------------------------------------------- #
+# Norms / activations
+# --------------------------------------------------------------------------- #
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dt)
+
+
+def nonparam_layer_norm(x, eps: float = 1e-6):
+    """OLMo's non-parametric LayerNorm: standardize, no learnable affine."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def norm(x, params, cfg):
+    if cfg.nonparametric_norm:
+        return nonparam_layer_norm(x)
+    return rms_norm(x, params["scale"])
+
+
+def norm_spec(cfg) -> dict:
+    if cfg.nonparametric_norm:
+        return {}
+    return {"scale": ParamSpec((cfg.d_model,), ("embed",), std=0.0,
+                               dtype="float32")}
+
+
+def activation(h, kind: str):
+    if kind == "squared_relu":
+        r = jax.nn.relu(h)
+        return r * r
+    if kind == "gelu":
+        return jax.nn.gelu(h)
+    if kind in ("silu", "swiglu"):
+        return jax.nn.silu(h)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------- #
+# Rotary embeddings (standard + M-RoPE)
+# --------------------------------------------------------------------------- #
+
+def _rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float,
+               mrope_sections: Tuple[int, ...] = ()):
+    """x: (B, S, H, D).  positions: (B, S) int32, or (3, B, S) for M-RoPE.
+
+    M-RoPE (Qwen2-VL): the head_dim/2 frequency slots are split into
+    sections (t, h, w); section i rotates by position stream i.
+    """
+    B, S, H, D = x.shape
+    half = D // 2
+    freqs = _rope_freqs(D, theta)                       # (half,)
+    if mrope_sections:
+        assert sum(mrope_sections) == half, (mrope_sections, half)
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        pos_parts = []
+        for i, sec in enumerate(mrope_sections):
+            pos_parts.append(
+                jnp.broadcast_to(positions[i][..., None], (B, S, sec)))
+        pos = jnp.concatenate(pos_parts, axis=-1)       # (B, S, half)
+        angle = pos.astype(jnp.float32) * freqs[None, None, :]
+    else:
+        if positions.ndim == 3:
+            positions = positions[0]
+        angle = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,half)
+    cos = jnp.cos(angle)[:, :, None, :]
+    sin = jnp.sin(angle)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(dt)

@@ -1,0 +1,218 @@
+"""Mamba2 (SSD — state-space duality) mixer block.
+
+Faithful to the SSD formulation of arXiv:2405.21060: a chunked algorithm that
+computes the within-chunk part as a masked quadratic attention-like product
+and carries cross-chunk state through an associative recurrence.  The same
+math backs three paths:
+
+  train/prefill  chunked SSD over the full sequence (jnp here; the Pallas
+                 kernel in kernels/ssd implements the same chunk computation
+                 with VMEM tiling and is validated against kernels/ssd/ref.py)
+  decode         O(1) single-step state update — this is what makes the
+                 long_500k cells linear-cost.
+
+Sharding: d_inner (and therefore the SSD head axis) is tensor-parallel over
+'model'; the B/C state projections are small and replicated (analogous to GQA
+KV heads); the cross-chunk state (B, heads, head_dim, d_state) shards over
+batch + heads.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_logical
+from repro.models.layers import ParamSpec, dense_spec, rms_norm
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads
+
+
+def ssm_specs(cfg) -> dict:
+    d = cfg.d_model
+    d_inner, nheads = ssm_dims(cfg)
+    ds, w = cfg.ssm_state, cfg.ssm_conv_width
+    return {
+        "wz": dense_spec(d, d_inner, ("embed", "ssm_inner")),
+        "wx": dense_spec(d, d_inner, ("embed", "ssm_inner")),
+        "wB": dense_spec(d, ds, ("embed", None)),
+        "wC": dense_spec(d, ds, ("embed", None)),
+        "wdt": dense_spec(d, nheads, ("embed", None)),
+        "conv_x": ParamSpec((w, d_inner), (None, "ssm_inner"), std=0.5),
+        "conv_B": ParamSpec((w, ds), (None, None), std=0.5),
+        "conv_C": ParamSpec((w, ds), (None, None), std=0.5),
+        "A_log": ParamSpec((nheads,), (None,), std=-1.0, dtype="float32"),
+        "dt_bias": ParamSpec((nheads,), (None,), std=0.0, dtype="float32"),
+        "D": ParamSpec((nheads,), (None,), std=-1.0, dtype="float32"),
+        "gate_norm": ParamSpec((d_inner,), ("ssm_inner",), std=0.0,
+                               dtype="float32"),
+        "out_proj": dense_spec(d_inner, d, ("ssm_inner", "embed")),
+    }
+
+
+def _shift_conv(x, w, cache=None):
+    """Causal depthwise conv of width W via shifted adds.
+
+    x: (B, S, C); w: (W, C).  With a decode cache (B, W-1, C) holding the
+    previous W-1 inputs, S may be 1.  Returns (y, new_cache).
+    """
+    W = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros_like(x[:, : W - 1])
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    y = sum(xp[:, i : i + S] * w[i][None, None, :] for i in range(W))
+    new_cache = xp[:, -(W - 1):] if W > 1 else xp[:, :0]
+    return jax.nn.silu(y), new_cache
+
+
+def _segsum(dA):
+    """dA: (..., Q).  Returns (..., Q, Q) with out[i, j] = sum_{j<t<=i} dA_t
+    for i >= j, -inf elsewhere (log of the decay matrix L)."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # seg_i - seg_j
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, B, C, A, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x:  (Bt, S, H, P)   inputs per head
+    dt: (Bt, S, H)      positive step sizes (already softplus'd)
+    B:  (Bt, S, N)      input->state projection (single group, broadcast to H)
+    C:  (Bt, S, N)      state->output projection
+    A:  (H,)            negative per-head decay rate
+    Returns (y (Bt,S,H,P), final_state (Bt,H,P,N)).
+    """
+    Bt, S, H, Pd = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    if S % Q != 0:
+        Q = S
+    NC = S // Q
+
+    xc = x.reshape(Bt, NC, Q, H, Pd)
+    dtc = dt.reshape(Bt, NC, Q, H).astype(jnp.float32)
+    Bc = B.reshape(Bt, NC, Q, N)
+    Cc = C.reshape(Bt, NC, Q, N)
+    dA = dtc * A[None, None, None, :]                   # (Bt, NC, Q, H) <= 0
+
+    if init_state is None:
+        init_state = jnp.zeros((Bt, H, Pd, N), jnp.float32)
+
+    def body(state, inputs):
+        xq, dtq, Bq, Cq, dAq = inputs                   # chunk-local
+        # (Bt, H, Q) time-major per head
+        dAh = jnp.moveaxis(dAq, -1, 1)                  # (Bt, H, Q)
+        L = jnp.exp(_segsum(dAh))                       # (Bt, H, Q, Q)
+        seg = jnp.cumsum(dAh, axis=-1)                  # (Bt, H, Q)
+        # within-chunk (quadratic in Q)
+        CB = jnp.einsum("bin,bjn->bij", Cq, Bq,
+                        preferred_element_type=jnp.float32)
+        scores = CB[:, None] * L                        # (Bt, H, Q, Q)
+        xdt = xq * dtq[..., None]                       # (Bt, Q, H, P)
+        y_diag = jnp.einsum("bhij,bjhp->bihp", scores.astype(xq.dtype), xdt)
+        # contribution of incoming state
+        y_off = jnp.einsum("bin,bhpn->bihp", Cq, state.astype(xq.dtype)) \
+            * jnp.exp(seg).transpose(0, 2, 1)[..., None].astype(xq.dtype)
+        # new state
+        decay_to_end = jnp.exp(seg[..., -1:] - seg)     # (Bt, H, Q)
+        w = (dtq.transpose(0, 2, 1) * decay_to_end)     # (Bt, H, Q)
+        new_state = state * jnp.exp(seg[..., -1])[..., None, None] + \
+            jnp.einsum("bjn,bhj,bjhp->bhpn", Bq.astype(jnp.float32),
+                       w, xq.astype(jnp.float32))
+        return new_state, y_diag + y_off
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0),
+          jnp.moveaxis(dA, 1, 0))
+    final_state, yc = jax.lax.scan(body, init_state, xs)
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bt, S, H, Pd)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(x, dt, B, C, A, state):
+    """One-token SSD update.  x: (Bt, H, P); dt: (Bt, H); B/C: (Bt, N);
+    state: (Bt, H, P, N) fp32.  Returns (y, new_state)."""
+    dA = jnp.exp(dt.astype(jnp.float32) * A[None, :])   # (Bt, H)
+    upd = jnp.einsum("bn,bh,bhp->bhpn", B.astype(jnp.float32),
+                     dt.astype(jnp.float32), x.astype(jnp.float32))
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(jnp.float32), new_state)
+    return y.astype(x.dtype), new_state
+
+
+def init_ssm_cache_specs(cfg, batch: int) -> dict:
+    d_inner, nheads = ssm_dims(cfg)
+    ds, w = cfg.ssm_state, cfg.ssm_conv_width
+    return {
+        "conv_x": ParamSpec((batch, w - 1, d_inner),
+                            ("cache_batch", None, "act_ssm")),
+        "conv_B": ParamSpec((batch, w - 1, ds), ("cache_batch", None, None)),
+        "conv_C": ParamSpec((batch, w - 1, ds), ("cache_batch", None, None)),
+        "state": ParamSpec((batch, nheads, cfg.ssm_head_dim, ds),
+                           ("cache_batch", "act_ssm", None, None),
+                           dtype="float32"),
+    }
+
+
+def ssm_forward(params, x, cfg, mode: str,
+                cache: Optional[dict] = None) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (Bt, S, d).  Returns (out (Bt, S, d), updated cache or None)."""
+    Bt, S, d = x.shape
+    d_inner, nheads = ssm_dims(cfg)
+    Pd = cfg.ssm_head_dim
+
+    z = jnp.einsum("bsd,di->bsi", x, params["wz"])
+    xin = jnp.einsum("bsd,di->bsi", x, params["wx"])
+    Bp = jnp.einsum("bsd,dn->bsn", x, params["wB"])
+    Cp = jnp.einsum("bsd,dn->bsn", x, params["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["wdt"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    xin, cx = _shift_conv(xin, params["conv_x"],
+                          None if cache is None else cache["conv_x"])
+    Bp, cB = _shift_conv(Bp, params["conv_B"],
+                         None if cache is None else cache["conv_B"])
+    Cp, cC = _shift_conv(Cp, params["conv_C"],
+                         None if cache is None else cache["conv_C"])
+
+    xh = xin.reshape(Bt, S, nheads, Pd)
+    xh = shard_logical(xh, "batch", "act_seq", "act_ssm", None)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and S == 1
+        y, new_state = ssd_decode_step(
+            xh[:, 0], dt[:, 0], Bp[:, 0], Cp[:, 0], A, cache["state"])
+        y = y[:, None]                                   # (Bt, 1, H, P)
+        new_cache = {"conv_x": cx, "conv_B": cB, "conv_C": cC,
+                     "state": new_state}
+    else:
+        if cfg.ssm_impl == "pallas":
+            from repro.kernels.ssd import ops as ssd_ops
+            y, final_state = ssd_ops.ssd_scan(xh, dt, Bp, Cp, A,
+                                              cfg.ssm_chunk)
+        else:
+            y, final_state = ssd_chunked(xh, dt, Bp, Cp, A, cfg.ssm_chunk)
+        if mode == "prefill":
+            new_cache = {"conv_x": cx, "conv_B": cB, "conv_C": cC,
+                         "state": final_state}
+
+    y = y + xh * params["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bt, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["gate_norm"])
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"]).astype(x.dtype)
+    return shard_logical(out, "batch", "act_seq", "act_embed"), new_cache

@@ -1,0 +1,347 @@
+"""Unified decoder LM covering all assigned architectures.
+
+One model definition, driven entirely by ArchConfig:
+  - per-layer schedule cfg.pattern(): mixer in {attn, ssm} x ffn in
+    {dense, moe, none} (jamba interleave, llama4 alternation, ...)
+  - layers execute under jax.lax.scan over ``num_repeats`` stacked
+    super-blocks of ``pattern_len`` layers — keeps HLO size O(pattern_len)
+    regardless of depth (72-layer jamba compiles as 9 scanned repeats of 8)
+  - modality frontends (vlm/audio) are precomputed embeddings prepended to
+    the token embeddings (stub per assignment)
+  - three entry modes: 'train' (loss), 'prefill' (logits + caches),
+    'decode' (one token against seq-sharded caches / SSM states)
+
+Params are ParamSpec trees (models/layers.py): the dry-run lowers against
+ShapeDtypeStructs without ever allocating 1T-parameter models.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_logical
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as ssm_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    ParamSpec,
+    abstract_from_specs,
+    activation,
+    dense_spec,
+    init_from_specs,
+    norm,
+    norm_spec,
+    shardings_from_specs,
+    specs_with_leading_stack,
+)
+
+# --------------------------------------------------------------------------- #
+# Param specs
+# --------------------------------------------------------------------------- #
+
+
+def _ffn_specs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.activation == "swiglu":
+        return {
+            "w_gate": dense_spec(d, f, ("embed", "mlp")),
+            "w_up": dense_spec(d, f, ("embed", "mlp")),
+            "w_down": dense_spec(f, d, ("mlp", "embed")),
+        }
+    return {
+        "w_up": dense_spec(d, f, ("embed", "mlp")),
+        "w_down": dense_spec(f, d, ("mlp", "embed")),
+    }
+
+
+def _block_specs(cfg, mixer: str, ffn: str) -> dict:
+    specs = {"norm1": norm_spec(cfg)}
+    specs["mixer"] = (attn_mod.attn_specs(cfg) if mixer == "attn"
+                      else ssm_mod.ssm_specs(cfg))
+    if ffn == "dense":
+        specs["norm2"] = norm_spec(cfg)
+        specs["ffn"] = _ffn_specs(cfg)
+    elif ffn == "moe":
+        specs["norm2"] = norm_spec(cfg)
+        specs["ffn"] = moe_mod.moe_specs(cfg)
+    return specs
+
+
+def padded_vocab(cfg) -> int:
+    """Embedding tables pad the vocab up to a TP-shardable multiple (16 =
+    the 'model' axis; standard MaxText-style table padding).  Padded logit
+    columns are masked to -inf in _logits so they never receive probability
+    mass; token ids stay < cfg.vocab_size so gathers are unaffected."""
+    m = 16
+    return (cfg.vocab_size + m - 1) // m * m
+
+
+def model_specs(cfg) -> dict:
+    d, V = cfg.d_model, padded_vocab(cfg)
+    emb_std = 1.0 / math.sqrt(d)
+    specs: dict = {}
+    # Tied tables serve as the unembedding too: shard their vocab dim over
+    # 'model' so the logits matmul emits vocab-sharded logits directly
+    # (otherwise XLA materializes full-vocab logits per device and
+    # all-gathers their f32 gradient).  Untied input tables stay
+    # model-replicated ('vocab_in' -> None) for a cheap lookup.
+    vocab_axis = "vocab" if cfg.tie_embeddings else "vocab_in"
+    if cfg.num_codebooks > 1:
+        specs["embed"] = ParamSpec((cfg.num_codebooks, V, d),
+                                   ("codebook", vocab_axis, "embed"),
+                                   std=emb_std)
+    else:
+        specs["embed"] = ParamSpec((V, d), (vocab_axis, "embed"), std=emb_std)
+    blocks = {}
+    for j, (mixer, ffn) in enumerate(cfg.pattern()):
+        blocks[f"i{j}"] = specs_with_leading_stack(
+            _block_specs(cfg, mixer, ffn), cfg.num_repeats)
+    specs["blocks"] = blocks
+    specs["final_norm"] = norm_spec(cfg)
+    if not cfg.tie_embeddings:
+        if cfg.num_codebooks > 1:
+            specs["unembed"] = ParamSpec((cfg.num_codebooks, d, V),
+                                         ("codebook", "embed", "vocab"),
+                                         std=emb_std)
+        else:
+            specs["unembed"] = dense_spec(d, V, ("embed", "vocab"))
+    return specs
+
+
+def cache_specs(cfg, batch: int, max_seq: int) -> dict:
+    """Stacked per-layer decode caches (leading num_repeats dim)."""
+    blocks = {}
+    for j, (mixer, _) in enumerate(cfg.pattern()):
+        cs = (attn_mod.init_cache_specs(cfg, batch, max_seq)
+              if mixer == "attn" else ssm_mod.init_ssm_cache_specs(cfg, batch))
+        blocks[f"i{j}"] = specs_with_leading_stack(cs, cfg.num_repeats)
+    return blocks
+
+
+def init_params(cfg, key):
+    return init_from_specs(model_specs(cfg), key, cfg.param_dtype)
+
+
+def abstract_params(cfg):
+    return abstract_from_specs(model_specs(cfg), cfg.param_dtype)
+
+
+def param_shardings(cfg, mesh, rules):
+    return shardings_from_specs(model_specs(cfg), mesh, rules)
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None):
+    dt = dtype or cfg.dtype
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype or dt)),
+        cache_specs(cfg, batch, max_seq),
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def abstract_cache(cfg, batch: int, max_seq: int, dtype=None):
+    dt = dtype or cfg.dtype
+    return abstract_from_specs(cache_specs(cfg, batch, max_seq), dt)
+
+
+def cache_shardings(cfg, batch: int, max_seq: int, mesh, rules):
+    return shardings_from_specs(cache_specs(cfg, batch, max_seq), mesh, rules)
+
+
+# --------------------------------------------------------------------------- #
+# Forward
+# --------------------------------------------------------------------------- #
+
+
+def _embed_tokens(params, tokens, cfg):
+    emb = params["embed"]
+    if cfg.num_codebooks > 1:
+        # tokens: (B, S, C); sum codebook embeddings (MusicGen)
+        parts = [emb[c][tokens[..., c]] for c in range(cfg.num_codebooks)]
+        x = sum(parts)
+    else:
+        x = emb[tokens]
+    return x.astype(cfg.dtype)
+
+
+def _block_forward(bparams, x, positions, cfg, mixer, ffn, mode,
+                   cache, cache_pos):
+    h = norm(x, bparams["norm1"], cfg)
+    if mixer == "attn":
+        y, new_cache = attn_mod.attention_forward(
+            bparams["mixer"], h, positions, cfg, mode, cache, cache_pos)
+    else:
+        y, new_cache = ssm_mod.ssm_forward(bparams["mixer"], h, cfg, mode,
+                                           cache)
+    x = x + y
+    lb = jnp.zeros((), jnp.float32)
+    z = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h = norm(x, bparams["norm2"], cfg)
+        if ffn == "moe":
+            y, lb, z = moe_mod.moe_forward(bparams["ffn"], h, cfg)
+        else:
+            p = bparams["ffn"]
+            up = jnp.einsum("bsd,df->bsf", h, p["w_up"])
+            if cfg.activation == "swiglu":
+                gate = jnp.einsum("bsd,df->bsf", h, p["w_gate"])
+                a = jax.nn.silu(gate) * up
+            else:
+                a = activation(up, cfg.activation)
+            a = shard_logical(a, "batch", "act_seq", "act_mlp")
+            y = jnp.einsum("bsf,fd->bsd", a, p["w_down"])
+            y = shard_logical(y, "batch", "act_seq", "act_embed")
+        x = x + y
+    return x, new_cache, lb, z
+
+
+def _stack_forward(params, x, positions, cfg, mode: str,
+                   caches=None, cache_pos=None):
+    """Scan over num_repeats super-blocks."""
+    pattern = cfg.pattern()
+
+    def body(carry, xs):
+        x, lb_sum, z_sum = carry
+        bparams, bcaches = xs
+        new_caches = {}
+        for j, (mixer, ffn) in enumerate(pattern):
+            cache_j = None if bcaches is None else bcaches[f"i{j}"]
+            x, nc, lb, z = _block_forward(
+                bparams[f"i{j}"], x, positions, cfg, mixer, ffn, mode,
+                cache_j, cache_pos)
+            new_caches[f"i{j}"] = nc
+            lb_sum = lb_sum + lb
+            z_sum = z_sum + z
+        if all(v is None for v in new_caches.values()):
+            new_caches = None
+        return (x, lb_sum, z_sum), new_caches
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.scan_layers:
+        (x, lb, z), new_caches = jax.lax.scan(
+            body, (x, zero, zero), (params["blocks"], caches))
+        return x, new_caches, lb, z
+
+    # Unrolled path (used by the dry-run's per-layer cost extrapolation and
+    # available as a perf knob: unrolling exposes cross-layer overlap to XLA).
+    carry = (x, zero, zero)
+    cache_list = []
+    for r in range(cfg.num_repeats):
+        bparams = jax.tree_util.tree_map(lambda a: a[r], params["blocks"])
+        bcaches = (None if caches is None else
+                   jax.tree_util.tree_map(lambda a: a[r], caches))
+        carry, nc = body(carry, (bparams, bcaches))
+        cache_list.append(nc)
+    (x, lb, z) = carry
+    if cache_list and cache_list[0] is not None:
+        new_caches = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *cache_list)
+    else:
+        new_caches = None
+    return x, new_caches, lb, z
+
+
+def _logits(params, x, cfg):
+    if cfg.tie_embeddings:
+        emb = params["embed"]
+        if cfg.num_codebooks > 1:
+            logits = jnp.einsum("bsd,cvd->bscv", x, emb)
+        else:
+            logits = jnp.einsum("bsd,vd->bsv", x, emb)
+    else:
+        if cfg.num_codebooks > 1:
+            logits = jnp.einsum("bsd,cdv->bscv", x, params["unembed"])
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    V_pad = logits.shape[-1]
+    if V_pad != cfg.vocab_size:
+        # mask padded columns: never any probability mass, argmax-safe
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        logits = jnp.where(iota < cfg.vocab_size, logits,
+                           jnp.asarray(-1e30, logits.dtype))
+    if cfg.num_codebooks > 1:
+        return shard_logical(logits, "batch", "act_seq", None, "act_vocab")
+    return shard_logical(logits, "batch", "act_seq", "act_vocab")
+
+
+def forward(params, batch, cfg, mode: str, caches=None, cache_pos=None):
+    """Returns (logits, new_caches, lb_loss, z_loss).
+
+    batch keys: 'tokens' (B,S[,C]); optional 'positions' ((B,S) or (3,B,S));
+    optional 'frontend' (B,F,d_model) precomputed modality embeddings.
+    """
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens, cfg)
+    if cfg.frontend != "none" and "frontend" in batch:
+        fe = batch["frontend"].astype(cfg.dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+    B, S = x.shape[0], x.shape[1]
+    if "positions" in batch:
+        positions = batch["positions"]
+    elif mode == "decode":
+        shape = (3, B, 1) if cfg.mrope_sections else (B, 1)
+        positions = jnp.full(shape, cache_pos, jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = shard_logical(x, "batch", "act_seq", "act_embed")
+
+    x, new_caches, lb, z = _stack_forward(
+        params, x, positions, cfg, mode, caches, cache_pos)
+
+    x = norm(x, params["final_norm"], cfg)
+    logits = _logits(params, x, cfg)
+    return logits, new_caches, lb, z
+
+
+# --------------------------------------------------------------------------- #
+# Losses / steps
+# --------------------------------------------------------------------------- #
+
+LB_COEF = 0.01
+Z_COEF = 1e-3
+
+
+def loss_fn(params, batch, cfg) -> Tuple[jax.Array, dict]:
+    """Causal-LM loss.  batch: tokens, labels (B,S[,C]), loss_mask (B,S)."""
+    logits, _, lb, z = forward(params, batch, cfg, "train")
+    labels = batch["labels"]
+    mask = batch["loss_mask"].astype(jnp.float32)
+
+    # Fused one-hot label pick: take_along_axis would gather over the
+    # vocab-sharded logits (forcing an all-gather of the full logits);
+    # compare+select+reduce stays local per vocab shard and fuses.
+    V = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                    logits.ndim - 1)
+    picked = jnp.where(iota == labels[..., None],
+                       logits.astype(jnp.float32), 0.0)
+    lab_logit = jnp.sum(picked, axis=-1)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    if cfg.num_codebooks > 1:
+        ce = (lse - lab_logit).mean(-1)                      # mean codebooks
+    else:
+        # frontend positions carry no labels: logits were computed for
+        # frontend+token positions; labels/mask are sized to match.
+        ce = lse - lab_logit
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = (ce * mask).sum() / denom
+    total = ce + LB_COEF * lb + Z_COEF * z
+    return total, {"ce": ce, "lb": lb, "z": z}
+
+
+def prefill_step(params, batch, cfg):
+    logits, caches, _, _ = forward(params, batch, cfg, "prefill")
+    return logits, caches
+
+
+def decode_step(params, batch, cfg, caches, cache_pos):
+    logits, new_caches, _, _ = forward(params, batch, cfg, "decode",
+                                       caches, cache_pos)
+    return logits, new_caches

@@ -1,0 +1,1 @@
+from repro.serving.engine import PredictorEngine, Request, Result  # noqa: F401

@@ -1,0 +1,165 @@
+"""Pure-JAX optimizers (no optax dependency).
+
+Each optimizer is an (init, update) pair over arbitrary param pytrees:
+
+    state = opt.init(params)
+    new_params, new_state = opt.update(grads, state, params, lr)
+
+SGD+momentum is the paper's trainer (§VI-B: momentum 0.9, lr 1e-3) and is the
+memory-light default for the trillion-parameter dry-run cells; AdamW for the
+small-model experiments; Adafactor for memory-constrained large training.
+Optimizer states inherit the param sharding (same tree structure), so FSDP
+sharding of params automatically ZeRO-shards the states.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Any]
+    # pytree-structure factory for the state given param *specs* (for AOT)
+    abstract_state: Callable[[Any], Any]
+
+
+def _tmap(fn, *trees, **kw):
+    return jax.tree_util.tree_map(fn, *trees, **kw)
+
+
+# ----------------------------- SGD + momentum ------------------------------ #
+
+def sgd_momentum(momentum: float = 0.9, weight_decay: float = 0.0,
+                 state_dtype: str = "float32") -> Optimizer:
+    dt = jnp.dtype(state_dtype)
+
+    def init(params):
+        return {"mu": _tmap(lambda p: jnp.zeros(p.shape, dt), params)}
+
+    def update(grads, state, params, lr):
+        mu = _tmap(lambda m, g: momentum * m + g.astype(dt), state["mu"], grads)
+        def step(p, m):
+            upd = m
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(dt)
+            return (p.astype(jnp.float32) - lr * upd.astype(jnp.float32)
+                    ).astype(p.dtype)
+        return _tmap(step, params, mu), {"mu": mu}
+
+    def abstract_state(param_abs):
+        return {"mu": _tmap(lambda p: jax.ShapeDtypeStruct(p.shape, dt),
+                            param_abs)}
+
+    return Optimizer("sgdm", init, update, abstract_state)
+
+
+# --------------------------------- AdamW ----------------------------------- #
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": _tmap(z, params), "nu": _tmap(z, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        mu = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                   state["mu"], grads)
+        nu = _tmap(lambda v, g: b2 * v + (1 - b2) *
+                   jnp.square(g.astype(jnp.float32)), state["nu"], grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def step(p, m, v):
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        return _tmap(step, params, mu, nu), {"mu": mu, "nu": nu, "count": c}
+
+    def abstract_state(param_abs):
+        z = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return {"mu": _tmap(z, param_abs), "nu": _tmap(z, param_abs),
+                "count": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    return Optimizer("adamw", init, update, abstract_state)
+
+
+# ------------------------------- Adafactor --------------------------------- #
+
+def adafactor(decay: float = 0.99, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second moment for >=2D params (row/col statistics)."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def make(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": _tmap(make, params,), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+
+        def step(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = decay * s["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * s["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    eps)
+                vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                upd = g * jax.lax.rsqrt(vhat + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = decay * s["v"] + (1 - decay) * g2
+                upd = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-12)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), new_s
+
+        out = _tmap(lambda p, g, s: step(p, g, s), params, grads, state["v"],
+                    )
+        # out leaves are tuples; unzip
+        new_params = _tmap(lambda o: o[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        new_v = _tmap(lambda o: o[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"v": new_v, "count": c}
+
+    def abstract_state(param_abs):
+        def make(p):
+            if _factored(p):
+                return {"vr": jax.ShapeDtypeStruct(p.shape[:-1], jnp.float32),
+                        "vc": jax.ShapeDtypeStruct(
+                            p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jax.ShapeDtypeStruct(p.shape, jnp.float32)}
+        return {"v": _tmap(make, param_abs),
+                "count": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    return Optimizer("adafactor", init, update, abstract_state)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "sgdm":
+        return sgd_momentum(**kw)
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(name)

@@ -1,0 +1,167 @@
+"""Functional simulator + O3 timing oracle + benchmark generator."""
+import numpy as np
+import pytest
+
+from repro.isa import funcsim, progen, timing
+from repro.isa.funcsim import MachineState
+from repro.isa.isa import Instruction
+
+I = Instruction
+
+
+def _run(prog, n=1000, st=None):
+    return funcsim.run(prog, n, state=st)
+
+
+def test_arithmetic_and_memory():
+    prog = [
+        I("addi", dsts=("R1",), imm=7),
+        I("addi", dsts=("R2",), imm=5),
+        I("add", dsts=("R3",), srcs=("R1", "R2")),     # 12
+        I("mulld", dsts=("R4",), srcs=("R3", "R2")),   # 60
+        I("std", srcs=("R4",), mem_base="R1", mem_offset=1),
+        I("ld", dsts=("R5",), mem_base="R1", mem_offset=1),
+        I("divd", dsts=("R6",), srcs=("R5", "R2")),    # 12
+    ]
+    trace, _, st = _run(prog)
+    assert st.regs["R3"] == 12 and st.regs["R4"] == 60
+    assert st.regs["R5"] == 60 and st.regs["R6"] == 12
+    assert trace[4].ea == 8                            # 7 + 1
+
+
+def test_branch_loop():
+    prog = [
+        I("addi", dsts=("R1",), imm=5),
+        I("mtctr", srcs=("R1",)),
+        I("addi", dsts=("R2",), srcs=("R2",), imm=1),  # loop body
+        I("bdnz", target=2),
+    ]
+    trace, _, st = _run(prog)
+    assert st.regs["R2"] == 5                          # 5 iterations
+    assert st.regs["CTR"] == 0
+
+
+def test_call_return():
+    prog = [
+        I("bl", target=3),
+        I("addi", dsts=("R9",), srcs=("R9",), imm=100),
+        I("b", target=6),
+        I("addi", dsts=("R8",), imm=1),                # fn body
+        I("mulld", dsts=("R8",), srcs=("R8", "R8")),
+        I("blr"),
+    ]
+    trace, _, st = _run(prog)
+    assert st.regs["R8"] == 1 and st.regs["R9"] == 100
+
+
+def test_snapshot_at_positions():
+    prog = [I("addi", dsts=("R1",), srcs=("R1",), imm=1)] * 10
+    _, snaps, _ = funcsim.run(prog, 10, snapshot_at=[0, 3, 7])
+    assert len(snaps) == 3
+    assert snaps[0]["R1"] == 0 and snaps[1]["R1"] == 3 \
+        and snaps[2]["R1"] == 7
+
+
+# ---------------------------- timing oracle ---------------------------- #
+
+def _trace_of(prog, n=2000, st=None):
+    t, _, _ = funcsim.run(prog, n, state=st)
+    return t
+
+
+def test_commit_monotone_and_dependency_chain():
+    dep = [I("mulld", dsts=("R1",), srcs=("R1", "R1"))] * 64
+    indep = [I("mulld", dsts=(f"R{2 + i % 20}",), srcs=("R1", "R1"))
+             for i in range(64)]
+    cd = timing.simulate(_trace_of(dep))
+    ci = timing.simulate(_trace_of(indep))
+    assert all(b >= a for a, b in zip(cd, cd[1:]))
+    assert cd[-1] > ci[-1] * 2      # serial chain much slower
+
+
+def test_commit_width_bound():
+    p = timing.TimingParams(commit_width=2)
+    prog = [I("addi", dsts=(f"R{i % 28}",), imm=i) for i in range(128)]
+    commits = timing.simulate(_trace_of(prog), p)
+    from collections import Counter
+    per_cycle = Counter(commits)
+    assert max(per_cycle.values()) <= 2
+
+
+def test_cache_miss_cost():
+    def stream(stride):
+        prog = [
+            I("addi", dsts=("R1",), imm=0),
+            I("addi", dsts=("R9",), imm=100),
+            I("mtctr", srcs=("R9",)),
+            I("ld", dsts=("R2",), mem_base="R1", mem_offset=0),
+            I("addi", dsts=("R1",), srcs=("R1",), imm=stride),
+            I("bdnz", target=3),
+        ]
+        return timing.total_cycles(_trace_of(prog))
+    assert stream(256) > stream(8) * 1.5   # line-crossing strides miss
+
+
+def test_rob_pressure():
+    # one long-latency op followed by many independents: a small ROB stalls
+    body = [I("divd", dsts=("R1",), srcs=("R1", "R2"))] + \
+           [I("addi", dsts=(f"R{3 + i % 20}",), imm=i) for i in range(256)]
+    prog = [I("addi", dsts=("R1",), imm=9), I("addi", dsts=("R2",), imm=2)] \
+        + body
+    tr = _trace_of(prog)
+    big = timing.total_cycles(tr, timing.TimingParams(rob_entries=192))
+    small = timing.total_cycles(tr, timing.TimingParams(rob_entries=16))
+    assert small >= big
+
+
+def test_width_monotonicity():
+    bench = progen.build_benchmark("525.x264")
+    tr = _trace_of(bench.program, 5000, progen.fresh_state(bench))
+    wide = timing.total_cycles(tr, timing.TimingParams())
+    narrow = timing.total_cycles(
+        tr, timing.TimingParams(fetch_width=2, issue_width=2,
+                                commit_width=2))
+    assert narrow > wide
+
+
+def test_mispredict_penalty_visible():
+    bench = progen.build_benchmark("531.deepsjeng")   # CTRL-tagged
+    tr = _trace_of(bench.program, 5000, progen.fresh_state(bench))
+    base = timing.total_cycles(tr, timing.TimingParams())
+    nopen = timing.total_cycles(
+        tr, timing.TimingParams(mispredict_penalty=0))
+    assert base > nopen
+
+
+# ----------------------------- progen suite ----------------------------- #
+
+def test_table_ii_complete():
+    benches = progen.all_benchmarks()
+    assert len(benches) == 24
+    assert sum(b.ckp_num for b in benches) == 623      # Table II total
+    sets = {b.set_no for b in benches}
+    assert sets == set(progen.SET_NUMBERS)
+
+
+@pytest.mark.parametrize("name", ["500.perlbench", "505.mcf", "519.lbm",
+                                  "548.exchange2", "999.specrand"])
+def test_benchmarks_run_forever(name):
+    b = progen.build_benchmark(name)
+    trace, _, _ = funcsim.run(b.program, 20_000,
+                              state=progen.fresh_state(b))
+    assert len(trace) == 20_000            # no early exit
+    pcs = {e.pc for e in trace}
+    assert len(pcs) > len(b.program) // 3  # decent static coverage
+
+
+def test_tags_have_teeth():
+    """MEM-tagged benchmarks should miss the D-cache more than COMP-only."""
+    def miss_proxy(name):
+        b = progen.build_benchmark(name)
+        tr = _trace_of(b.program, 8000, progen.fresh_state(b))
+        fast = timing.total_cycles(
+            tr, timing.TimingParams(dcache_miss_cycles=2))
+        slow = timing.total_cycles(
+            tr, timing.TimingParams(dcache_miss_cycles=80))
+        return slow / fast
+    assert miss_proxy("505.mcf") > miss_proxy("525.x264")

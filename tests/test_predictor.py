@@ -1,0 +1,109 @@
+"""CAPSim predictor + LSTM baseline model invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import lstm_baseline, predictor
+
+CFG = get_config("capsim").replace(
+    d_model=32, head_dim=8, d_ff=64, dtype="float32",
+    clip_tokens=16, context_tokens=36)
+
+
+def _batch(B=4, L=8, rng=None):
+    rng = rng or np.random.RandomState(0)
+    return {
+        "clip_tokens": jnp.asarray(
+            rng.randint(1, CFG.vocab_size, (B, L, CFG.clip_tokens)),
+            jnp.int32),
+        "context_tokens": jnp.asarray(
+            rng.randint(1, CFG.vocab_size, (B, CFG.context_tokens)),
+            jnp.int32),
+        "clip_mask": jnp.ones((B, L), jnp.float32),
+        "time": jnp.asarray(rng.uniform(50, 400, (B,)), jnp.float32),
+    }
+
+
+def test_shapes_and_positivity():
+    params = predictor.init_params(CFG, jax.random.PRNGKey(0))
+    b = _batch()
+    pred = predictor.predict_step(params, b, CFG)
+    assert pred.shape == (4,)
+    assert bool(jnp.all(pred > 0))          # softplus(CPI) * len > 0
+
+
+def test_grads_finite_both_models():
+    b = _batch()
+    for mod in (predictor, lstm_baseline):
+        params = mod.init_params(CFG, jax.random.PRNGKey(0))
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: mod.mape_loss(p, b, CFG), has_aux=True)(params)
+        assert np.isfinite(float(loss))
+        assert all(np.isfinite(np.asarray(g)).all()
+                   for g in jax.tree_util.tree_leaves(grads))
+
+
+def test_clip_padding_is_ignored():
+    """Appending masked-out instruction slots must not change predictions
+    (cross-attention kv-mask + length normalization)."""
+    params = predictor.init_params(CFG, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(1)
+    b = _batch(B=2, L=6, rng=rng)
+    padded = {
+        "clip_tokens": jnp.concatenate(
+            [b["clip_tokens"],
+             jnp.zeros((2, 4, CFG.clip_tokens), jnp.int32)], axis=1),
+        "context_tokens": b["context_tokens"],
+        "clip_mask": jnp.concatenate(
+            [b["clip_mask"], jnp.zeros((2, 4), jnp.float32)], axis=1),
+    }
+    p1 = predictor.predict_step(params, b, CFG)
+    p2 = predictor.predict_step(params, padded, CFG)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=2e-4)
+
+
+def test_instruction_order_matters():
+    """Positional encoding: permuting the clip's instructions must change
+    the prediction (execution order matters, §II-B)."""
+    params = predictor.init_params(CFG, jax.random.PRNGKey(0))
+    b = _batch(B=1, L=8)
+    flipped = dict(b)
+    flipped["clip_tokens"] = b["clip_tokens"][:, ::-1]
+    p1 = float(predictor.predict_step(params, b, CFG)[0])
+    p2 = float(predictor.predict_step(params, flipped, CFG)[0])
+    assert abs(p1 - p2) > 1e-6
+
+
+def test_context_changes_prediction():
+    params = predictor.init_params(CFG, jax.random.PRNGKey(0))
+    b = _batch(B=2, L=6)
+    b2 = dict(b)
+    b2["context_tokens"] = (b["context_tokens"] + 7) % CFG.vocab_size
+    p1 = predictor.predict_step(params, b, CFG)
+    p2 = predictor.predict_step(params, b2, CFG)
+    assert float(jnp.max(jnp.abs(p1 - p2))) > 1e-6
+    # and the no-context ablation is invariant to it
+    a1 = predictor.predict_step(params, b, CFG, use_context=False)
+    a2 = predictor.predict_step(params, b2, CFG, use_context=False)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2))
+
+
+def test_pallas_attention_path_matches_xla():
+    params = predictor.init_params(CFG, jax.random.PRNGKey(0))
+    b = _batch(B=2, L=8)
+    px = predictor.predict_step(params, b, CFG)
+    pp = predictor.predict_step(params, b, CFG.replace(attn_impl="pallas"))
+    np.testing.assert_allclose(np.asarray(px), np.asarray(pp),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mape_loss_zero_when_exact():
+    b = _batch(B=2, L=4)
+    params = predictor.init_params(CFG, jax.random.PRNGKey(0))
+    pred = predictor.predict_step(params, b, CFG)
+    b_exact = dict(b)
+    b_exact["time"] = pred
+    loss, aux = predictor.mape_loss(params, b_exact, CFG)
+    assert float(loss) < 1e-5

@@ -1,0 +1,72 @@
+"""Roofline machinery: HLO collective parsing, wire models, extrapolation."""
+import numpy as np
+
+from repro.launch.roofline import (parse_collectives, roofline_terms,
+                                   model_flops, param_counts)
+from repro.launch.dryrun import extrapolate_costs
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[256,4096,128]{2,1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={2}
+  %ar = f32[1024,1024]{1,0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = bf16[64,512]{1,0} reduce-scatter(%z), replica_groups=[32,8]<=[256], dimensions={0}
+  %cp = bf16[8,128]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ags = (bf16[2,2]{1,0}, u32[]) all-gather-start(%v), replica_groups=[1,2]<=[2]
+  %agd = bf16[2,2]{1,0} all-gather-done(%ags)
+}
+"""
+
+
+def test_parse_collectives_counts_and_wire():
+    colls = parse_collectives(HLO)
+    assert colls["all-gather"]["count"] == 2          # plain + -start
+    ag_bytes = 256 * 4096 * 128 * 2
+    # ring wire for g=16: bytes*(g-1)/g  (+ the tiny -start op)
+    assert abs(colls["all-gather"]["wire_bytes"]
+               - (ag_bytes * 15 / 16 + 8 * 1 / 2)) < 16
+    ar_bytes = 1024 * 1024 * 4
+    assert colls["all-reduce"]["wire_bytes"] == 2 * ar_bytes * 3 / 4
+    rs_bytes = 64 * 512 * 2
+    assert colls["reduce-scatter"]["wire_bytes"] == rs_bytes * 7
+    assert colls["collective-permute"]["wire_bytes"] == 8 * 128 * 2
+    # -done ops are not double counted
+    assert colls["all-gather"]["count"] == 2
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(197e12, 819e9 * 2, 50e9 * 0.5)
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_s"] - 2.0) < 1e-9
+    assert t["dominant"] == "memory_s"
+
+
+def test_extrapolate_costs_linear():
+    def cell(flops, b, ag):
+        return {"cost": {"flops": flops, "bytes_accessed": b},
+                "collectives": {"all-gather": {
+                    "count": 1, "bytes": ag, "wire_bytes": ag * 0.9}}}
+    # cost(R) = 10 + 5R
+    out = extrapolate_costs(cell(15, 150, 1.0), cell(20, 200, 2.0), 48)
+    assert out["flops"] == 10 + 5 * 48
+    assert out["bytes_accessed"] == 100 + 50 * 48
+    assert abs(out["collectives"]["all-gather"]["wire_bytes"]
+               - (0.0 + 0.9 * 48)) < 1e-9
+
+
+def test_model_flops_yardsticks():
+    from repro.configs import get_config, LM_SHAPES, CAPSIM_SHAPES
+    cfg = get_config("olmo-1b")
+    total, active = param_counts(cfg)
+    assert total == active                       # dense: no expert discount
+    f_train = model_flops(cfg, LM_SHAPES["train_4k"], "train")
+    f_pre = model_flops(cfg, LM_SHAPES["prefill_32k"], "prefill")
+    assert abs(f_train / (6 * active * 256 * 4096) - 1) < 1e-9
+    assert abs(f_pre / (2 * active * 32 * 32768) - 1) < 1e-9
+    # MoE: active < total
+    moe = get_config("kimi-k2-1t-a32b")
+    t2, a2 = param_counts(moe)
+    assert a2 < t2 / 5                           # 384 experts, top-8
+    # predictor has its own token accounting
+    cap = get_config("capsim")
+    f = model_flops(cap, CAPSIM_SHAPES["train_clips"], "train")
+    assert f > 0

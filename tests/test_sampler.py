@@ -1,0 +1,64 @@
+"""Occurrence-threshold sampler invariants (Fig 3)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sampler import (group_by_content, occurrence_histogram,
+                                sample_clips)
+from repro.core.slicer import Clip
+from repro.isa.isa import Instruction
+
+
+def _clip(tag: int, start: int) -> Clip:
+    # distinct op streams per tag -> distinct content keys
+    insts = [Instruction("addi", dsts=(f"R{tag % 28}",), imm=tag)] * 3
+    return Clip(insts=insts, time=float(tag + 1), start=start)
+
+
+def _make(counts):
+    clips = []
+    pos = 0
+    for tag, n in enumerate(counts):
+        for _ in range(n):
+            clips.append(_clip(tag, pos))
+            pos += 3
+    return clips
+
+
+def test_frequent_thinned_rare_category_sampled():
+    clips = _make([100, 80, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2])
+    sampled, stats = sample_clips(clips, threshold=10, coef=0.1)
+    assert stats.n_frequent_groups == 2
+    assert stats.n_rare_groups == 10
+    groups = group_by_content(sampled)
+    hist = sorted((len(v) for v in groups.values()), reverse=True)
+    # frequent groups: occurrences reduced to ~coef * count
+    assert hist[0] == 10 and hist[1] == 8
+    # rare groups: ~coef fraction of categories kept, each complete
+    assert stats.n_rare_groups_kept == 1
+    assert hist[2:] == [2]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=300), min_size=1,
+                max_size=30),
+       st.integers(min_value=1, max_value=100))
+def test_property_sampler(counts, threshold):
+    clips = _make(counts)
+    sampled, stats = sample_clips(clips, threshold=threshold, coef=0.05)
+    assert stats.n_out == len(sampled) <= stats.n_in == len(clips)
+    # sampled clips are a subset (by identity of start offsets)
+    starts = {c.start for c in clips}
+    assert all(s.start in starts for s in sampled)
+    # every frequent group survives with >= 1 occurrence
+    in_groups = group_by_content(clips)
+    out_groups = group_by_content(sampled)
+    for key, idxs in in_groups.items():
+        if len(idxs) > threshold:
+            assert key in out_groups and len(out_groups[key]) >= 1
+    # determinism
+    sampled2, _ = sample_clips(clips, threshold=threshold, coef=0.05)
+    assert [c.start for c in sampled2] == [c.start for c in sampled]
+
+
+def test_histogram_sorted_desc():
+    clips = _make([5, 1, 9, 3])
+    assert occurrence_histogram(clips) == [9, 5, 3, 1]

@@ -1,0 +1,82 @@
+"""Logical-axis rule resolution + vocab padding."""
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config, get_smoke_config
+from repro.distributed.sharding import (
+    LOGICAL_RULES_DECODE, LOGICAL_RULES_DECODE_LONG,
+    LOGICAL_RULES_PREDICTOR, LOGICAL_RULES_TRAIN, axis_rules)
+from repro.models.transformer import model_specs, padded_vocab
+
+
+def _mesh(names):
+    devs = np.array(jax.devices()[:1]).reshape((1,) * len(names))
+    return Mesh(devs, names)
+
+
+MESH2 = _mesh(("data", "model"))
+MESH3 = _mesh(("pod", "data", "model"))
+
+
+def test_train_rules_mapping():
+    spec = axis_rules(("batch", "act_seq", "act_embed"),
+                      rules=LOGICAL_RULES_TRAIN, mesh=MESH3)
+    assert spec == P(("pod", "data"), None, None)
+    spec = axis_rules(("embed", "mlp"), rules=LOGICAL_RULES_TRAIN,
+                      mesh=MESH3)
+    assert spec == P("data", "model")
+
+
+def test_missing_mesh_axis_dropped():
+    # 'pod' absent on the single-pod mesh
+    spec = axis_rules(("batch",), rules=LOGICAL_RULES_TRAIN, mesh=MESH2)
+    assert spec == P(("data",))
+
+
+def test_axis_used_once_per_spec():
+    # both logical axes map to 'model': the second must be dropped
+    spec = axis_rules(("qkv", "mlp"), rules=LOGICAL_RULES_TRAIN, mesh=MESH2)
+    assert spec == P("model", None)
+
+
+def test_decode_rules_shard_cache_seq():
+    spec = axis_rules(("cache_batch", "cache_seq"),
+                      rules=LOGICAL_RULES_DECODE, mesh=MESH3)
+    assert spec == P(("pod", "data"), "model")
+    # long-context: whole mesh on the sequence, batch unsharded
+    spec = axis_rules(("cache_batch", "cache_seq"),
+                      rules=LOGICAL_RULES_DECODE_LONG, mesh=MESH3)
+    assert spec == P(None, ("pod", "data", "model"))
+
+
+def test_predictor_rules_pure_dp():
+    spec = axis_rules(("batch", None, None),
+                      rules=LOGICAL_RULES_PREDICTOR, mesh=MESH3)
+    assert spec == P(("pod", "data", "model"), None, None)
+    spec = axis_rules(("embed", "qkv"), rules=LOGICAL_RULES_PREDICTOR,
+                      mesh=MESH3)
+    assert spec == P(None, None)           # weights replicate
+
+
+def test_vocab_padding_only_when_needed():
+    mamba = get_config("mamba2-780m")
+    assert mamba.vocab_size == 50280                    # assigned value
+    assert padded_vocab(mamba) == 50288                 # 16-divisible
+    qwen = get_config("qwen3-4b")
+    assert padded_vocab(qwen) == qwen.vocab_size        # untouched
+    specs = model_specs(mamba)
+    assert specs["embed"].shape[0] == 50288
+    assert specs["unembed"].shape[1] == 50288
+
+
+def test_padded_logits_masked():
+    import jax.numpy as jnp
+    from repro.models import transformer as tfm
+    cfg = get_smoke_config("mamba2-780m").replace(vocab_size=250)  # pad->256
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32)}
+    logits, _, _, _ = tfm.forward(params, batch, cfg, "train")
+    assert logits.shape[-1] == 256
+    pad_cols = np.asarray(logits[..., 250:], np.float32)
+    assert (pad_cols <= -1e29).all()

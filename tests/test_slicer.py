@@ -1,0 +1,83 @@
+"""Algorithm 1 invariants, unit + property-based."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.slicer import slice_fixed, slice_trace, total_time
+from repro.isa.isa import Instruction
+
+NOP = Instruction("nop")
+
+
+def _insts(n):
+    return [NOP] * n
+
+
+def test_basic_slicing():
+    # commit times: +1 every instruction -> boundary as soon as len >= l_min
+    n = 50
+    commits = list(range(1, n + 1))
+    clips = slice_trace(_insts(n), commits, l_min=10)
+    assert all(len(c) == 10 for c in clips)
+    assert len(clips) == 5
+
+
+def test_times_are_commit_deltas():
+    insts = _insts(12)
+    commits = [2, 2, 2, 5, 5, 9, 9, 9, 12, 12, 15, 18]
+    clips = slice_trace(insts, commits, l_min=4)
+    # first boundary at idx >= 4 where time changes
+    assert clips[0].time > 0
+    for c in clips:
+        assert c.time >= 0
+
+
+def test_same_cycle_group_never_split():
+    """A boundary requires TimeNow != TimePrev: instructions committing in
+    the same cycle stay in one clip."""
+    insts = _insts(30)
+    commits = [1] * 10 + [2] * 10 + [3] * 10
+    clips = slice_trace(insts, commits, l_min=5)
+    for c in clips:
+        assert len(c) >= 5
+        # boundaries land exactly at cycle edges (multiples of 10 here)
+        assert c.start % 10 == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=5), min_size=1,
+                max_size=400),
+       st.integers(min_value=1, max_value=50))
+def test_property_invariants(deltas, l_min):
+    commits = np.cumsum(deltas).tolist()
+    insts = _insts(len(commits))
+    clips = slice_trace(insts, commits, l_min)
+    n_covered = sum(len(c) for c in clips)
+    assert n_covered <= len(insts)
+    for c in clips:
+        assert len(c) >= l_min                 # principle 1
+        assert c.time >= 0
+    # clip starts are non-decreasing and contiguous.  Algorithm 1 seeds b
+    # with I[0] (line 3) so the FIRST clip carries one duplicated leading
+    # instruction: its successor starts at a.start + len(a) - 1.
+    starts = [c.start for c in clips]
+    assert starts == sorted(starts)
+    for i, (a, b) in enumerate(zip(clips, clips[1:])):
+        expected = a.start + len(a) - (1 if i == 0 else 0)
+        assert b.start == expected
+    # total time telescopes: Algorithm 1 appends InstPrev (one-iteration
+    # shift), so the last close at iteration J = sum(lens) - 1 yields
+    # total == commits[J - 1] (== 0 for a degenerate first-instruction clip)
+    if clips:
+        j = n_covered - 1
+        expected = commits[j - 1] if j >= 1 else 0.0
+        assert abs(total_time(clips) - expected) < 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=300),
+       st.integers(min_value=1, max_value=64))
+def test_slice_fixed_covers_everything(n, l_min):
+    clips = slice_fixed(_insts(n), l_min)
+    assert sum(len(c) for c in clips) == n
+    for a, b in zip(clips, clips[1:]):
+        assert b.start == a.start + len(a)

@@ -1,0 +1,93 @@
+"""Standardization transformation (Fig 5) + context matrix (Fig 6)."""
+import numpy as np
+import pytest
+
+from repro.core.context import (CONTEXT_LEN, TOKENS_PER_REG,
+                                context_token_ids)
+from repro.core.standardize import (BYTE_TOKENS, CONST, DSTS, DSTS_E, END,
+                                    MEM, MEM_E, OPCODE, REP, SRCS, SRCS_E,
+                                    build_vocab, encode_clip,
+                                    encode_instruction, standardize)
+from repro.isa.isa import CONTEXT_REGS, OPCODES, Instruction
+
+VOCAB = build_vocab()
+
+
+def test_vocab_structure():
+    assert VOCAB["<PAD>"] == 0
+    assert VOCAB.size < 512                # fits the config's padded table
+    # every opcode and register tokenizes
+    for op in OPCODES:
+        assert op in VOCAB.token_to_id
+    for r in CONTEXT_REGS:
+        assert r in VOCAB.token_to_id
+
+
+def test_const_substitution():
+    toks = standardize(Instruction("addi", dsts=("R1",), srcs=("R2",),
+                                   imm=42))
+    assert toks[:3] == [REP, OPCODE, "addi"]
+    assert CONST in toks                    # Fig 5a: constants -> <CONST>
+    assert "42" not in toks
+
+
+def test_memory_segment():
+    toks = standardize(Instruction("ld", dsts=("R3",), mem_base="R11",
+                                   mem_offset=8))
+    i = toks.index(MEM)
+    assert toks[i:i + 4] == [MEM, "R11", CONST, MEM_E]   # Fig 5b
+
+
+def test_implicit_registers():
+    # Fig 5c: cmpi writes CR implicitly
+    toks = standardize(Instruction("cmpi", srcs=("R5",), imm=0))
+    d0, d1 = toks.index(DSTS), toks.index(DSTS_E)
+    assert "CR" in toks[d0:d1]
+    # bl writes LR; branches write NIA and read CIA
+    toks = standardize(Instruction("bl", target=3))
+    d0, d1 = toks.index(DSTS), toks.index(DSTS_E)
+    assert "LR" in toks[d0:d1] and "NIA" in toks[d0:d1]
+    s0, s1 = toks.index(SRCS), toks.index(SRCS_E)
+    assert "CIA" in toks[s0:s1]
+    # bdnz both reads and writes CTR
+    toks = standardize(Instruction("bdnz", target=0))
+    assert "CTR" in toks[toks.index(DSTS):toks.index(DSTS_E)]
+    assert "CTR" in toks[toks.index(SRCS):toks.index(SRCS_E)]
+
+
+@pytest.mark.parametrize("op", sorted(OPCODES))
+def test_all_opcodes_fit_l_token(op):
+    info = OPCODES[op]
+    inst = Instruction(
+        op,
+        dsts=("R1",) if not op.startswith(("b", "st", "cmp", "nop")) else (),
+        srcs=("R2", "R3", "R4")[: 3 if op == "fmadd" else 2],
+        imm=1 if op in ("addi", "cmpi", "bc") else None,
+        mem_base="R9" if info.is_load or info.is_store else None,
+        target=0 if info.is_branch else None)
+    toks = standardize(inst)
+    assert toks[0] == REP and toks[-1] == END
+    assert len(toks) <= 16
+    ids = encode_instruction(inst, VOCAB, 16)
+    assert ids.shape == (16,) and ids.dtype == np.int32
+    assert ids[0] == VOCAB[REP]
+
+
+def test_encode_clip_padding():
+    insts = [Instruction("nop")] * 5
+    toks, mask = encode_clip(insts, VOCAB, l_clip=8, l_token=16)
+    assert toks.shape == (8, 16) and mask.shape == (8,)
+    assert mask.tolist() == [1, 1, 1, 1, 1, 0, 0, 0]
+    assert (toks[5:] == 0).all()
+
+
+def test_context_tokens():
+    snap = {r: 0 for r in CONTEXT_REGS}
+    snap["R10"] = 0x0123_4567_89AB_CDEF      # the paper's Fig 6a example
+    ids = context_token_ids(snap, VOCAB)
+    assert ids.shape == (CONTEXT_LEN,)
+    i = CONTEXT_REGS.index("R10") * TOKENS_PER_REG
+    assert ids[i] == VOCAB["R10"]
+    byte0 = VOCAB[BYTE_TOKENS[0]]
+    got = [ids[i + 1 + k] - byte0 for k in range(8)]
+    assert got == [0x01, 0x23, 0x45, 0x67, 0x89, 0xAB, 0xCD, 0xEF]

@@ -1,0 +1,156 @@
+"""Train-step factory: microbatching, clipping, compression, schedules,
+checkpoint roundtrip + crash-restart."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.ckpt import CheckpointManager, latest_step, restore, \
+    save
+from repro.distributed.compression import compress_decompress, \
+    init_error_feedback
+from repro.distributed.fault_tolerance import ResilientTrainer, \
+    StragglerMonitor
+from repro.training.train_loop import (TrainConfig, init_train_state,
+                                       make_train_step)
+
+
+def _quadratic_loss(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    loss = jnp.mean((pred - batch["y"]) ** 2)
+    return loss, {"ce": loss, "lb": jnp.zeros(()), "z": jnp.zeros(())}
+
+
+def _setup(optimizer="sgdm", **kw):
+    tcfg = TrainConfig(optimizer=optimizer, base_lr=0.05, warmup_steps=0,
+                       total_steps=100, **kw)
+    params = {"w": jnp.zeros((3, 1)), "b": jnp.zeros((1,))}
+    state = init_train_state(params, tcfg)
+    step = make_train_step(_quadratic_loss, tcfg)
+    rng = np.random.RandomState(0)
+    x = rng.randn(8, 3).astype(np.float32)
+    w_true = np.array([[1.0], [-2.0], [0.5]], np.float32)
+    y = x @ w_true + 0.3
+    batch = {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+    return tcfg, state, jax.jit(step), batch
+
+
+def test_sgd_converges():
+    _, state, step, batch = _setup()
+    for _ in range(150):
+        state, m = step(state, batch)
+    assert float(m["loss"]) < 1e-2
+
+
+def test_adamw_state_and_convergence():
+    _, state, step, batch = _setup("adamw")
+    assert "nu" in state["opt"]
+    for _ in range(150):
+        state, m = step(state, batch)
+    assert float(m["loss"]) < 5e-2
+
+
+def test_microbatch_equivalence():
+    """Gradient accumulation over 4 microbatches == single big batch."""
+    tcfg1, s1, step1, batch = _setup()
+    tcfg4 = TrainConfig(optimizer="sgdm", base_lr=0.05, warmup_steps=0,
+                        total_steps=100, microbatches=4)
+    s4 = init_train_state({"w": jnp.zeros((3, 1)), "b": jnp.zeros((1,))},
+                          tcfg4)
+    step4 = jax.jit(make_train_step(_quadratic_loss, tcfg4))
+    s1b, m1 = step1(s1, batch)
+    s4b, m4 = step4(s4, batch)
+    np.testing.assert_allclose(np.asarray(s1b["params"]["w"]),
+                               np.asarray(s4b["params"]["w"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5)
+
+
+def test_grad_clipping_bounds_update():
+    tcfg = TrainConfig(optimizer="sgdm", base_lr=1.0, grad_clip=1e-3,
+                       warmup_steps=0, total_steps=10)
+    params = {"w": jnp.zeros((3, 1)), "b": jnp.zeros((1,))}
+    state = init_train_state(params, tcfg)
+    step = jax.jit(make_train_step(_quadratic_loss, tcfg))
+    batch = {"x": jnp.ones((4, 3)) * 100, "y": jnp.ones((4, 1)) * 1e6}
+    state, m = step(state, batch)
+    upd = float(jnp.max(jnp.abs(state["params"]["w"])))
+    assert upd <= 1.1e-3 * tcfg.base_lr * 10  # clipped global norm
+
+
+def test_compression_error_feedback():
+    """int8 quantization with error feedback: deq + residual == g exactly,
+    residual bounded by half a quantization step, and the residual is
+    consumed on the next step."""
+    g = {"w": jnp.asarray(np.linspace(-1, 1, 64).reshape(8, 8),
+                          jnp.float32)}
+    err = init_error_feedback(g)
+    cg, new_err = compress_decompress(g, err)
+    np.testing.assert_allclose(np.asarray(cg["w"]) + np.asarray(new_err["w"]),
+                               np.asarray(g["w"]), rtol=0, atol=1e-6)
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(new_err["w"]))) <= scale / 2 + 1e-6
+    # second step folds the residual in: error never accumulates unboundedly
+    cg2, err2 = compress_decompress(g, new_err)
+    np.testing.assert_allclose(
+        np.asarray(cg2["w"]) + np.asarray(err2["w"]),
+        np.asarray(g["w"]) + np.asarray(new_err["w"]), rtol=0, atol=1e-6)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    _, state, step, batch = _setup()
+    state, _ = step(state, batch)
+    save(state, 1, str(tmp_path))
+    assert latest_step(str(tmp_path)) == 1
+    like = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+    restored = restore(like, 1, str(tmp_path))
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resilient_trainer_resumes(tmp_path):
+    tcfg, state, step, batch = _setup()
+
+    def make_trainer():
+        return ResilientTrainer(
+            step_fn=step, ckpt=CheckpointManager(str(tmp_path), keep=2,
+                                                 async_save=False),
+            save_every=5)
+
+    def batches(n):
+        for _ in range(n):
+            yield batch
+
+    # first run: 7 steps -> checkpoints at 5 and (drain) 7
+    s1, n1 = make_trainer().run(state, batches(7), total_steps=7)
+    assert n1 == 7 and latest_step(str(tmp_path)) == 7
+    # second run resumes from 7 and continues to 12
+    s2, n2 = make_trainer().run(state, batches(50), total_steps=12,
+                                state_like=state)
+    assert n2 == 12
+    # loss keeps improving across the restart
+    _, m1 = step(s1, batch)
+    _, m2 = step(s2, batch)
+    assert float(m2["loss"]) <= float(m1["loss"])
+
+
+def test_checkpoint_gc_keeps_k(tmp_path):
+    _, state, step, batch = _setup()
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(state, s)
+    steps = sorted(int(d.name[5:]) for d in tmp_path.iterdir()
+                   if d.name.startswith("step_"))
+    assert steps == [3, 4]
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(n_hosts=4)
+    for _ in range(10):
+        for h, t in enumerate([1.0, 1.05, 0.95, 2.5]):
+            mon.record(h, t)
+    assert mon.stragglers() == [3]
+    w = mon.rebalance()
+    assert w[3] < 0.6 and abs(float(w.sum()) - 4.0) < 1e-6
