@@ -17,7 +17,9 @@ What does reproduce is the *structure* of the paper's claim:
 """
 from __future__ import annotations
 
+import argparse
 import json
+import sys
 import time
 from pathlib import Path
 
@@ -25,8 +27,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import full_cfg
+if __package__ in (None, ""):     # direct `python benchmarks/bench_speed.py`
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import bench_cfg, full_cfg
+from repro.core import context as ctx_mod
 from repro.core import predictor
+from repro.core import slicer as slicer_mod
+from repro.core import standardize as std_mod
+from repro.core.engine import SimulationEngine
 from repro.core.simulate import capsim_simulate
 from repro.core.standardize import build_vocab
 from repro.isa import funcsim, progen, timing
@@ -110,6 +119,146 @@ def run(emit) -> None:
                   "bound vs oracle 5e5 inst/s/core")
 
 
+# --------------------------------------------------------------------------- #
+# Multi-benchmark throughput: sequential per-benchmark loop vs the engine
+# --------------------------------------------------------------------------- #
+
+def _sequential_simulate(bench, params, cfg, vocab, *, interval_size,
+                         max_checkpoints, l_min, l_clip, l_token,
+                         batch_size):
+    """The pre-engine ``capsim_simulate`` inference path, kept verbatim as
+    the baseline: fresh ``jax.jit`` per benchmark (re-trace + re-compile),
+    per-benchmark remainder padded to a full batch, and a synchronous
+    host round-trip after every device batch."""
+    predict = jax.jit(lambda p, b: predictor.predict_step(p, b, cfg))
+    st = progen.fresh_state(bench)
+    tok_l, ctx_l, mask_l = [], [], []
+    for _ in range(min(bench.ckp_num, max_checkpoints)):
+        trace, snaps, st = funcsim.run(bench.program, interval_size,
+                                       state=st, snapshot_every=l_min)
+        if not trace:
+            break
+        clips = slicer_mod.slice_fixed([e.inst for e in trace], l_min)
+        for i, clip in enumerate(clips):
+            toks, mask = std_mod.encode_clip(clip.insts, vocab, l_clip,
+                                             l_token)
+            tok_l.append(toks)
+            ctx_l.append(ctx_mod.context_token_ids(
+                snaps[min(i, len(snaps) - 1)], vocab))
+            mask_l.append(mask)
+    tok, ctx, mask = np.stack(tok_l), np.stack(ctx_l), np.stack(mask_l)
+    n_real = tok.shape[0]
+    pad = (-n_real) % batch_size
+    if pad:
+        tok = np.concatenate([tok, np.repeat(tok[-1:], pad, 0)])
+        ctx = np.concatenate([ctx, np.repeat(ctx[-1:], pad, 0)])
+        mask = np.concatenate([mask, np.zeros((pad,) + mask.shape[1:],
+                                              mask.dtype)])
+    preds = []
+    for lo in range(0, tok.shape[0], batch_size):
+        batch = {"clip_tokens": jnp.asarray(tok[lo:lo + batch_size]),
+                 "context_tokens": jnp.asarray(ctx[lo:lo + batch_size]),
+                 "clip_mask": jnp.asarray(mask[lo:lo + batch_size])}
+        preds.append(np.asarray(predict(params, batch)))
+    return float(np.concatenate(preds)[:n_real].sum()), n_real
+
+
+def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
+    """Sequential-vs-engine clips/sec on an n-benchmark mix.
+
+    Sequential = one benchmark at a time through the seed inference loop.
+    Engine = one shared clip pool, cached jit, bucketed padding, async
+    double-buffer.  Per-benchmark predicted cycles must agree bitwise.
+    """
+    vocab = build_vocab()
+    cfg = bench_cfg() if quick else full_cfg()
+    params = predictor.init_params(cfg, jax.random.PRNGKey(0))
+    names = list(progen.TABLE_II)[:n_benchmarks]
+    kw = dict(interval_size=2_000 if quick else 10_000,
+              max_checkpoints=1 if quick else 2,
+              l_min=100, l_clip=128, l_token=16,
+              batch_size=32 if quick else 64)
+
+    benches = [progen.build_benchmark(name) for name in names]
+    t0 = time.time()
+    seq = {}
+    n_clips = 0
+    for bench in benches:
+        cycles, k = _sequential_simulate(bench, params, cfg, vocab, **kw)
+        seq[bench.name] = cycles
+        n_clips += k
+    seq_seconds = time.time() - t0
+    seq_cps = n_clips / max(seq_seconds, 1e-9)
+
+    engine = SimulationEngine(params, cfg, vocab, warmup=0,
+                              with_oracle=False, **kw)
+    engine.submit_names(names)
+    t0 = time.time()
+    results = engine.run()
+    eng_seconds = time.time() - t0
+    stats = engine.last_stats
+    eng_cps = stats.n_clips / max(eng_seconds, 1e-9)
+
+    per_bench = {}
+    mismatches = []
+    for r in results:
+        equal = seq[r.name] == r.predicted_cycles
+        per_bench[r.name] = {"sequential_cycles": seq[r.name],
+                             "engine_cycles": r.predicted_cycles,
+                             "bitwise_equal": equal}
+        if not equal:
+            mismatches.append(r.name)
+    assert stats.n_clips == n_clips, \
+        f"engine saw {stats.n_clips} clips, sequential saw {n_clips}"
+
+    ratio = eng_cps / max(seq_cps, 1e-9)
+    emit.emit("speed.multi_sequential", seq_seconds * 1e6 / n_clips,
+              f"{n_benchmarks} benchmarks one-at-a-time: {n_clips} clips "
+              f"in {seq_seconds:.2f}s = {seq_cps:.0f} clips/s (fresh jit "
+              "+ full-batch remainder pad per benchmark)")
+    emit.emit("speed.multi_engine", eng_seconds * 1e6 / n_clips,
+              f"shared pool: {stats.n_batches} batches, {stats.n_pad} pad "
+              f"rows in {eng_seconds:.2f}s = {eng_cps:.0f} clips/s = "
+              f"{ratio:.2f}x sequential; per-bench cycles "
+              f"{'bitwise equal' if not mismatches else 'MISMATCH: ' + str(mismatches)}")
+    return {"n_benchmarks": n_benchmarks, "n_clips": n_clips,
+            "quick": quick,
+            "sequential_seconds": seq_seconds,
+            "engine_seconds": eng_seconds,
+            "sequential_clips_per_s": seq_cps,
+            "engine_clips_per_s": eng_cps,
+            "engine_speedup": ratio,
+            "engine_batches": stats.n_batches,
+            "engine_pad_rows": stats.n_pad,
+            "all_bitwise_equal": not mismatches,
+            "per_bench": per_bench}
+
+
 if __name__ == "__main__":
     from benchmarks.common import CsvEmitter
-    run(CsvEmitter())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi", action="store_true",
+                    help="multi-benchmark sequential-vs-engine throughput")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale (small model, short intervals)")
+    ap.add_argument("--n-benchmarks", type=int, default=8)
+    ap.add_argument("--min-speedup", type=float, default=1.5,
+                    help="fail if engine/sequential clips/s falls below "
+                         "this (the CI gate; pass 0 for measurement runs)")
+    ap.add_argument("--json", default=None,
+                    help="write the --multi result dict to this path")
+    args = ap.parse_args()
+    emitter = CsvEmitter()
+    if args.multi:
+        res = run_multi(emitter, n_benchmarks=args.n_benchmarks,
+                        quick=args.quick)
+        if args.json:
+            Path(args.json).write_text(json.dumps(res, indent=2))
+        if not res["all_bitwise_equal"]:
+            raise SystemExit("engine/sequential predicted cycles diverged")
+        if res["engine_speedup"] < args.min_speedup:
+            raise SystemExit(
+                f"engine speedup {res['engine_speedup']:.2f}x < "
+                f"{args.min_speedup}x")
+    else:
+        run(emitter)

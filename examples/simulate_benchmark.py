@@ -2,11 +2,18 @@
 
     PYTHONPATH=src python examples/simulate_benchmark.py [--ckpt results/ckpt_capsim]
 
-For each benchmark: run the functional simulator + batched predictor
-(CAPSim path) and the cycle-level oracle (conventional path); report both
-wall times, the speedup, and the prediction error.  With an untrained
-predictor the error column is meaningless — pass --ckpt to use weights
-from examples/train_capsim.py.
+All requested benchmarks run through the batched multi-benchmark
+``SimulationEngine``: each program's functional sim + tokenization feeds a
+*shared* clip pool, and one cached-jit predictor consumes size-bucketed
+device batches asynchronously while the CPU works ahead on the next
+program — so accelerator batches fill across program boundaries instead of
+each benchmark padding its own remainder.  Per-benchmark results are
+bitwise identical to the sequential ``capsim_simulate`` wrapper.
+
+For each benchmark: report the functional+predictor wall time (CAPSim
+path), the cycle-level oracle wall time (conventional path), the speedup,
+and the prediction error.  With an untrained predictor the error column is
+meaningless — pass --ckpt to use weights from examples/train_capsim.py.
 """
 import argparse
 
@@ -15,9 +22,8 @@ import jax
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.configs import get_config
 from repro.core import predictor
-from repro.core.simulate import capsim_simulate
+from repro.core.engine import SimulationEngine
 from repro.core.standardize import build_vocab
-from repro.isa import progen
 
 
 def main() -> None:
@@ -41,16 +47,21 @@ def main() -> None:
             params = restored["params"]
             print(f"restored predictor from step {step}")
 
-    print(f"{'benchmark':16s} {'insts':>8s} {'oracle_s':>9s} "
+    engine = SimulationEngine(params, cfg, vocab,
+                              interval_size=args.interval_size,
+                              max_checkpoints=args.max_checkpoints)
+    engine.submit_names(args.benchmarks)
+    results = engine.run()
+
+    print(f"{'benchmark':16s} {'insts':>8s} {'clips':>6s} {'oracle_s':>9s} "
           f"{'capsim_s':>9s} {'speedup':>8s} {'rel_err':>8s}")
-    for name in args.benchmarks:
-        bench = progen.build_benchmark(name)
-        r = capsim_simulate(bench, params, cfg, vocab,
-                            interval_size=args.interval_size,
-                            max_checkpoints=args.max_checkpoints)
-        print(f"{name:16s} {r.n_instructions:8d} "
+    for r in results:
+        print(f"{r.name:16s} {r.n_instructions:8d} {r.n_clips:6d} "
               f"{r.oracle_seconds:9.2f} {r.capsim_seconds:9.2f} "
               f"{r.speedup:7.2f}x {100*r.rel_error:7.1f}%")
+    stats = engine.last_stats
+    print(f"pool: {stats.n_clips} clips in {stats.n_batches} device "
+          f"batches ({stats.n_pad} pad rows)")
 
 
 if __name__ == "__main__":

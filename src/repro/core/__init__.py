@@ -8,4 +8,6 @@
     predictor     the attention performance predictor (Fig 4, Eq 3-9)
     lstm_baseline Ithemal-style hierarchical LSTM (Fig 10 baseline)
     simulate      end-to-end CAPSim vs O3-oracle runs (Fig 1/7)
+    engine        batched multi-benchmark simulation engine (shared clip
+                  pool, cached-jit bucketed inference, async pipeline)
 """

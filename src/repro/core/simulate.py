@@ -6,63 +6,19 @@ tokenize, and predict every clip's runtime *in one accelerator batch* —
 then sum.  The left-hand path (the O3 cycle oracle) is ``oracle_simulate``;
 the two wall-times are the Fig-7 speed comparison, and the two totals are
 the accuracy comparison.
+
+``capsim_simulate`` is the single-benchmark convenience wrapper over
+``repro.core.engine.SimulationEngine`` — the multi-benchmark batch engine
+that shares one clip pool and one cached-jit predict step across programs.
+Use the engine directly when simulating more than one benchmark.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, List, Optional, Sequence
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import context as ctx_mod
-from repro.core import predictor as pred_mod
-from repro.core import slicer as slicer_mod
 from repro.core import standardize as std_mod
-from repro.isa import funcsim, progen, timing
+from repro.core.engine import SimResult, SimulationEngine
+from repro.isa import progen, timing
 
-
-@dataclasses.dataclass
-class SimResult:
-    name: str
-    n_intervals: int
-    n_instructions: int
-    predicted_cycles: float
-    oracle_cycles: Optional[float]
-    func_seconds: float               # functional sim + tokenize
-    predict_seconds: float            # batched predictor inference
-    oracle_seconds: Optional[float]   # O3 oracle wall time
-
-    @property
-    def capsim_seconds(self) -> float:
-        return self.func_seconds + self.predict_seconds
-
-    @property
-    def speedup(self) -> Optional[float]:
-        if self.oracle_seconds is None:
-            return None
-        return self.oracle_seconds / max(self.capsim_seconds, 1e-9)
-
-    @property
-    def rel_error(self) -> Optional[float]:
-        if not self.oracle_cycles:
-            return None
-        return abs(self.predicted_cycles - self.oracle_cycles) \
-            / self.oracle_cycles
-
-
-def _pad_batch(tok, ctx, mask, batch_size):
-    n = tok.shape[0]
-    if n % batch_size == 0:
-        return tok, ctx, mask, n
-    pad = batch_size - n % batch_size
-    tok = np.concatenate([tok, np.repeat(tok[-1:], pad, 0)])
-    ctx = np.concatenate([ctx, np.repeat(ctx[-1:], pad, 0)])
-    mask = np.concatenate([mask, np.zeros((pad,) + mask.shape[1:],
-                                          mask.dtype)])
-    return tok, ctx, mask, n
+__all__ = ["SimResult", "capsim_simulate"]
 
 
 def capsim_simulate(bench: progen.Benchmark, params, cfg,
@@ -74,64 +30,9 @@ def capsim_simulate(bench: progen.Benchmark, params, cfg,
                     with_oracle: bool = True,
                     timing_params: timing.TimingParams =
                     timing.TimingParams()) -> SimResult:
-    predict = jax.jit(lambda p, b: pred_mod.predict_step(
-        p, b, cfg, use_context))
-
-    st = progen.fresh_state(bench)
-    _, _, st = funcsim.run(bench.program, warmup, state=st)
-
-    n_ckp = min(bench.ckp_num, max_checkpoints)
-    tok_l: List[np.ndarray] = []
-    ctx_l: List[np.ndarray] = []
-    mask_l: List[np.ndarray] = []
-    oracle_cycles = 0.0
-    oracle_seconds = 0.0
-    n_instructions = 0
-
-    t_func = time.time()
-    traces = []
-    for _ in range(n_ckp):
-        trace, snaps, st = funcsim.run(
-            bench.program, interval_size, state=st, snapshot_every=l_min)
-        if not trace:
-            break
-        traces.append(trace)
-        n_instructions += len(trace)
-        clips = slicer_mod.slice_fixed([e.inst for e in trace], l_min)
-        for i, clip in enumerate(clips):
-            toks, mask = std_mod.encode_clip(clip.insts, vocab, l_clip,
-                                             l_token)
-            tok_l.append(toks)
-            snap = snaps[min(i, len(snaps) - 1)]
-            ctx_l.append(ctx_mod.context_token_ids(snap, vocab))
-            mask_l.append(mask)
-    func_seconds = time.time() - t_func
-
-    if with_oracle:
-        t_oracle = time.time()
-        for trace in traces:
-            oracle_cycles += timing.total_cycles(trace, timing_params)
-        oracle_seconds = time.time() - t_oracle
-
-    tok = np.stack(tok_l)
-    ctx = np.stack(ctx_l)
-    mask = np.stack(mask_l)
-    tok, ctx, mask, n_real = _pad_batch(tok, ctx, mask, batch_size)
-
-    t_pred = time.time()
-    preds = []
-    for lo in range(0, tok.shape[0], batch_size):
-        batch = {"clip_tokens": jnp.asarray(tok[lo:lo + batch_size]),
-                 "context_tokens": jnp.asarray(ctx[lo:lo + batch_size]),
-                 "clip_mask": jnp.asarray(mask[lo:lo + batch_size])}
-        preds.append(np.asarray(predict(params, batch)))
-    total_pred = float(np.concatenate(preds)[:n_real].sum())
-    predict_seconds = time.time() - t_pred
-
-    return SimResult(
-        name=bench.name, n_intervals=len(traces),
-        n_instructions=n_instructions,
-        predicted_cycles=total_pred,
-        oracle_cycles=oracle_cycles if with_oracle else None,
-        func_seconds=func_seconds, predict_seconds=predict_seconds,
-        oracle_seconds=oracle_seconds if with_oracle else None)
+    engine = SimulationEngine(
+        params, cfg, vocab, interval_size=interval_size, warmup=warmup,
+        max_checkpoints=max_checkpoints, l_min=l_min, l_clip=l_clip,
+        l_token=l_token, batch_size=batch_size, use_context=use_context,
+        with_oracle=with_oracle, timing_params=timing_params)
+    return engine.simulate(bench)

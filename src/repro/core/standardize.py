@@ -159,3 +159,57 @@ def encode_clip(insts: Sequence[Instruction], vocab: Vocab, l_clip: int,
         toks[i] = encode_instruction(insts[i], vocab, l_token)
         mask[i] = 1.0
     return toks, mask
+
+
+# --------------------------------------------------------------------------- #
+# Batched clip encoding
+# --------------------------------------------------------------------------- #
+
+def _inst_key(inst: Instruction) -> tuple:
+    """Everything ``standardize`` reads: constants and memory offsets only
+    matter through their presence (Fig 5a), so instructions collapse onto a
+    small set of shapes — traces are loopy and the hit rate is ~99%."""
+    return (inst.op, inst.dsts, inst.srcs, inst.imm is not None,
+            inst.mem_base, inst.target is not None)
+
+
+class ClipEncoder:
+    """Vectorized batch path over ``encode_clip`` with a standardized-row
+    memo.  ``encode(clips)`` returns the same bits as stacking
+    ``encode_clip`` per clip; the memo turns the per-instruction dict walks
+    of ``standardize`` into a single tuple-key lookup."""
+
+    def __init__(self, vocab: Vocab, l_clip: int, l_token: int):
+        self.vocab = vocab
+        self.l_clip = l_clip
+        self.l_token = l_token
+        self._memo: Dict[tuple, np.ndarray] = {}
+
+    def encode_row(self, inst: Instruction) -> np.ndarray:
+        key = _inst_key(inst)
+        row = self._memo.get(key)
+        if row is None:
+            row = encode_instruction(inst, self.vocab, self.l_token)
+            row.setflags(write=False)
+            self._memo[key] = row
+        return row
+
+    def encode(self, clips: Sequence[Sequence[Instruction]]
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """((N, l_clip, l_token) int32 tokens, (N, l_clip) float32 mask)."""
+        n = len(clips)
+        toks = np.zeros((n, self.l_clip, self.l_token), np.int32)
+        mask = np.zeros((n, self.l_clip), np.float32)
+        for ci, insts in enumerate(clips):
+            k = min(len(insts), self.l_clip)
+            for i in range(k):
+                toks[ci, i] = self.encode_row(insts[i])
+            mask[ci, :k] = 1.0
+        return toks, mask
+
+
+def encode_clips(clips: Sequence[Sequence[Instruction]], vocab: Vocab,
+                 l_clip: int, l_token: int) -> Tuple[np.ndarray, np.ndarray]:
+    """One-shot batch encode (fresh memo); engines keep a ``ClipEncoder``
+    across benchmarks so the memo amortizes over the whole queue."""
+    return ClipEncoder(vocab, l_clip, l_token).encode(clips)

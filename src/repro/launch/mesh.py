@@ -5,20 +5,29 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_compat(shape, axes):
+    """``jax.make_mesh`` with explicit-Auto axis types where the installed
+    jax supports them (>= 0.6, where meshes default to explicit sharding
+    contexts) and plain construction on older releases that predate
+    ``jax.sharding.AxisType``."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (16,16)=256 chips (data, model).
     Multi-pod: (2,16,16)=512 chips (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_test_mesh():
     """1-device mesh with the standard axis names (CPU tests)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((1, 1), ("data", "model"))
 
 
 def mesh_axis_sizes(mesh) -> dict:

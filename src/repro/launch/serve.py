@@ -11,7 +11,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ShapeConfig, get_config, get_smoke_config
 from repro.distributed.sharding import (
@@ -20,40 +19,32 @@ from repro.launch.mesh import make_test_mesh
 
 
 def serve_capsim(args) -> None:
-    from repro.core import context as ctx_mod
     from repro.core import predictor
-    from repro.core import slicer as slicer_mod
     from repro.core import standardize as std_mod
-    from repro.isa import funcsim, progen
-    from repro.serving.engine import PredictorEngine, Request
+    from repro.core.engine import SimulationEngine
+    from repro.isa import progen
 
     vocab = std_mod.build_vocab()
     cfg = get_config("capsim").replace(dtype="float32")
     params = predictor.init_params(cfg, jax.random.PRNGKey(0))
-    engine = PredictorEngine(params, cfg, batch_size=args.batch_size)
+    engine = SimulationEngine(
+        params, cfg, vocab, interval_size=args.interval_size, warmup=0,
+        max_checkpoints=1, l_min=100, batch_size=args.batch_size,
+        with_oracle=False)
 
     names = list(progen.TABLE_II)[: args.n_benchmarks]
+    engine.submit_names(names)
     t0 = time.time()
-    for rid, name in enumerate(names):
-        bench = progen.build_benchmark(name)
-        st = progen.fresh_state(bench)
-        trace, snaps, _ = funcsim.run(bench.program, args.interval_size,
-                                      state=st, snapshot_every=100)
-        clips = slicer_mod.slice_fixed([e.inst for e in trace], 100)
-        tok, ctx, mask = [], [], []
-        for i, c in enumerate(clips):
-            t, m = std_mod.encode_clip(c.insts, vocab, 128, 16)
-            tok.append(t)
-            mask.append(m)
-            ctx.append(ctx_mod.context_token_ids(
-                snaps[min(i, len(snaps) - 1)], vocab))
-        engine.submit(Request(rid, np.stack(tok), np.stack(ctx),
-                              np.stack(mask)))
-    results = engine.flush()
-    for name, r in zip(names, results):
-        print(f"  {name:16s} clips={r.n_clips:5d} "
-              f"predicted={r.total_cycles:12.0f} cycles")
-    print(f"served {len(results)} intervals in {time.time()-t0:.1f}s")
+    results = engine.run()
+    wall = time.time() - t0
+    stats = engine.last_stats
+    for r in results:
+        print(f"  {r.name:16s} clips={r.n_clips:5d} "
+              f"predicted={r.predicted_cycles:12.0f} cycles")
+    print(f"served {len(results)} benchmarks "
+          f"({stats.n_clips} clips, {stats.n_batches} device batches, "
+          f"{stats.n_pad} pad rows) in {wall:.1f}s "
+          f"= {stats.n_clips / max(wall, 1e-9):.0f} clips/s")
 
 
 def serve_lm(args) -> None:

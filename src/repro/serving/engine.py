@@ -2,27 +2,28 @@
 
 A *request* is one benchmark interval: the functional trace's clips
 (tokenized) whose predicted runtimes must be summed.  The engine packs
-clips from many concurrent requests into fixed-shape device batches
-(padding only the last batch), runs the jit'd predictor, and scatters the
-per-clip times back to their requests — so throughput is set by total clip
-count, not by request boundaries.  This is exactly why CAPSim's speedup
-grows with checkpoint count (paper Fig 7): requests never serialize.
+clips from many concurrent requests into fixed-shape device batches,
+runs the jit'd predictor, and scatters the per-clip times back to their
+requests — so throughput is set by total clip count, not by request
+boundaries.  This is exactly why CAPSim's speedup grows with checkpoint
+count (paper Fig 7): requests never serialize.
 
-The engine is synchronous-by-batch (submit/flush); a production front-end
-would put a queue in front, but batching policy — the part that determines
-accelerator utilization — is all here.
+The batch backend is ``repro.core.engine.BatchedPredictor``: the shared
+cached-jit predict step (no re-trace per engine instance), size-bucketed
+remainder padding (bounded compiled shapes), and async double-buffered
+dispatch.  The engine is synchronous-by-batch (submit/flush); a production
+front-end would put a queue in front, but batching policy — the part that
+determines accelerator utilization — is all in the backend.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import List
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import predictor as pred_mod
+from repro.core.engine import BatchedPredictor
 
 
 @dataclasses.dataclass
@@ -43,12 +44,12 @@ class Result:
 
 class PredictorEngine:
     def __init__(self, params, cfg, *, batch_size: int = 256,
-                 use_context: bool = True):
+                 use_context: bool = True, max_in_flight: int = 2):
         self.params = params
         self.cfg = cfg
         self.batch_size = batch_size
-        self._predict = jax.jit(
-            lambda p, b: pred_mod.predict_step(p, b, cfg, use_context))
+        self.use_context = use_context
+        self.max_in_flight = max_in_flight
         self._pending: List[Request] = []
 
     def submit(self, req: Request) -> None:
@@ -63,25 +64,13 @@ class PredictorEngine:
         self._pending = []
         t0 = time.time()
 
-        tok = np.concatenate([r.clip_tokens for r in reqs])
-        ctx = np.concatenate([r.context_tokens for r in reqs])
-        mask = np.concatenate([r.clip_mask for r in reqs])
-        n = tok.shape[0]
-        bs = self.batch_size
-        pad = (-n) % bs
-        if pad:
-            tok = np.concatenate([tok, np.repeat(tok[-1:], pad, 0)])
-            ctx = np.concatenate([ctx, np.repeat(ctx[-1:], pad, 0)])
-            mask = np.concatenate(
-                [mask, np.zeros((pad,) + mask.shape[1:], mask.dtype)])
-
-        preds = []
-        for lo in range(0, tok.shape[0], bs):
-            batch = {"clip_tokens": jnp.asarray(tok[lo:lo + bs]),
-                     "context_tokens": jnp.asarray(ctx[lo:lo + bs]),
-                     "clip_mask": jnp.asarray(mask[lo:lo + bs])}
-            preds.append(np.asarray(self._predict(self.params, batch)))
-        times = np.concatenate(preds)[:n]
+        backend = BatchedPredictor(
+            self.params, self.cfg, batch_size=self.batch_size,
+            use_context=self.use_context, max_in_flight=self.max_in_flight)
+        for r in reqs:
+            backend.add(r.clip_tokens, r.context_tokens, r.clip_mask)
+        times = backend.drain()
+        n = backend.stats.n_predicted
         seconds = time.time() - t0
 
         results = []

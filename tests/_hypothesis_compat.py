@@ -1,0 +1,63 @@
+"""Minimal stand-in for the slice of the hypothesis API these tests use.
+
+CI installs real hypothesis via ``pip install -e .[test]`` and this module
+is never imported.  In hermetic containers without the test extras, the
+property tests fall back to this shim: deterministic pseudo-random example
+generation with the same ``@given``/``@settings``/``strategies`` surface
+(no shrinking, no database — just honest example sweeps).
+"""
+from __future__ import annotations
+
+import random
+from types import SimpleNamespace
+
+_SEED = 0xCA951
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _lists(elem: _Strategy, min_size: int = 0,
+           max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elem.draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+strategies = SimpleNamespace(integers=_integers, lists=_lists)
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", 20)
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                vals = [s.draw(rng) for s in strats]
+                try:
+                    fn(*vals)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"{e}\nFalsifying example "
+                        f"(no-hypothesis fallback): {vals!r}") from e
+        # NOT functools.wraps: pytest must see a zero-arg signature, or it
+        # would treat the wrapped function's parameters as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._max_examples = getattr(fn, "_max_examples", 20)
+        return wrapper
+    return deco

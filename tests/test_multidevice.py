@@ -32,8 +32,8 @@ from repro.models.attention import (_causal_attention_chunked, flash_decode,
 from repro.models.layers import init_from_specs
 
 assert len(jax.devices()) == 8, jax.devices()
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 4), ("data", "model"))
 rng = np.random.RandomState(0)
 
 # ---------------- MoE: shard_map EP vs meshless reference ----------------

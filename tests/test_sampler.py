@@ -1,5 +1,8 @@
 """Occurrence-threshold sampler invariants (Fig 3)."""
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # container without the test extras
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.sampler import (group_by_content, occurrence_histogram,
                                 sample_clips)

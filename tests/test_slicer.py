@@ -1,6 +1,10 @@
 """Algorithm 1 invariants, unit + property-based."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # container without the test extras
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.slicer import slice_fixed, slice_trace, total_time
 from repro.isa.isa import Instruction
