@@ -125,18 +125,30 @@ def run(emit) -> None:
 
 def _sequential_simulate(bench, params, cfg, vocab, *, interval_size,
                          max_checkpoints, l_min, l_clip, l_token,
-                         batch_size):
-    """The pre-engine ``capsim_simulate`` inference path, kept verbatim as
-    the baseline: fresh ``jax.jit`` per benchmark (re-trace + re-compile),
+                         batch_size, with_oracle=False):
+    """The pre-engine, pre-IR ``capsim_simulate`` inference path, kept
+    verbatim as the baseline: the *object* interpreter
+    (``funcsim.run_reference``), per-clip Python tokenization and context
+    loops, fresh ``jax.jit`` per benchmark (re-trace + re-compile),
     per-benchmark remainder padded to a full batch, and a synchronous
-    host round-trip after every device batch."""
+    host round-trip after every device batch.
+
+    Returns ``(predicted_cycles, oracle_cycles, n_clips,
+    frontend_seconds, oracle_seconds)`` — front-end = functional sim +
+    slice + tokenize + context, the part the columnar IR replaces.
+    """
     predict = jax.jit(lambda p, b: predictor.predict_step(p, b, cfg))
     st = progen.fresh_state(bench)
     tok_l, ctx_l, mask_l = [], [], []
+    oracle_cycles = 0.0
+    fe_seconds = 0.0
+    oracle_seconds = 0.0
     for _ in range(min(bench.ckp_num, max_checkpoints)):
-        trace, snaps, st = funcsim.run(bench.program, interval_size,
-                                       state=st, snapshot_every=l_min)
+        t0 = time.time()
+        trace, snaps, st = funcsim.run_reference(
+            bench.program, interval_size, state=st, snapshot_every=l_min)
         if not trace:
+            fe_seconds += time.time() - t0
             break
         clips = slicer_mod.slice_fixed([e.inst for e in trace], l_min)
         for i, clip in enumerate(clips):
@@ -146,6 +158,11 @@ def _sequential_simulate(bench, params, cfg, vocab, *, interval_size,
             ctx_l.append(ctx_mod.context_token_ids(
                 snaps[min(i, len(snaps) - 1)], vocab))
             mask_l.append(mask)
+        fe_seconds += time.time() - t0
+        if with_oracle:
+            t0 = time.time()
+            oracle_cycles += timing.total_cycles(trace)
+            oracle_seconds += time.time() - t0
     tok, ctx, mask = np.stack(tok_l), np.stack(ctx_l), np.stack(mask_l)
     n_real = tok.shape[0]
     pad = (-n_real) % batch_size
@@ -160,15 +177,22 @@ def _sequential_simulate(bench, params, cfg, vocab, *, interval_size,
                  "context_tokens": jnp.asarray(ctx[lo:lo + batch_size]),
                  "clip_mask": jnp.asarray(mask[lo:lo + batch_size])}
         preds.append(np.asarray(predict(params, batch)))
-    return float(np.concatenate(preds)[:n_real].sum()), n_real
+    return (float(np.concatenate(preds)[:n_real].sum()), oracle_cycles,
+            n_real, fe_seconds, oracle_seconds)
 
 
 def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
     """Sequential-vs-engine clips/sec on an n-benchmark mix.
 
-    Sequential = one benchmark at a time through the seed inference loop.
-    Engine = one shared clip pool, cached jit, bucketed padding, async
-    double-buffer.  Per-benchmark predicted cycles must agree bitwise.
+    Sequential = one benchmark at a time through the seed inference loop
+    (object interpreter + per-clip Python tokenization: the pre-IR
+    baseline).  Engine = columnar trace IR front-end feeding one shared
+    clip pool, cached jit, bucketed padding, async double-buffer.
+    Per-benchmark predicted cycles AND O3 oracle cycles must agree
+    bitwise between the two paths; the front-end (functional sim + slice
+    + tokenize + context) throughput ratio is reported alongside the
+    end-to-end one, with a per-stage breakdown of where engine host time
+    goes.
     """
     vocab = build_vocab()
     cfg = bench_cfg() if quick else full_cfg()
@@ -182,36 +206,67 @@ def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
     benches = [progen.build_benchmark(name) for name in names]
     t0 = time.time()
     seq = {}
+    seq_oracle = {}
     n_clips = 0
+    seq_fe_seconds = 0.0
+    seq_oracle_seconds = 0.0
     for bench in benches:
-        cycles, k = _sequential_simulate(bench, params, cfg, vocab, **kw)
+        cycles, ocycles, k, fe_s, o_s = _sequential_simulate(
+            bench, params, cfg, vocab, with_oracle=True, **kw)
         seq[bench.name] = cycles
+        seq_oracle[bench.name] = ocycles
         n_clips += k
-    seq_seconds = time.time() - t0
+        seq_fe_seconds += fe_s
+        seq_oracle_seconds += o_s
+    seq_seconds = time.time() - t0 - seq_oracle_seconds
     seq_cps = n_clips / max(seq_seconds, 1e-9)
 
+    # timed engine run stays oracle-free so the throughput accounting is
+    # exact (host oracle work would overlap the async device pipeline,
+    # making a wall-minus-oracle subtraction overstate the engine)
     engine = SimulationEngine(params, cfg, vocab, warmup=0,
                               with_oracle=False, **kw)
-    engine.submit_names(names)
     t0 = time.time()
-    results = engine.run()
-    eng_seconds = time.time() - t0
+    results = engine.run(benches)      # reuse the built benchmarks (and
+    eng_seconds = time.time() - t0     # their compiled-program caches)
     stats = engine.last_stats
+    fe = engine.frontend_stats
     eng_cps = stats.n_clips / max(eng_seconds, 1e-9)
+
+    # untimed columnar-oracle pass over the same interval structure the
+    # engine executes: the oracle half of the bitwise gate
+    eng_oracle = {}
+    t0 = time.time()
+    for bench in benches:
+        cprog = bench.compiled()
+        cst = progen.fresh_compiled_state(bench)
+        cycles = 0.0
+        for _ in range(min(bench.ckp_num, kw["max_checkpoints"])):
+            tr, cst = funcsim.run_compiled(cprog, kw["interval_size"], cst)
+            if not len(tr):
+                break
+            cycles += timing.total_cycles_columnar(tr)
+        eng_oracle[bench.name] = cycles
+    eng_oracle_seconds = time.time() - t0
 
     per_bench = {}
     mismatches = []
     for r in results:
         equal = seq[r.name] == r.predicted_cycles
+        oracle_equal = seq_oracle[r.name] == eng_oracle[r.name]
         per_bench[r.name] = {"sequential_cycles": seq[r.name],
                              "engine_cycles": r.predicted_cycles,
-                             "bitwise_equal": equal}
-        if not equal:
+                             "bitwise_equal": equal,
+                             "sequential_oracle_cycles": seq_oracle[r.name],
+                             "engine_oracle_cycles": eng_oracle[r.name],
+                             "oracle_bitwise_equal": oracle_equal}
+        if not (equal and oracle_equal):
             mismatches.append(r.name)
     assert stats.n_clips == n_clips, \
         f"engine saw {stats.n_clips} clips, sequential saw {n_clips}"
 
     ratio = eng_cps / max(seq_cps, 1e-9)
+    fe_ratio = seq_fe_seconds / max(fe.frontend_seconds, 1e-9)
     emit.emit("speed.multi_sequential", seq_seconds * 1e6 / n_clips,
               f"{n_benchmarks} benchmarks one-at-a-time: {n_clips} clips "
               f"in {seq_seconds:.2f}s = {seq_cps:.0f} clips/s (fresh jit "
@@ -221,6 +276,13 @@ def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
               f"rows in {eng_seconds:.2f}s = {eng_cps:.0f} clips/s = "
               f"{ratio:.2f}x sequential; per-bench cycles "
               f"{'bitwise equal' if not mismatches else 'MISMATCH: ' + str(mismatches)}")
+    emit.emit("speed.multi_frontend", fe.frontend_seconds * 1e6
+              / max(n_clips, 1),
+              f"columnar IR front-end {fe.frontend_seconds:.2f}s vs "
+              f"object baseline {seq_fe_seconds:.2f}s = {fe_ratio:.2f}x "
+              f"(interpret {fe.interpret_seconds:.2f}s / tokenize "
+              f"{fe.tokenize_seconds:.2f}s / context "
+              f"{fe.context_seconds:.2f}s)")
     return {"n_benchmarks": n_benchmarks, "n_clips": n_clips,
             "quick": quick,
             "sequential_seconds": seq_seconds,
@@ -231,6 +293,13 @@ def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
             "engine_batches": stats.n_batches,
             "engine_pad_rows": stats.n_pad,
             "all_bitwise_equal": not mismatches,
+            "frontend": {
+                "sequential_seconds": seq_fe_seconds,
+                "engine": fe.as_dict(),
+                "predict_seconds": stats.predict_seconds,
+                "sequential_oracle_seconds": seq_oracle_seconds,
+                "columnar_oracle_seconds": eng_oracle_seconds,
+                "frontend_speedup": fe_ratio},
             "per_bench": per_bench}
 
 
@@ -245,8 +314,17 @@ if __name__ == "__main__":
     ap.add_argument("--min-speedup", type=float, default=1.5,
                     help="fail if engine/sequential clips/s falls below "
                          "this (the CI gate; pass 0 for measurement runs)")
+    ap.add_argument("--min-frontend-speedup", type=float, default=0.0,
+                    help="fail if columnar/object front-end throughput "
+                         "falls below this (0 disables; full-scale target "
+                         "is >= 3x)")
     ap.add_argument("--json", default=None,
                     help="write the --multi result dict to this path")
+    ap.add_argument("--breakdown-json", default=None,
+                    help="also write just the front-end breakdown dict "
+                         "(interpret/slice/tokenize/context/predict "
+                         "seconds) to this path — the CI artifact that "
+                         "tracks where host time goes across PRs")
     args = ap.parse_args()
     emitter = CsvEmitter()
     if args.multi:
@@ -254,11 +332,20 @@ if __name__ == "__main__":
                         quick=args.quick)
         if args.json:
             Path(args.json).write_text(json.dumps(res, indent=2))
+        if args.breakdown_json:
+            Path(args.breakdown_json).write_text(
+                json.dumps(res["frontend"], indent=2))
         if not res["all_bitwise_equal"]:
-            raise SystemExit("engine/sequential predicted cycles diverged")
+            raise SystemExit("engine/sequential predicted or oracle "
+                             "cycles diverged from the object path")
         if res["engine_speedup"] < args.min_speedup:
             raise SystemExit(
                 f"engine speedup {res['engine_speedup']:.2f}x < "
                 f"{args.min_speedup}x")
+        fe_ratio = res["frontend"]["frontend_speedup"]
+        if fe_ratio < args.min_frontend_speedup:
+            raise SystemExit(
+                f"front-end speedup {fe_ratio:.2f}x < "
+                f"{args.min_frontend_speedup}x")
     else:
         run(emitter)

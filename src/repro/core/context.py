@@ -44,3 +44,23 @@ def batch_context_tokens(snapshots: Sequence[Dict[str, int]],
                          vocab: Vocab) -> np.ndarray:
     """(B, 360) int32."""
     return np.stack([context_token_ids(s, vocab) for s in snapshots])
+
+
+def context_tokens_from_matrix(snapshots: np.ndarray,
+                               vocab: Vocab) -> np.ndarray:
+    """Columnar path: ``(B, 40) uint64`` snapshot matrix (rows in
+    ``CONTEXT_REGS`` order, as emitted by the columnar funcsim) ->
+    ``(B, 360) int32`` token ids, bitwise equal to stacking
+    ``context_token_ids`` over the equivalent dicts.
+
+    The per-register byte loop becomes one vectorized big-endian byte
+    decomposition: shift the whole matrix by 56..0 and mask.
+    """
+    snaps = np.ascontiguousarray(snapshots, np.uint64)
+    b = snaps.shape[0]
+    shifts = np.arange(56, -8, -8, dtype=np.uint64)      # big-endian bytes
+    bytes_ = (snaps[:, :, None] >> shifts) & np.uint64(0xFF)
+    out = np.empty((b, len(CONTEXT_REGS), TOKENS_PER_REG), np.int32)
+    out[:, :, 0] = np.asarray([vocab[r] for r in CONTEXT_REGS], np.int32)
+    out[:, :, 1:] = bytes_.astype(np.int32) + vocab[BYTE_TOKENS[0]]
+    return out.reshape(b, CONTEXT_LEN)

@@ -16,6 +16,15 @@ three factors of throughput on the floor:
      next benchmark, and ``jax.block_until_ready`` is deferred to drain
      time.
 
+The host front-end runs entirely on the columnar trace IR
+(``repro.isa.compiled``): programs are compiled once to structure-of-
+arrays, the table-dispatched interpreter emits pc/ea/taken columns plus a
+uint64 snapshot matrix, per-clip tokenization is one
+``token_table[trace.pc]`` gather, and context matrices come from a
+vectorized byte decomposition — ``FrontendStats`` breaks the host time
+down by stage (interpret / slice / tokenize / context) so regressions
+show up in the bench JSON artifact.
+
 Per-clip predictions are bitwise identical to the sequential path (XLA CPU
 rows are independent of batch composition), and per-benchmark sums are
 taken over the same contiguous per-benchmark arrays — so results demux
@@ -35,7 +44,6 @@ import numpy as np
 
 from repro.core import context as ctx_mod
 from repro.core import predictor as pred_mod
-from repro.core import slicer as slicer_mod
 from repro.core import standardize as std_mod
 from repro.isa import funcsim, progen, timing
 
@@ -89,6 +97,32 @@ def bucket_sizes(batch_size: int) -> Tuple[int, ...]:
         b = max(b // 2, 8)
         sizes.append(b)
     return tuple(sizes)
+
+
+@dataclasses.dataclass
+class FrontendStats:
+    """Host front-end breakdown across one ``SimulationEngine.run``."""
+
+    interpret_seconds: float = 0.0    # columnar functional interpreter
+    slice_seconds: float = 0.0        # clip bounds
+    tokenize_seconds: float = 0.0     # token-table gather
+    context_seconds: float = 0.0      # snapshot byte decomposition
+    n_instructions: int = 0
+    n_clips: int = 0
+
+    @property
+    def frontend_seconds(self) -> float:
+        return (self.interpret_seconds + self.slice_seconds
+                + self.tokenize_seconds + self.context_seconds)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"interpret_seconds": self.interpret_seconds,
+                "slice_seconds": self.slice_seconds,
+                "tokenize_seconds": self.tokenize_seconds,
+                "context_seconds": self.context_seconds,
+                "frontend_seconds": self.frontend_seconds,
+                "n_instructions": self.n_instructions,
+                "n_clips": self.n_clips}
 
 
 @dataclasses.dataclass
@@ -249,14 +283,15 @@ class SimulationEngine:
         self.max_checkpoints = max_checkpoints
         self.l_min = l_min
         self.l_clip = l_clip
+        self.l_token = l_token
         self.batch_size = batch_size
         self.use_context = use_context
         self.with_oracle = with_oracle
         self.timing_params = timing_params
         self.max_in_flight = max_in_flight
-        self.encoder = std_mod.ClipEncoder(vocab, l_clip, l_token)
         self._queue: List[progen.Benchmark] = []
         self.last_stats: Optional[PredictorStats] = None
+        self.frontend_stats = FrontendStats()
 
     def submit(self, bench: progen.Benchmark) -> None:
         self._queue.append(bench)
@@ -267,32 +302,49 @@ class SimulationEngine:
 
     def _functional(self, bench: progen.Benchmark, pred: BatchedPredictor,
                     job: _Job) -> None:
-        """Functional sim + slice + tokenize one benchmark, feeding clips
-        straight into the (asynchronously consuming) predictor."""
-        st = progen.fresh_state(bench)
-        _, _, st = funcsim.run(bench.program, self.warmup, state=st)
+        """Columnar functional sim + slice + tokenize one benchmark,
+        feeding clips straight into the (asynchronously consuming)
+        predictor.  Tokens/contexts are bitwise identical to the object
+        path (``ClipEncoder`` over ``slice_fixed`` clips)."""
+        fe = self.frontend_stats
+        cprog = bench.compiled()
+        token_table = cprog.token_table(self.vocab, self.l_token)
+        st = progen.fresh_compiled_state(bench)
+        t0 = time.time()
+        _, st = funcsim.run_compiled(cprog, self.warmup, st)
+        fe.interpret_seconds += time.time() - t0
         n_ckp = min(bench.ckp_num, self.max_checkpoints)
         for _ in range(n_ckp):
-            trace, snaps, st = funcsim.run(
-                bench.program, self.interval_size, state=st,
-                snapshot_every=self.l_min)
-            if not trace:
+            t0 = time.time()
+            trace, st = funcsim.run_compiled(
+                cprog, self.interval_size, st, snapshot_every=self.l_min)
+            fe.interpret_seconds += time.time() - t0
+            n = len(trace)
+            if not n:
                 break
             job.n_intervals += 1
-            job.n_instructions += len(trace)
-            clips = slicer_mod.slice_fixed([e.inst for e in trace],
-                                           self.l_min)
-            tok, mask = self.encoder.encode(
-                [clip.insts for clip in clips])
-            ctx = np.stack([
-                ctx_mod.context_token_ids(
-                    snaps[min(i, len(snaps) - 1)], self.vocab)
-                for i in range(len(clips))])
-            job.n_clips += len(clips)
+            job.n_instructions += n
+            fe.n_instructions += n
+
+            t0 = time.time()
+            tok, mask = std_mod.encode_fixed_clips(
+                token_table, trace.pc, self.l_min, self.l_clip)
+            n_clips = tok.shape[0]                 # slice_fixed partition
+            fe.tokenize_seconds += time.time() - t0
+
+            t0 = time.time()
+            ctx_all = ctx_mod.context_tokens_from_matrix(
+                trace.snapshots, self.vocab)
+            rows = np.minimum(np.arange(n_clips), len(ctx_all) - 1)
+            ctx = ctx_all[rows]
+            fe.context_seconds += time.time() - t0
+
+            job.n_clips += n_clips
+            fe.n_clips += n_clips
             pred.add(tok, ctx, mask)
             if self.with_oracle:
                 t0 = time.time()
-                job.oracle_cycles += timing.total_cycles(
+                job.oracle_cycles += timing.total_cycles_columnar(
                     trace, self.timing_params)
                 job.oracle_seconds += time.time() - t0
 
@@ -304,6 +356,7 @@ class SimulationEngine:
         self._queue = []
         if benches is not None:
             jobs.extend(_Job(b) for b in benches)
+        self.frontend_stats = FrontendStats()
         pred = BatchedPredictor(
             self.params, self.cfg, batch_size=self.batch_size,
             use_context=self.use_context, max_in_flight=self.max_in_flight)

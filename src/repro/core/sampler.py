@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, Hashable, List, Sequence, Tuple
 
 from repro.core.slicer import Clip
 
@@ -54,9 +54,13 @@ def occurrence_histogram(clips: Sequence[Clip]) -> List[int]:
                   reverse=True)
 
 
-def sample_clips(clips: Sequence[Clip], threshold: int = 200,
-                 coef: float = 0.02) -> Tuple[List[Clip], SampleStats]:
-    groups = group_by_content(clips)
+def select_from_groups(groups: Dict[Hashable, List[int]], n_in: int,
+                       threshold: int, coef: float
+                       ) -> Tuple[List[int], SampleStats]:
+    """Core selection over content groups (key -> occurrence indices in
+    order of appearance); returns kept indices, sorted ascending.
+    Shared by the object (``sample_clips``) and columnar
+    (``sample_indices``) paths."""
     # deterministic order: by count desc, then first appearance
     ordered = sorted(groups.items(), key=lambda kv: (-len(kv[1]), kv[1][0]))
 
@@ -79,7 +83,25 @@ def sample_clips(clips: Sequence[Clip], threshold: int = 200,
             rare_rank += 1
 
     keep.sort()
-    stats = SampleStats(n_in=len(clips), n_out=len(keep),
+    stats = SampleStats(n_in=n_in, n_out=len(keep),
                         n_groups=len(ordered), n_frequent_groups=n_freq,
                         n_rare_groups=n_rare, n_rare_groups_kept=n_rare_kept)
+    return keep, stats
+
+
+def sample_clips(clips: Sequence[Clip], threshold: int = 200,
+                 coef: float = 0.02) -> Tuple[List[Clip], SampleStats]:
+    keep, stats = select_from_groups(group_by_content(clips), len(clips),
+                                     threshold, coef)
     return [clips[i] for i in keep], stats
+
+
+def sample_indices(keys: Sequence[Hashable], threshold: int = 200,
+                   coef: float = 0.02) -> Tuple[List[int], SampleStats]:
+    """Columnar path: clips are identified by precomputed content keys
+    (e.g. the bytes of their gathered standardized-token rows) instead of
+    materialized ``Clip`` objects.  Returns kept clip indices."""
+    groups: Dict[Hashable, List[int]] = defaultdict(list)
+    for i, k in enumerate(keys):
+        groups[k].append(i)
+    return select_from_groups(groups, len(keys), threshold, coef)

@@ -11,11 +11,20 @@ the previous commit time and the clip's begin time.
 At inference CAPSim has no commit times (the functional simulator is
 atomic), so ``slice_fixed`` cuts every ``l_min`` instructions; the
 commit-boundary rule exists to make *training* targets exact.
+
+Columnar path: on a ``repro.isa.compiled.Trace`` a clip is just a
+``(start, end)`` view into the trace columns, so ``fixed_bounds`` and
+``slice_trace_columnar`` return ``(k, 2)`` bound arrays (plus times)
+instead of materialized ``Clip`` objects — ``slice_trace_columnar`` finds
+commit-time boundaries with one ``np.diff`` and a greedy pass over the
+(few) change points.  ``clips_from_columnar`` is the object adapter.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.isa.isa import Instruction
 
@@ -25,15 +34,16 @@ class Clip:
     insts: List[Instruction]
     time: float                 # runtime in cycles (0.0 when unknown)
     start: int                  # trace position of first instruction
-    # content key for the sampler (filled lazily)
-    _key: int = 0
+    # content key for the sampler (None = not yet computed; a computed
+    # key may legitimately be 0, so 0 must not double as the sentinel)
+    _key: Optional[int] = None
 
     def __len__(self) -> int:
         return len(self.insts)
 
     @property
     def key(self) -> int:
-        if self._key == 0:
+        if self._key is None:
             self._key = hash(tuple(
                 (i.op, i.dsts, i.srcs, i.imm is not None,
                  i.mem_base) for i in self.insts))
@@ -90,3 +100,89 @@ def clip_boundaries(clips: Sequence[Clip]) -> List[int]:
 
 def total_time(clips: Sequence[Clip]) -> float:
     return sum(c.time for c in clips)
+
+
+# --------------------------------------------------------------------------- #
+# Columnar slicing: clips as (start, end) bounds into trace columns
+# --------------------------------------------------------------------------- #
+
+def fixed_bounds(n: int, l_min: int) -> np.ndarray:
+    """``slice_fixed`` bounds: ``(k, 2) int64`` rows of (start, end).
+
+    Same clip partition as ``slice_fixed`` over an ``n``-entry trace:
+    full ``l_min`` windows plus one remainder clip.
+    """
+    starts = np.arange(0, max(n - l_min + 1, 0), l_min, dtype=np.int64)
+    ends = starts + l_min
+    rem = n % l_min
+    if rem:
+        starts = np.append(starts, n - rem)
+        ends = np.append(ends, n)
+    return np.stack([starts, ends], axis=1)
+
+
+def slice_trace_columnar(commit_times: np.ndarray, l_min: int
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Columnar Algorithm 1 over a commit-cycle column.
+
+    Returns ``(bounds, times)``: ``bounds[j] = (start, end)`` indexes the
+    trace columns and ``times[j]`` is the clip runtime.  Equivalent to
+    ``slice_trace`` with one quirk inherited from it: Algorithm 1 seeds
+    the block with I[0], so clip 0 additionally carries a duplicated
+    leading instruction (``clips_from_columnar`` reproduces it; bounds
+    alone describe clips 1..k-1 exactly).
+
+    A clip closes at trace position ``idx`` when the block holds at
+    least ``l_min`` instructions and ``commit[idx] != commit[idx-1]`` —
+    i.e. at a commit-time *change point*, found here with ``np.diff``;
+    the greedy selection walks only the change points, not the trace.
+    """
+    c = np.asarray(commit_times, np.float64)
+    n = c.shape[0]
+    if n == 0:
+        return np.zeros((0, 2), np.int64), np.zeros(0, np.float64)
+    changes = np.flatnonzero(np.diff(c) != 0.0) + 1
+    if c[0] != 0.0:                            # time_prev starts at 0.0
+        changes = np.concatenate([[0], changes])
+    closes: List[int] = []
+    last = -1
+    for idx in changes.tolist():
+        if idx - last >= l_min:                # block_length == idx - last
+            closes.append(idx)
+            last = idx
+    k = len(closes)
+    if k == 0:
+        return np.zeros((0, 2), np.int64), np.zeros(0, np.float64)
+    ends = np.asarray(closes, np.int64)
+    starts = np.concatenate([[0], ends[:-1]])
+    # clip j runtime telescopes between the commit times just before the
+    # closes; time_begin is 0.0 before the first close
+    prev_commit = np.where(ends >= 1, c[np.maximum(ends - 1, 0)], 0.0)
+    times = np.diff(np.concatenate([[0.0], prev_commit]))
+    return np.stack([starts, ends], axis=1), times
+
+
+def clip_lengths(bounds: np.ndarray) -> np.ndarray:
+    """Instruction count per columnar clip (clip 0 carries the
+    duplicated leading instruction — see ``slice_trace_columnar``)."""
+    lens = bounds[:, 1] - bounds[:, 0]
+    if len(lens):
+        lens = lens.copy()
+        lens[0] += 1
+    return lens
+
+
+def clips_from_columnar(insts: Sequence[Instruction], bounds: np.ndarray,
+                        times: Optional[np.ndarray] = None) -> List[Clip]:
+    """Object adapter: materialize ``Clip``s from columnar bounds
+    (matches ``slice_trace`` bit for bit, duplicated lead included)."""
+    out: List[Clip] = []
+    for j in range(bounds.shape[0]):
+        s, e = int(bounds[j, 0]), int(bounds[j, 1])
+        body = list(insts[s:e])
+        if j == 0:
+            body = [insts[0]] + body
+        out.append(Clip(insts=body,
+                        time=float(times[j]) if times is not None else 0.0,
+                        start=s))
+    return out

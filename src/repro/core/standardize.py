@@ -210,6 +210,47 @@ class ClipEncoder:
 
 def encode_clips(clips: Sequence[Sequence[Instruction]], vocab: Vocab,
                  l_clip: int, l_token: int) -> Tuple[np.ndarray, np.ndarray]:
-    """One-shot batch encode (fresh memo); engines keep a ``ClipEncoder``
-    across benchmarks so the memo amortizes over the whole queue."""
+    """One-shot batch encode (fresh memo) over object clips.  The engine
+    itself tokenizes via the columnar gather path below; this object
+    path remains for ad-hoc callers and differential tests."""
     return ClipEncoder(vocab, l_clip, l_token).encode(clips)
+
+
+# --------------------------------------------------------------------------- #
+# Columnar gather path
+# --------------------------------------------------------------------------- #
+#
+# Standardization depends only on the *static* instruction, so a
+# ``CompiledProgram.token_table(vocab, l_token)`` row gathered by trace pc
+# is bitwise the row ``encode_instruction`` would produce.  Tokenizing a
+# fixed-sliced trace then needs no per-instruction Python at all: one
+# fancy-index gather plus a reshape.
+
+def encode_fixed_clips(token_table: np.ndarray, pcs: np.ndarray,
+                       l_min: int, l_clip: int
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Gather-tokenize a fixed-sliced columnar trace.
+
+    ``token_table`` is the program's ``(n_static, l_token)`` table and
+    ``pcs`` the trace pc column; clips are the ``slice_fixed`` partition
+    (``l_min`` windows + remainder).  Returns the same
+    ``((n_clips, l_clip, l_token) int32, (n_clips, l_clip) float32)``
+    bits as ``ClipEncoder.encode`` over the object clips.
+    """
+    l_token = token_table.shape[1]
+    n = pcs.shape[0]
+    k_full, rem = n // l_min, n % l_min
+    n_clips = k_full + (1 if rem else 0)
+    toks = np.zeros((n_clips, l_clip, l_token), np.int32)
+    mask = np.zeros((n_clips, l_clip), np.float32)
+    rows = token_table[pcs]
+    w = min(l_min, l_clip)
+    if k_full:
+        full = rows[: k_full * l_min].reshape(k_full, l_min, l_token)
+        toks[:k_full, :w] = full[:, :w]
+        mask[:k_full, :w] = 1.0
+    if rem:
+        r = min(rem, l_clip)
+        toks[k_full, :r] = rows[n - rem: n - rem + r]
+        mask[k_full, :r] = 1.0
+    return toks, mask

@@ -2,14 +2,19 @@
 traces -> sliced clips -> sampled + tokenized tensors.
 
 Per benchmark checkpoint (interval):
-  1. functional warm-up, then trace the interval (isa/funcsim),
-  2. O3 oracle assigns commit cycles (isa/timing) — the golden runtimes,
-  3. Algorithm 1 slices the trace into clips (core/slicer),
-  4. the occurrence sampler thins the clip set (core/sampler),
+  1. functional warm-up, then trace the interval (columnar funcsim over
+     the benchmark's ``CompiledProgram``),
+  2. O3 oracle assigns commit cycles (columnar ``isa/timing``) — the
+     golden runtimes,
+  3. Algorithm 1 slices the trace into (start, end) clip bounds
+     (``slicer.slice_trace_columnar``: one np.diff + a greedy pass),
+  4. the occurrence sampler thins the clip set (core/sampler) — clip
+     content keys are the bytes of gathered standardized-token rows,
   5. a replay pass snapshots the architectural context at each surviving
-     clip's start (the CPU state *before* the clip, §V-B),
-  6. standardization + context tokenization produce fixed-shape int32
-     tensors ready for the predictor.
+     clip's start (the CPU state *before* the clip, §V-B) into a uint64
+     snapshot matrix,
+  6. a token-table gather + vectorized byte decomposition produce the
+     fixed-shape int32 tensors — no per-instruction Python.
 
 The arrays are plain numpy: each data-parallel host builds/loads its own
 shard (clips are i.i.d., so sharding is a pure range split — see
@@ -17,7 +22,6 @@ shard (clips are i.i.d., so sharding is a pure range split — see
 """
 from __future__ import annotations
 
-import copy
 import dataclasses
 import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
@@ -84,39 +88,65 @@ class ClipDataset:
                            [str(s) for s in z["bench_names"]])
 
 
+def _gather_clip(rows: np.ndarray, start: int, end: int, lead_dup: bool,
+                 l_clip: int) -> Tuple[np.ndarray, int]:
+    """Token rows for one columnar clip (clip 0 carries Algorithm 1's
+    duplicated leading instruction), truncated to ``l_clip``."""
+    body = rows[start:end]
+    if lead_dup:
+        body = np.concatenate([rows[:1], body])
+    k = min(body.shape[0], l_clip)
+    return body[:k], k
+
+
 def build_bench_clips(bench: progen.Benchmark, bcfg: BuildConfig,
                       vocab: std_mod.Vocab) -> ClipDataset:
-    """Steps 1-6 for one benchmark."""
-    st = progen.fresh_state(bench)
-    _, _, st = funcsim.run(bench.program, bcfg.warmup, state=st)
+    """Steps 1-6 for one benchmark, entirely on the columnar IR."""
+    cprog = bench.compiled()
+    token_table = cprog.token_table(vocab, bcfg.l_token)
+    st = progen.fresh_compiled_state(bench)
+    _, st = funcsim.run_compiled(cprog, bcfg.warmup, st)
 
     tok_list, ctx_list, mask_list, time_list = [], [], [], []
     n_ckp = min(bench.ckp_num, bcfg.max_checkpoints)
     for _ in range(n_ckp):
-        st_ckp = copy.deepcopy(st)                      # replay anchor
-        trace, _, st = funcsim.run(bench.program, bcfg.interval_size,
-                                   state=st)
-        if not trace:
+        st_ckp = st.clone()                             # replay anchor
+        trace, st = funcsim.run_compiled(cprog, bcfg.interval_size, st)
+        if not len(trace):
             break
-        commits = timing.simulate(trace, bcfg.timing_params)
-        clips = slicer_mod.slice_trace([e.inst for e in trace], commits,
-                                       bcfg.l_min)
-        if bcfg.sample and clips:
-            clips, _ = sampler_mod.sample_clips(clips, bcfg.threshold,
-                                                bcfg.coef)
-        if not clips:
+        commits = timing.simulate_columnar(trace, bcfg.timing_params)
+        bounds, times = slicer_mod.slice_trace_columnar(commits, bcfg.l_min)
+        if not len(bounds):
             continue
-        starts = [c.start for c in clips]
-        _, snaps, _ = funcsim.run(bench.program, bcfg.interval_size,
-                                  state=st_ckp, snapshot_at=starts)
-        assert len(snaps) == len(clips), (len(snaps), len(clips))
-        for clip, snap in zip(clips, snaps):
-            toks, mask = std_mod.encode_clip(clip.insts, vocab,
-                                             bcfg.l_clip, bcfg.l_token)
+        rows = token_table[trace.pc]
+        if bcfg.sample:
+            # content key = the clip's standardized-token bytes: exactly
+            # what Fig-5 standardization preserves of the instructions
+            keys = [_gather_clip(rows, int(s), int(e), j == 0,
+                                 10 ** 9)[0].tobytes()
+                    for j, (s, e) in enumerate(bounds)]
+            keep, _ = sampler_mod.sample_indices(keys, bcfg.threshold,
+                                                 bcfg.coef)
+        else:
+            keep = list(range(len(bounds)))
+        if not keep:
+            continue
+        starts = bounds[keep, 0].tolist()
+        replay, _ = funcsim.run_compiled(cprog, bcfg.interval_size, st_ckp,
+                                         snapshot_at=starts)
+        snaps = replay.snapshots
+        assert snaps.shape[0] == len(keep), (snaps.shape, len(keep))
+        ctx_list.append(ctx_mod.context_tokens_from_matrix(snaps, vocab))
+        for row_i, j in enumerate(keep):
+            body, k = _gather_clip(rows, int(bounds[j, 0]),
+                                   int(bounds[j, 1]), j == 0, bcfg.l_clip)
+            toks = np.zeros((bcfg.l_clip, bcfg.l_token), np.int32)
+            toks[:k] = body
+            mask = np.zeros(bcfg.l_clip, np.float32)
+            mask[:k] = 1.0
             tok_list.append(toks)
-            ctx_list.append(ctx_mod.context_token_ids(snap, vocab))
             mask_list.append(mask)
-            time_list.append(clip.time)
+            time_list.append(float(times[j]))
 
     n = len(tok_list)
     if n == 0:
@@ -125,7 +155,7 @@ def build_bench_clips(bench: progen.Benchmark, bcfg: BuildConfig,
             np.zeros((0, ctx_mod.CONTEXT_LEN), np.int32),
             np.zeros((0, bcfg.l_clip), np.float32),
             np.zeros((0,), np.float32), [])
-    return ClipDataset(np.stack(tok_list), np.stack(ctx_list),
+    return ClipDataset(np.stack(tok_list), np.concatenate(ctx_list),
                        np.stack(mask_list),
                        np.asarray(time_list, np.float32),
                        [bench.name] * n)

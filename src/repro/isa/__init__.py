@@ -1,1 +1,3 @@
+from repro.isa.compiled import (CompileError, CompiledProgram,  # noqa: F401
+                                Trace, compile_program)
 from repro.isa.isa import Instruction, OPCODES, REGS  # noqa: F401

@@ -23,7 +23,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.isa.funcsim import MachineState
+from repro.isa.compiled import CompiledProgram, compile_program
+from repro.isa.funcsim import CompiledState, MachineState
 from repro.isa.isa import Instruction
 
 I = Instruction
@@ -67,10 +68,18 @@ class Benchmark:
     ckp_num: int
     program: List[Instruction]
     setup: Callable[[MachineState], None]
+    _compiled: Optional[CompiledProgram] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def tag_list(self) -> Tuple[str, ...]:
         return tuple(self.tags.split("+"))
+
+    def compiled(self) -> CompiledProgram:
+        """Columnar SoA form of ``program``, compiled once per benchmark."""
+        if self._compiled is None:
+            self._compiled = compile_program(self.program)
+        return self._compiled
 
 
 # --------------------------------------------------------------------------- #
@@ -310,3 +319,8 @@ def fresh_state(bench: Benchmark) -> MachineState:
     st = MachineState.fresh()
     bench.setup(st)
     return st
+
+
+def fresh_compiled_state(bench: Benchmark) -> CompiledState:
+    """Columnar initial state (setup still writes the object form)."""
+    return CompiledState.from_machine(fresh_state(bench))

@@ -22,6 +22,9 @@ import dataclasses
 from collections import defaultdict
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
+from repro.isa import compiled as comp
 from repro.isa.funcsim import TraceEntry
 from repro.isa.isa import OPCODES
 
@@ -210,3 +213,203 @@ def total_cycles(trace: Sequence[TraceEntry],
                  params: TimingParams = TimingParams()) -> int:
     c = simulate(trace, params)
     return c[-1] if c else 0
+
+
+# --------------------------------------------------------------------------- #
+# Columnar path: same greedy model over ``repro.isa.compiled.Trace``
+# --------------------------------------------------------------------------- #
+
+FU_ORDER = ("int", "mul", "div", "fp", "fdiv", "lsu", "br")
+_FU_INDEX = {cls: i for i, cls in enumerate(FU_ORDER)}
+
+
+def _static_tables(cprog: comp.CompiledProgram):
+    """Per-static-instruction operand/property tables for the columnar
+    oracle: everything ``simulate`` reads off ``TraceEntry.inst`` is
+    precomputed once per program instead of per dynamic instruction.
+
+    ``read_slots[pc]`` folds explicit sources, the memory base, and the
+    implicit CR/CTR/LR reads into one tuple of unified register slots;
+    ``write_slots[pc]`` does the same for destinations and implicit
+    writes — so the hot loop is pure list indexing.
+    """
+    if cprog._timing_tables is not None:
+        return cprog._timing_tables
+    fu_idx: List[int] = []
+    latency: List[int] = []
+    is_load: List[bool] = []
+    is_store: List[bool] = []
+    is_branch: List[bool] = []
+    read_slots: List[Tuple[int, ...]] = []
+    write_slots: List[Tuple[int, ...]] = []
+    for i, inst in enumerate(cprog.insts):
+        info = OPCODES[inst.op]
+        fu_idx.append(_FU_INDEX[info.fu])
+        latency.append(info.latency)
+        is_load.append(info.is_load)
+        is_store.append(info.is_store)
+        is_branch.append(info.is_branch)
+        reads = [int(x) for x in cprog.srcs[i] if x >= 0]
+        if cprog.mem_base[i] >= 0:
+            reads.append(int(cprog.mem_base[i]))
+        if info.uses_ctr:
+            reads.append(comp.CTR_SLOT)
+        if inst.op == "bc":
+            reads.append(comp.CR_SLOT)
+        if inst.op == "blr":
+            reads.append(comp.LR_SLOT)
+        read_slots.append(tuple(reads))
+        writes = [int(x) for x in cprog.dsts[i] if x >= 0]
+        if info.writes_cr:
+            writes.append(comp.CR_SLOT)
+        if info.writes_lr:
+            writes.append(comp.LR_SLOT)
+        if info.uses_ctr:
+            writes.append(comp.CTR_SLOT)
+        write_slots.append(tuple(writes))
+    tables = (fu_idx, latency, is_load, is_store, is_branch,
+              read_slots, write_slots)
+    cprog._timing_tables = tables
+    return tables
+
+
+def simulate_columnar(trace: comp.Trace,
+                      params: TimingParams = TimingParams()) -> np.ndarray:
+    """Commit cycle of every instruction in a columnar ``Trace``.
+
+    Bitwise identical to ``simulate`` on the equivalent object trace:
+    the same greedy bookkeeping, with per-static decode hoisted out of
+    the loop and name-keyed dicts replaced by slot-indexed lists.
+    """
+    p = params
+    n = len(trace)
+    commit = [0] * n
+    if n == 0:
+        return np.zeros(0, np.int64)
+
+    (fu_idx, latency_t, is_load_t, is_store_t, is_branch_t,
+     read_slots, write_slots) = _static_tables(trace.program)
+    pcs = trace.pc.tolist()
+    eas = trace.ea.tolist()
+    takens = trace.taken.tolist()
+
+    fu_units: List[List[int]] = [[] for _ in FU_ORDER]
+    for cls, cnt in p.fu_counts:
+        fu_units[_FU_INDEX[cls]] = [0] * cnt
+    itags = [-1] * p.icache_lines
+    dtags = [-1] * p.dcache_lines
+    n_ilines, n_dlines = p.icache_lines, p.dcache_lines
+    bpred: Dict[int, int] = {}
+    mshr: List[int] = [0] * p.mshr_entries
+    reg_ready = [0] * comp.N_SLOTS
+    issue_used: Dict[int, int] = defaultdict(int)
+    store_ready: Dict[int, int] = {}
+
+    fetch_cycle = 0
+    fetch_in_group = 0
+    fetch_barrier = 0
+    commit_cycle = 0
+    commit_in_group = 0
+
+    for i in range(n):
+        pc = pcs[i]
+
+        # ---------------- fetch ----------------
+        line = pc // p.icache_line_insts
+        idx = line % n_ilines
+        if itags[idx] != line:
+            itags[idx] = line
+            fetch_barrier = max(fetch_barrier,
+                                fetch_cycle + p.icache_miss_cycles)
+        else:
+            itags[idx] = line
+        if fetch_cycle < fetch_barrier:
+            fetch_cycle = fetch_barrier
+            fetch_in_group = 0
+        elif fetch_in_group >= p.fetch_width:
+            fetch_cycle += 1
+            fetch_in_group = 0
+            if fetch_cycle < fetch_barrier:
+                fetch_cycle = fetch_barrier
+        f_cyc = fetch_cycle
+        fetch_in_group += 1
+
+        # ---------------- dispatch (ROB back-pressure) ----------------
+        disp = f_cyc + p.decode_depth
+        if i >= p.rob_entries:
+            disp = max(disp, commit[i - p.rob_entries])
+
+        # ---------------- operand readiness ----------------
+        ready = disp
+        for s in read_slots[pc]:
+            r = reg_ready[s]
+            if r > ready:
+                ready = r
+
+        # ---------------- issue: FU + issue-bandwidth ----------------
+        units = fu_units[fu_idx[pc]]
+        u = min(range(len(units)), key=units.__getitem__)
+        issue = max(ready, units[u])
+        while issue_used[issue] >= p.issue_width:
+            issue += 1
+        issue_used[issue] += 1
+
+        # ---------------- execute ----------------
+        lat = latency_t[pc]
+        if is_load_t[pc]:
+            mline = eas[i] // p.dcache_line_bytes
+            didx = mline % n_dlines
+            hit = dtags[didx] == mline
+            dtags[didx] = mline
+            lat = p.dcache_hit_cycles if hit else p.dcache_miss_cycles
+            dep = store_ready.get(mline)
+            if dep is not None:              # store-to-load forwarding point
+                issue = max(issue, dep)
+            if not hit:                      # MSHR slot bounds miss overlap
+                m = min(range(len(mshr)), key=mshr.__getitem__)
+                issue = max(issue, mshr[m])
+                mshr[m] = issue + lat
+        complete = issue + lat
+        units[u] = issue + 1                 # pipelined FUs: 1-cycle occupancy
+        fu = fu_idx[pc]
+        if fu == 2 or fu == 4:               # unpipelined div/fdiv
+            units[u] = complete
+
+        # ---------------- writeback ----------------
+        for d in write_slots[pc]:
+            reg_ready[d] = complete
+        if is_store_t[pc]:
+            mline = eas[i] // p.dcache_line_bytes
+            dtags[mline % n_dlines] = mline
+            store_ready[mline] = complete
+
+        # ---------------- branch resolution ----------------
+        if is_branch_t[pc] and takens[i] >= 0:
+            c = bpred.get(pc, 2)
+            pred = c >= 2
+            taken = takens[i] == 1
+            bpred[pc] = min(3, c + 1) if taken else max(0, c - 1)
+            if pred != taken:
+                fetch_barrier = max(fetch_barrier,
+                                    complete + p.mispredict_penalty)
+
+        # ---------------- commit (in order) ----------------
+        c = complete + 1
+        if c < commit_cycle:
+            c = commit_cycle
+        if c > commit_cycle:
+            commit_cycle = c
+            commit_in_group = 0
+        elif commit_in_group >= p.commit_width:
+            commit_cycle += 1
+            commit_in_group = 0
+        commit_in_group += 1
+        commit[i] = commit_cycle
+
+    return np.asarray(commit, np.int64)
+
+
+def total_cycles_columnar(trace: comp.Trace,
+                          params: TimingParams = TimingParams()) -> int:
+    c = simulate_columnar(trace, params)
+    return int(c[-1]) if len(c) else 0

@@ -1,0 +1,125 @@
+"""Property tests for the O3 timing oracle (isa/timing).
+
+Invariants on random programs: commit cycles are monotone non-decreasing,
+at most ``commit_width`` instructions commit per cycle, and the columnar
+oracle (``simulate_columnar`` over the trace IR) is bitwise equal to the
+object oracle (``simulate`` over ``TraceEntry`` lists).
+"""
+from collections import Counter
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # container without the test extras
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.isa import funcsim, timing
+from repro.isa.compiled import compile_program
+from repro.isa.isa import Instruction
+
+I = Instruction
+MAX_STEPS = 500
+
+
+def random_program(seed: int, n: int):
+    """Random but well-formed mini-Power program: ALU/mul/div chains,
+    loads/stores, float ops, compares, and data-dependent branches with
+    in-range targets (loops are fine — execution is step-capped)."""
+    rng = np.random.RandomState(seed)
+
+    def gr():
+        return f"R{int(rng.randint(0, 32))}"
+
+    def fr():
+        return f"F{int(rng.randint(0, 32))}"
+
+    prog = []
+    for _ in range(n):
+        r = rng.rand()
+        if r < 0.22:
+            prog.append(I("addi", dsts=(gr(),), srcs=(gr(),),
+                          imm=int(rng.randint(-100, 100))))
+        elif r < 0.34:
+            prog.append(I("add", dsts=(gr(),), srcs=(gr(), gr())))
+        elif r < 0.42:
+            prog.append(I("mulld", dsts=(gr(),), srcs=(gr(), gr())))
+        elif r < 0.46:
+            prog.append(I("divd", dsts=(gr(),), srcs=(gr(), gr())))
+        elif r < 0.58:
+            prog.append(I("ld", dsts=(gr(),), mem_base=gr(),
+                          mem_offset=8 * int(rng.randint(0, 64))))
+        elif r < 0.68:
+            prog.append(I("std", srcs=(gr(),), mem_base=gr(),
+                          mem_offset=8 * int(rng.randint(0, 64))))
+        elif r < 0.76:
+            prog.append(I("fmadd", dsts=(fr(),), srcs=(fr(), fr(), fr())))
+        elif r < 0.84:
+            prog.append(I("cmpi", srcs=(gr(),),
+                          imm=int(rng.randint(-20, 50))))
+        elif r < 0.94:
+            prog.append(I("bc", imm=int(rng.randint(0, 4)),
+                          target=int(rng.randint(0, n))))
+        else:
+            prog.append(I("b", target=int(rng.randint(0, n))))
+    return prog
+
+
+def _object_trace(prog):
+    trace, _, _ = funcsim.run_reference(prog, MAX_STEPS)
+    return trace
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=8, max_value=64))
+def test_commit_cycles_monotone(seed, n):
+    trace = _object_trace(random_program(seed, n))
+    commits = timing.simulate(trace)
+    assert all(b >= a for a, b in zip(commits, commits[1:]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=8, max_value=64),
+       st.integers(min_value=1, max_value=8))
+def test_commit_width_respected(seed, n, width):
+    trace = _object_trace(random_program(seed, n))
+    params = timing.TimingParams(commit_width=width)
+    commits = timing.simulate(trace, params)
+    if commits:
+        assert max(Counter(commits).values()) <= width
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=8, max_value=64),
+       st.integers(min_value=1, max_value=8))
+def test_columnar_oracle_bitwise_equals_object(seed, n, width):
+    """simulate_columnar(Trace) == simulate(List[TraceEntry]) bit for bit
+    on random traces, across commit widths."""
+    prog = random_program(seed, n)
+    trace_ref = _object_trace(prog)
+    cprog = compile_program(prog)
+    trace_col, _ = funcsim.run_compiled(cprog, MAX_STEPS)
+    assert trace_col.pc.tolist() == [e.pc for e in trace_ref]
+    params = timing.TimingParams(commit_width=width)
+    np.testing.assert_array_equal(
+        timing.simulate_columnar(trace_col, params),
+        np.asarray(timing.simulate(trace_ref, params), np.int64))
+
+
+def test_columnar_oracle_on_benchmarks():
+    """Full-parameter bitwise equality on real benchmark traces."""
+    from repro.isa import progen
+    for name in ("505.mcf", "531.deepsjeng", "503.bwaves"):
+        bench = progen.build_benchmark(name)
+        ref, _, _ = funcsim.run_reference(bench.program, 2_000,
+                                          state=progen.fresh_state(bench))
+        col, _ = funcsim.run_compiled(bench.compiled(), 2_000,
+                                      progen.fresh_compiled_state(bench))
+        np.testing.assert_array_equal(
+            timing.simulate_columnar(col),
+            np.asarray(timing.simulate(ref), np.int64))
+        assert timing.total_cycles_columnar(col) == \
+            timing.total_cycles(ref)

@@ -1,0 +1,233 @@
+"""Columnar trace IR: CompiledProgram round-trips, columnar funcsim ==
+object interpreter, gather-tokenize == ClipEncoder, columnar slicing ==
+Algorithm 1, columnar dataset build == object reference."""
+import numpy as np
+import pytest
+
+from repro.core import context as ctx_mod
+from repro.core import slicer as slicer_mod
+from repro.core import standardize as std_mod
+from repro.core.standardize import ClipEncoder, build_vocab
+from repro.data.dataset import BuildConfig, build_bench_clips
+from repro.isa import funcsim, progen, timing
+from repro.isa.compiled import (CompileError, OP_IS_MEM, compile_program)
+from repro.isa.isa import Instruction
+
+I = Instruction
+VOCAB = build_vocab()
+ALL_NAMES = sorted(progen.TABLE_II)
+N_STEPS = 1_200
+
+
+def _traces(name, n=N_STEPS, snapshot_every=100):
+    bench = progen.build_benchmark(name)
+    ref = funcsim.run_reference(bench.program, n,
+                                state=progen.fresh_state(bench),
+                                snapshot_every=snapshot_every)
+    col = funcsim.run_compiled(bench.compiled(), n,
+                               progen.fresh_compiled_state(bench),
+                               snapshot_every=snapshot_every)
+    return bench, ref, col
+
+
+# ------------------------------ round-trip ------------------------------ #
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_compiled_program_roundtrips(name):
+    prog = progen.build_benchmark(name).program
+    cprog = compile_program(prog)
+    assert cprog.n_static == len(prog)
+    assert cprog.decode() == list(prog)
+
+
+def test_roundtrip_preserves_zero_valued_fields():
+    # imm=0 and target=0 are legitimate and distinct from "absent"
+    prog = [I("addi", dsts=("R1",), imm=0),
+            I("cmpi", srcs=("R1",), imm=0),
+            I("b", target=0)]
+    cprog = compile_program(prog)
+    assert cprog.decode() == prog
+
+
+def test_compile_error_falls_back_to_reference():
+    # four sources overflow the SoA columns; the object adapter must
+    # still execute the program (via run_reference)
+    prog = [I("addi", dsts=("R1",), imm=7),
+            I("add", dsts=("R2",), srcs=("R1", "R1", "R1", "R1"))]
+    with pytest.raises(CompileError):
+        compile_program(prog)
+    trace, _, st = funcsim.run(prog, 10)
+    assert st.regs["R2"] == 14 and len(trace) == 2
+
+
+# ------------------- columnar interpreter equivalence ------------------- #
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_columnar_funcsim_matches_object(name):
+    """Trace columns, snapshots, and final MachineState are bitwise equal
+    to the object interpreter on every progen benchmark."""
+    bench, (tr_ref, snaps_ref, st_ref), (tr_col, st_col) = _traces(name)
+    assert tr_col.pc.tolist() == [e.pc for e in tr_ref]
+    assert tr_col.ea.tolist() == [e.ea if e.ea is not None else 0
+                                  for e in tr_ref]
+    assert tr_col.taken.tolist() == [-1 if e.taken is None
+                                     else int(e.taken) for e in tr_ref]
+    assert tr_col.snapshot_dicts() == snaps_ref
+    m = st_col.to_machine()
+    assert m.regs == st_ref.regs
+    assert m.fregs == st_ref.fregs
+    assert m.mem == st_ref.mem
+    # the object adapter reproduces TraceEntry semantics exactly
+    entries = tr_col.entries()
+    assert entries == tr_ref
+    is_mem = OP_IS_MEM[tr_col.program.opcode[tr_col.pc]]
+    assert all((e.ea is not None) == bool(m_)
+               for e, m_ in zip(entries, is_mem))
+
+
+def test_run_adapter_equals_reference_api():
+    bench = progen.build_benchmark("505.mcf")
+    out_ref = funcsim.run_reference(bench.program, 800,
+                                    state=progen.fresh_state(bench),
+                                    snapshot_at=[0, 100, 101, 400])
+    out_ada = funcsim.run(bench.program, 800,
+                          state=progen.fresh_state(bench),
+                          snapshot_at=[0, 100, 101, 400])
+    assert out_ada[0] == out_ref[0]
+    assert out_ada[1] == out_ref[1]
+    assert out_ada[2].regs == out_ref[2].regs
+
+
+def test_compiled_state_roundtrip():
+    st = progen.fresh_state(progen.build_benchmark("541.leela"))
+    st.regs["R7"] = 123456789
+    st.fregs["F3"] = -2.5
+    cst = funcsim.CompiledState.from_machine(st)
+    back = cst.to_machine()
+    assert back.regs == st.regs and back.fregs == st.fregs
+    assert back.mem is st.mem                  # memory adopted by reference
+    clone = cst.clone()
+    clone.iregs[0] = 99
+    clone.mem[0] = 1
+    assert cst.iregs[0] != 99 and 0 not in cst.mem
+
+
+# ---------------------- gather tokenization path ----------------------- #
+
+@pytest.mark.parametrize("name", ["503.bwaves", "520.omnetpp", "557.xz"])
+@pytest.mark.parametrize("l_min,l_clip", [(32, 32), (100, 128), (48, 40)])
+def test_gather_tokens_match_clip_encoder(name, l_min, l_clip):
+    """token_table[trace.pc] gather == ClipEncoder.encode bitwise, full
+    clips, remainder, and l_min > l_clip truncation included."""
+    bench, _, (trace, _) = _traces(name, n=700, snapshot_every=None)
+    cprog = trace.program
+    table = cprog.token_table(VOCAB, 16)
+    tok, mask = std_mod.encode_fixed_clips(table, trace.pc, l_min, l_clip)
+
+    insts = [cprog.insts[pc] for pc in trace.pc.tolist()]
+    clips = slicer_mod.slice_fixed(insts, l_min)
+    tok_ref, mask_ref = ClipEncoder(VOCAB, l_clip, 16).encode(
+        [c.insts for c in clips])
+    assert tok.shape == tok_ref.shape
+    np.testing.assert_array_equal(tok, tok_ref)
+    np.testing.assert_array_equal(mask, mask_ref)
+
+
+def test_token_table_matches_encode_instruction():
+    cprog = progen.build_benchmark("500.perlbench").compiled()
+    table = cprog.token_table(VOCAB, 16)
+    assert table.shape == (cprog.n_static, 16) and table.dtype == np.int32
+    for i in (0, 1, len(cprog) // 2, len(cprog) - 1):
+        np.testing.assert_array_equal(
+            table[i], std_mod.encode_instruction(cprog.insts[i], VOCAB, 16))
+    assert cprog.token_table(VOCAB, 16) is table       # memoized
+
+
+def test_context_matrix_matches_dict_path():
+    _, (_, snaps_ref, _), (trace, _) = _traces("548.exchange2", n=900)
+    got = ctx_mod.context_tokens_from_matrix(trace.snapshots, VOCAB)
+    ref = ctx_mod.batch_context_tokens(snaps_ref, VOCAB)
+    np.testing.assert_array_equal(got, ref)
+
+
+# ------------------------- columnar slicing ---------------------------- #
+
+def test_fixed_bounds_match_slice_fixed():
+    for n, l_min in [(0, 10), (5, 10), (100, 10), (103, 10), (1, 1)]:
+        bounds = slicer_mod.fixed_bounds(n, l_min)
+        clips = slicer_mod.slice_fixed([I("nop")] * n, l_min)
+        assert bounds.shape == (len(clips), 2)
+        for (s, e), c in zip(bounds.tolist(), clips):
+            assert s == c.start and e - s == len(c)
+
+
+def test_slice_trace_columnar_matches_algorithm_1():
+    rng = np.random.RandomState(0)
+    for _ in range(40):
+        n = int(rng.randint(1, 400))
+        l_min = int(rng.randint(1, 50))
+        commits = np.cumsum(rng.randint(0, 5, size=n)).astype(float)
+        insts = [I("nop")] * n
+        ref = slicer_mod.slice_trace(insts, commits.tolist(), l_min)
+        bounds, times = slicer_mod.slice_trace_columnar(commits, l_min)
+        got = slicer_mod.clips_from_columnar(insts, bounds, times)
+        assert len(got) == len(ref)
+        for a, b in zip(got, ref):
+            assert a.start == b.start
+            assert len(a) == len(b)
+            assert abs(a.time - b.time) < 1e-9
+        lens = slicer_mod.clip_lengths(bounds)
+        assert lens.tolist() == [len(c) for c in ref]
+
+
+def test_clip_key_zero_sentinel_fixed():
+    """A clip whose content hash is 0 must still memoize (regression:
+    the old code used 0 as the 'unset' sentinel and recomputed forever)."""
+    clip = slicer_mod.Clip(insts=[I("nop")], time=0.0, start=0, _key=0)
+    assert clip.key == 0                       # legit cached value kept
+    clip2 = slicer_mod.Clip(insts=[I("nop")], time=0.0, start=0)
+    k = clip2.key
+    assert clip2._key is not None and clip2.key == k
+
+
+# ------------------------- dataset columnar ---------------------------- #
+
+def test_columnar_dataset_matches_object_reference():
+    """The columnar build (sample=False) is bitwise the old object
+    pipeline: object interpreter -> object oracle -> Algorithm 1 ->
+    per-clip encode_clip / context_token_ids."""
+    import copy
+    bcfg = BuildConfig(interval_size=1_500, warmup=150, max_checkpoints=2,
+                       l_min=24, l_clip=32, l_token=16, sample=False)
+    bench = progen.build_benchmark("541.leela")
+    ds = build_bench_clips(bench, bcfg, VOCAB)
+
+    # inline object reference (the pre-IR builder)
+    st = progen.fresh_state(bench)
+    _, _, st = funcsim.run_reference(bench.program, bcfg.warmup, state=st)
+    tok_l, ctx_l, mask_l, time_l = [], [], [], []
+    for _ in range(min(bench.ckp_num, bcfg.max_checkpoints)):
+        st_ckp = copy.deepcopy(st)
+        trace, _, st = funcsim.run_reference(
+            bench.program, bcfg.interval_size, state=st)
+        commits = timing.simulate(trace, bcfg.timing_params)
+        clips = slicer_mod.slice_trace([e.inst for e in trace], commits,
+                                       bcfg.l_min)
+        starts = [c.start for c in clips]
+        _, snaps, _ = funcsim.run_reference(
+            bench.program, bcfg.interval_size, state=st_ckp,
+            snapshot_at=starts)
+        for clip, snap in zip(clips, snaps):
+            toks, mask = std_mod.encode_clip(clip.insts, VOCAB,
+                                             bcfg.l_clip, bcfg.l_token)
+            tok_l.append(toks)
+            ctx_l.append(ctx_mod.context_token_ids(snap, VOCAB))
+            mask_l.append(mask)
+            time_l.append(clip.time)
+
+    assert len(ds) == len(tok_l) > 0
+    np.testing.assert_array_equal(ds.clip_tokens, np.stack(tok_l))
+    np.testing.assert_array_equal(ds.context_tokens, np.stack(ctx_l))
+    np.testing.assert_array_equal(ds.clip_mask, np.stack(mask_l))
+    np.testing.assert_array_equal(ds.time,
+                                  np.asarray(time_l, np.float32))
