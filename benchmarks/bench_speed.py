@@ -134,8 +134,10 @@ def _sequential_simulate(bench, params, cfg, vocab, *, interval_size,
     host round-trip after every device batch.
 
     Returns ``(predicted_cycles, oracle_cycles, n_clips,
-    frontend_seconds, oracle_seconds)`` — front-end = functional sim +
-    slice + tokenize + context, the part the columnar IR replaces.
+    frontend_seconds, oracle_seconds, predict_seconds)`` — front-end =
+    functional sim + slice + tokenize + context (the part the columnar IR
+    replaces); predict = the synchronous device loop incl. the fresh
+    compile (the part the RT cache + pooled engine replace).
     """
     predict = jax.jit(lambda p, b: predictor.predict_step(p, b, cfg))
     st = progen.fresh_state(bench)
@@ -172,13 +174,15 @@ def _sequential_simulate(bench, params, cfg, vocab, *, interval_size,
         mask = np.concatenate([mask, np.zeros((pad,) + mask.shape[1:],
                                               mask.dtype)])
     preds = []
+    t0 = time.time()
     for lo in range(0, tok.shape[0], batch_size):
         batch = {"clip_tokens": jnp.asarray(tok[lo:lo + batch_size]),
                  "context_tokens": jnp.asarray(ctx[lo:lo + batch_size]),
                  "clip_mask": jnp.asarray(mask[lo:lo + batch_size])}
-        preds.append(np.asarray(predict(params, batch)))
+        preds.append(np.asarray(predict(params, batch)))   # sync round-trip
+    predict_seconds = time.time() - t0
     return (float(np.concatenate(preds)[:n_real].sum()), oracle_cycles,
-            n_real, fe_seconds, oracle_seconds)
+            n_real, fe_seconds, oracle_seconds, predict_seconds)
 
 
 def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
@@ -196,6 +200,10 @@ def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
     """
     vocab = build_vocab()
     cfg = bench_cfg() if quick else full_cfg()
+    # resolve the kernel choice once so the sequential baseline and every
+    # engine variant compare the same numerics on any backend (on TPU all
+    # paths get the Pallas kernel; on CPU this is the identity)
+    cfg = predictor.inference_config(cfg)
     params = predictor.init_params(cfg, jax.random.PRNGKey(0))
     names = list(progen.TABLE_II)[:n_benchmarks]
     kw = dict(interval_size=2_000 if quick else 10_000,
@@ -210,28 +218,81 @@ def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
     n_clips = 0
     seq_fe_seconds = 0.0
     seq_oracle_seconds = 0.0
+    seq_predict_seconds = 0.0
     for bench in benches:
-        cycles, ocycles, k, fe_s, o_s = _sequential_simulate(
+        cycles, ocycles, k, fe_s, o_s, p_s = _sequential_simulate(
             bench, params, cfg, vocab, with_oracle=True, **kw)
         seq[bench.name] = cycles
         seq_oracle[bench.name] = ocycles
         n_clips += k
         seq_fe_seconds += fe_s
         seq_oracle_seconds += o_s
+        seq_predict_seconds += p_s
     seq_seconds = time.time() - t0 - seq_oracle_seconds
     seq_cps = n_clips / max(seq_seconds, 1e-9)
 
-    # timed engine run stays oracle-free so the throughput accounting is
+    # timed engine runs stay oracle-free so the throughput accounting is
     # exact (host oracle work would overlap the async device pipeline,
-    # making a wall-minus-oracle subtraction overstate the engine)
-    engine = SimulationEngine(params, cfg, vocab, warmup=0,
-                              with_oracle=False, **kw)
-    t0 = time.time()
-    results = engine.run(benches)      # reuse the built benchmarks (and
-    eng_seconds = time.time() - t0     # their compiled-program caches)
+    # making a wall-minus-oracle subtraction overstate the engine).  Each
+    # variant runs twice: the cold pass pays jit compiles (and the RT
+    # table build), the warm pass is the steady-state device cost the
+    # predict gate compares.
+    def engine_pass(rt_cache, precision=None, n_runs=2):
+        engine = SimulationEngine(params, cfg, vocab, warmup=0,
+                                  with_oracle=False, rt_cache=rt_cache,
+                                  precision=precision, **kw)
+        passes, results = [], None
+        prev = {}
+        for _ in range(n_runs):
+            t0 = time.time()
+            results = engine.run(benches)   # reuse the built benchmarks
+            rt = engine.last_rt_stats       # (and their compiled caches)
+            # cache stats are cumulative over the cache's lifetime —
+            # report per-pass deltas so a 2-pass run doesn't double-count
+            cum = rt.as_dict() if rt else {}
+            delta = {k: v - prev.get(k, 0) for k, v in cum.items()}
+            passes.append({"seconds": time.time() - t0,
+                           "predict_seconds":
+                               engine.last_stats.predict_seconds,
+                           "rt_build_seconds":
+                               delta.get("rt_build_seconds", 0.0),
+                           "rt": delta})
+            prev = cum
+        return engine, results, passes
+
+    _, res_nc, p_nc = engine_pass(rt_cache=False)
+    engine, results, p_rt = engine_pass(rt_cache=True)
+    eng_seconds = p_rt[0]["seconds"]        # cold: end-to-end accounting
     stats = engine.last_stats
     fe = engine.frontend_stats
     eng_cps = stats.n_clips / max(eng_seconds, 1e-9)
+    # per-run RT figures: all encoding happens in the cold pass; the warm
+    # pass is pure gather service for one full workload
+    rt_rows_encoded = sum(p["rt"]["rt_rows_encoded"] for p in p_rt)
+    rt_rows_served = p_rt[-1]["rt"]["rt_rows_served"]
+    rt_cache_stats = {"rt_rows_encoded": rt_rows_encoded,
+                      "rt_encode_passes":
+                          sum(p["rt"]["rt_encode_passes"] for p in p_rt),
+                      "rt_rows_served_per_run": rt_rows_served,
+                      "rt_rows_avoided_per_run":
+                          max(rt_rows_served - rt_rows_encoded, 0),
+                      "rt_build_seconds": p_rt[0]["rt_build_seconds"],
+                      "rt_build_warm_seconds": p_rt[1]["rt_build_seconds"]}
+
+    # opt-in low-precision mode: relative-error-bounded, never bitwise
+    _, res_bf16, p_bf16 = engine_pass(rt_cache=True, precision="bf16",
+                                      n_runs=1)
+    bf16_rel = {r.name: abs(b.predicted_cycles - r.predicted_cycles)
+                / max(abs(r.predicted_cycles), 1e-9)
+                for r, b in zip(results, res_bf16)}
+    bf16_max_rel = max(bf16_rel.values())
+
+    rt_warm = (p_rt[1]["predict_seconds"] + p_rt[1]["rt_build_seconds"])
+    predict_speedup = p_nc[1]["predict_seconds"] / max(rt_warm, 1e-9)
+    predict_speedup_cold = ((p_nc[0]["predict_seconds"])
+                            / max(p_rt[0]["predict_seconds"]
+                                  + p_rt[0]["rt_build_seconds"], 1e-9))
+    seq_predict_speedup = seq_predict_seconds / max(rt_warm, 1e-9)
 
     # untimed columnar-oracle pass over the same interval structure the
     # engine executes: the oracle half of the bitwise gate
@@ -251,16 +312,23 @@ def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
 
     per_bench = {}
     mismatches = []
-    for r in results:
+    for r, r_nc in zip(results, res_nc):
         equal = seq[r.name] == r.predicted_cycles
+        # the RT-cache gather path must reproduce the monolithic pooled
+        # path bit for bit (fp32): the tentpole's correctness gate
+        rt_equal = r_nc.predicted_cycles == r.predicted_cycles
         oracle_equal = seq_oracle[r.name] == eng_oracle[r.name]
         per_bench[r.name] = {"sequential_cycles": seq[r.name],
                              "engine_cycles": r.predicted_cycles,
+                             "engine_monolithic_cycles":
+                                 r_nc.predicted_cycles,
                              "bitwise_equal": equal,
+                             "rt_cache_bitwise_equal": rt_equal,
+                             "bf16_rel_error": bf16_rel[r.name],
                              "sequential_oracle_cycles": seq_oracle[r.name],
                              "engine_oracle_cycles": eng_oracle[r.name],
                              "oracle_bitwise_equal": oracle_equal}
-        if not (equal and oracle_equal):
+        if not (equal and rt_equal and oracle_equal):
             mismatches.append(r.name)
     assert stats.n_clips == n_clips, \
         f"engine saw {stats.n_clips} clips, sequential saw {n_clips}"
@@ -283,6 +351,30 @@ def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
               f"(interpret {fe.interpret_seconds:.2f}s / tokenize "
               f"{fe.tokenize_seconds:.2f}s / context "
               f"{fe.context_seconds:.2f}s)")
+    emit.emit("speed.multi_predict", rt_warm * 1e6 / max(n_clips, 1),
+              f"RT-cache predict {rt_warm:.2f}s vs monolithic pooled "
+              f"{p_nc[1]['predict_seconds']:.2f}s warm = "
+              f"{predict_speedup:.2f}x ({rt_rows_encoded} static "
+              f"rows encoded once vs {rt_rows_served} dynamic "
+              f"rows gathered per run); bf16 max rel err "
+              f"{bf16_max_rel:.4%}")
+    predict = {
+        "sequential_seconds": seq_predict_seconds,
+        "monolithic_cold_seconds": p_nc[0]["predict_seconds"],
+        "monolithic_warm_seconds": p_nc[1]["predict_seconds"],
+        "rt_cache_cold_seconds": p_rt[0]["predict_seconds"],
+        "rt_cache_warm_seconds": p_rt[1]["predict_seconds"],
+        "rt_build_cold_seconds": p_rt[0]["rt_build_seconds"],
+        "rt_build_warm_seconds": p_rt[1]["rt_build_seconds"],
+        "predict_speedup": predict_speedup,
+        "predict_speedup_cold": predict_speedup_cold,
+        "sequential_predict_speedup": seq_predict_speedup,
+        "monolithic_clips_per_s":
+            n_clips / max(p_nc[1]["predict_seconds"], 1e-9),
+        "rt_cache_clips_per_s": n_clips / max(rt_warm, 1e-9),
+        "bf16_predict_seconds": p_bf16[0]["predict_seconds"],
+        "bf16_max_rel_error": bf16_max_rel,
+        "rt_cache": rt_cache_stats}
     return {"n_benchmarks": n_benchmarks, "n_clips": n_clips,
             "quick": quick,
             "sequential_seconds": seq_seconds,
@@ -293,13 +385,16 @@ def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
             "engine_batches": stats.n_batches,
             "engine_pad_rows": stats.n_pad,
             "all_bitwise_equal": not mismatches,
+            "predict": predict,
             "frontend": {
                 "sequential_seconds": seq_fe_seconds,
                 "engine": fe.as_dict(),
                 "predict_seconds": stats.predict_seconds,
                 "sequential_oracle_seconds": seq_oracle_seconds,
                 "columnar_oracle_seconds": eng_oracle_seconds,
-                "frontend_speedup": fe_ratio},
+                "frontend_speedup": fe_ratio,
+                **rt_cache_stats,
+                "predict_speedup": predict_speedup},
             "per_bench": per_bench}
 
 
@@ -318,6 +413,10 @@ if __name__ == "__main__":
                     help="fail if columnar/object front-end throughput "
                          "falls below this (0 disables; full-scale target "
                          "is >= 3x)")
+    ap.add_argument("--min-predict-speedup", type=float, default=0.0,
+                    help="fail if RT-cache/monolithic warm predict "
+                         "throughput falls below this (0 disables; "
+                         "full-scale target is >= 2x)")
     ap.add_argument("--json", default=None,
                     help="write the --multi result dict to this path")
     ap.add_argument("--breakdown-json", default=None,
@@ -336,8 +435,12 @@ if __name__ == "__main__":
             Path(args.breakdown_json).write_text(
                 json.dumps(res["frontend"], indent=2))
         if not res["all_bitwise_equal"]:
-            raise SystemExit("engine/sequential predicted or oracle "
-                             "cycles diverged from the object path")
+            raise SystemExit("engine/sequential/RT-cache predicted or "
+                             "oracle cycles diverged from the reference")
+        bf16_err = res["predict"]["bf16_max_rel_error"]
+        if bf16_err > 0.01:
+            raise SystemExit(
+                f"bf16 predict mode rel error {bf16_err:.4%} > 1%")
         if res["engine_speedup"] < args.min_speedup:
             raise SystemExit(
                 f"engine speedup {res['engine_speedup']:.2f}x < "
@@ -347,5 +450,10 @@ if __name__ == "__main__":
             raise SystemExit(
                 f"front-end speedup {fe_ratio:.2f}x < "
                 f"{args.min_frontend_speedup}x")
+        p_ratio = res["predict"]["predict_speedup"]
+        if p_ratio < args.min_predict_speedup:
+            raise SystemExit(
+                f"predict-stage speedup {p_ratio:.2f}x < "
+                f"{args.min_predict_speedup}x")
     else:
         run(emitter)

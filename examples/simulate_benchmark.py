@@ -33,6 +33,9 @@ def main() -> None:
                     default=["503.bwaves", "505.mcf", "548.exchange2"])
     ap.add_argument("--interval-size", type=int, default=20_000)
     ap.add_argument("--max-checkpoints", type=int, default=4)
+    ap.add_argument("--no-rt-cache", action="store_true",
+                    help="monolithic predict path (bitwise reference)")
+    ap.add_argument("--precision", default=None, choices=("fp32", "bf16"))
     args = ap.parse_args()
 
     vocab = build_vocab()
@@ -49,7 +52,9 @@ def main() -> None:
 
     engine = SimulationEngine(params, cfg, vocab,
                               interval_size=args.interval_size,
-                              max_checkpoints=args.max_checkpoints)
+                              max_checkpoints=args.max_checkpoints,
+                              rt_cache=not args.no_rt_cache,
+                              precision=args.precision)
     engine.submit_names(args.benchmarks)
     results = engine.run()
 
@@ -62,6 +67,12 @@ def main() -> None:
     stats = engine.last_stats
     print(f"pool: {stats.n_clips} clips in {stats.n_batches} device "
           f"batches ({stats.n_pad} pad rows)")
+    rt = engine.last_rt_stats
+    if rt is not None:
+        print(f"rt-cache: {rt.n_rows_encoded} static rows encoded "
+              f"({rt.build_seconds:.2f}s) served {rt.n_rows_served} "
+              f"dynamic rows — instruction encoder skipped for "
+              f"{rt.rows_avoided}")
 
 
 if __name__ == "__main__":

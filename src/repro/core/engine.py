@@ -25,10 +25,23 @@ vectorized byte decomposition — ``FrontendStats`` breaks the host time
 down by stage (interpret / slice / tokenize / context) so regressions
 show up in the bench JSON artifact.
 
-Per-clip predictions are bitwise identical to the sequential path (XLA CPU
-rows are independent of batch composition), and per-benchmark sums are
-taken over the same contiguous per-benchmark arrays — so results demux
-back into ``SimResult``s with unchanged semantics.
+Device FLOPs are cut by the static-instruction RT cache
+(``repro.core.rt_cache``, on by default): each benchmark's ``n_static``
+token rows go through the 4-layer instruction encoder exactly once, and
+every clip batch then ships (n, l_clip) int32 RT-table indices instead of
+token tensors — the jit'd ``forward_cached`` gathers the table on device
+and runs only the block encoder + head.  ``precision="bf16"`` additionally
+casts the fp32 master params to bfloat16 at dispatch (fp32 softmax and
+accumulation), trading bitwise equality for a relative-error bound; on
+TPU the block encoder's masked cross/self-attention routes through the
+Pallas flash kernel by default (``predictor.inference_config``).
+
+Per-clip predictions in fp32 are bitwise identical to the sequential
+monolithic path (XLA CPU rows are independent of batch composition, and
+the RT gather returns exactly the rows the folded batch would compute),
+and per-benchmark sums are taken over the same contiguous per-benchmark
+arrays — so results demux back into ``SimResult``s with unchanged
+semantics.
 """
 from __future__ import annotations
 
@@ -45,6 +58,7 @@ import numpy as np
 from repro.core import context as ctx_mod
 from repro.core import predictor as pred_mod
 from repro.core import standardize as std_mod
+from repro.core.rt_cache import RTCache, RTCacheStats
 from repro.isa import funcsim, progen, timing
 
 
@@ -85,6 +99,15 @@ def predict_fn(cfg, use_context: bool = True):
     ``cfg`` is a frozen dataclass, so it keys the cache directly."""
     return jax.jit(lambda p, b: pred_mod.predict_step(p, b, cfg,
                                                       use_context))
+
+
+@lru_cache(maxsize=64)
+def predict_cached_fn(cfg, use_context: bool = True):
+    """Cached jit'd RT-cache predict step: the batch carries ``rt_idx``
+    rows into a device-resident RT table, so only the block encoder +
+    head run per clip (``predictor.forward_cached``)."""
+    return jax.jit(lambda p, table, b: pred_mod.forward_cached(
+        p, table, b, cfg, use_context))
 
 
 def bucket_sizes(batch_size: int) -> Tuple[int, ...]:
@@ -147,19 +170,39 @@ class BatchedPredictor:
     a full ``batch_size`` accumulates; dispatch is asynchronous, so the
     caller keeps tokenizing while the device computes.  At most
     ``max_in_flight`` batches stay un-retired (the double buffer) to bound
-    host memory.  ``drain`` pads the remainder to the smallest size bucket,
-    blocks on everything outstanding, and returns per-clip predictions in
-    submission order.
+    host memory.  ``drain`` pads the remainder to the smallest size bucket
+    with fully-masked zero rows, blocks on everything outstanding, and
+    returns per-clip predictions in submission order.
+
+    With ``rt_cache`` set, batches carry (n, l_clip) int32 RT-table
+    indices instead of token tensors and dispatch through the
+    block-encoder-only ``forward_cached`` step — feed them via
+    ``add_indexed`` (trace engine) or plain ``add`` (tokenized requests
+    are deduped through the cache first).  ``precision`` selects the
+    inference numerics ("fp32" | "bf16", see
+    ``predictor.inference_config``); None keeps cfg.dtype.
     """
 
     def __init__(self, params, cfg, *, batch_size: int = 256,
-                 use_context: bool = True, max_in_flight: int = 2):
+                 use_context: bool = True, max_in_flight: int = 2,
+                 rt_cache: Optional[RTCache] = None,
+                 precision: Optional[str] = None):
         self.params = params
+        self.cfg = pred_mod.inference_config(cfg, precision)
         self.batch_size = batch_size
         self.buckets = bucket_sizes(batch_size)
         self.max_in_flight = max_in_flight
-        self._predict = predict_fn(cfg, use_context)
-        self._tok: List[np.ndarray] = []
+        self._cache = rt_cache
+        if rt_cache is not None:
+            # the table is a pure function of (params, cfg numerics +
+            # kernel); any mismatch silently breaks the bitwise contract
+            assert rt_cache.params is params and rt_cache.cfg == self.cfg, \
+                "RT cache must be built with the same params and " \
+                "resolved config as the predict step"
+            self._predict = predict_cached_fn(self.cfg, use_context)
+        else:
+            self._predict = predict_fn(self.cfg, use_context)
+        self._tok: List[np.ndarray] = []      # token tensors OR rt_idx rows
         self._ctx: List[np.ndarray] = []
         self._mask: List[np.ndarray] = []
         self._buffered = 0
@@ -173,6 +216,23 @@ class BatchedPredictor:
         mask (n, l_clip) float32."""
         if tok.shape[0] == 0:
             return
+        if self._cache is not None:
+            self.add_indexed(self._cache.index_clips(tok), ctx, mask)
+            return
+        self._buffer(tok, ctx, mask)
+
+    def add_indexed(self, rt_idx: np.ndarray, ctx: np.ndarray,
+                    mask: np.ndarray) -> None:
+        """RT-cache fast path: rt_idx (n, l_clip) int32 rows into the
+        cache table (masked slots on the pad row); ctx/mask as ``add``."""
+        assert self._cache is not None, "add_indexed needs an RT cache"
+        if rt_idx.shape[0] == 0:
+            return
+        self._cache.stats.n_rows_served += int(mask.sum())
+        self._buffer(rt_idx, ctx, mask)
+
+    def _buffer(self, tok: np.ndarray, ctx: np.ndarray,
+                mask: np.ndarray) -> None:
         self._tok.append(tok)
         self._ctx.append(ctx)
         self._mask.append(mask)
@@ -204,10 +264,16 @@ class BatchedPredictor:
 
     def _dispatch(self, tok, ctx, mask, n_real: int) -> None:
         t0 = time.time()
-        batch = {"clip_tokens": jnp.asarray(tok),
-                 "context_tokens": jnp.asarray(ctx),
-                 "clip_mask": jnp.asarray(mask)}
-        out = self._predict(self.params, batch)   # async dispatch
+        if self._cache is not None:
+            batch = {"rt_idx": jnp.asarray(tok),
+                     "context_tokens": jnp.asarray(ctx),
+                     "clip_mask": jnp.asarray(mask)}
+            out = self._predict(self.params, self._cache.table, batch)
+        else:
+            batch = {"clip_tokens": jnp.asarray(tok),
+                     "context_tokens": jnp.asarray(ctx),
+                     "clip_mask": jnp.asarray(mask)}
+            out = self._predict(self.params, batch)   # async dispatch
         self._pending.append((out, n_real))
         self.stats.n_batches += 1
         self.stats.n_pad += tok.shape[0] - n_real
@@ -233,10 +299,18 @@ class BatchedPredictor:
                          default=self.batch_size)
             pad = bucket - n
             if pad:
-                tok = np.concatenate([tok, np.repeat(tok[-1:], pad, 0)])
-                ctx = np.concatenate([ctx, np.repeat(ctx[-1:], pad, 0)])
+                # zero rows, not repeats of the last real clip: repeated
+                # real rows burn block-encoder FLOPs on phantom work.  A
+                # zero token row is all-<PAD>; a zero rt_idx row is the
+                # cache's pad slot; a zero mask excludes the row entirely.
+                tok = np.concatenate(
+                    [tok, np.zeros((pad,) + tok.shape[1:], tok.dtype)])
+                ctx = np.concatenate(
+                    [ctx, np.zeros((pad,) + ctx.shape[1:], ctx.dtype)])
                 mask = np.concatenate(
                     [mask, np.zeros((pad,) + mask.shape[1:], mask.dtype)])
+                assert not mask[n:].any(), \
+                    "padded remainder rows must be fully masked"
             self._dispatch(tok, ctx, mask, n)
         while self._pending:
             self._retire()
@@ -274,9 +348,10 @@ class SimulationEngine:
                  batch_size: int = 256, use_context: bool = True,
                  with_oracle: bool = True,
                  timing_params: timing.TimingParams = timing.TimingParams(),
-                 max_in_flight: int = 2):
+                 max_in_flight: int = 2, rt_cache: bool = True,
+                 precision: Optional[str] = None):
         self.params = params
-        self.cfg = cfg
+        self.cfg = pred_mod.inference_config(cfg, precision)
         self.vocab = vocab
         self.interval_size = interval_size
         self.warmup = warmup
@@ -289,8 +364,13 @@ class SimulationEngine:
         self.with_oracle = with_oracle
         self.timing_params = timing_params
         self.max_in_flight = max_in_flight
+        # one cache per engine: params are pinned at construction, so the
+        # table never goes stale; new programs just append unseen rows
+        self._rt_cache = (RTCache(self.params, self.cfg, l_token)
+                          if rt_cache else None)
         self._queue: List[progen.Benchmark] = []
         self.last_stats: Optional[PredictorStats] = None
+        self.last_rt_stats: Optional[RTCacheStats] = None
         self.frontend_stats = FrontendStats()
 
     def submit(self, bench: progen.Benchmark) -> None:
@@ -309,6 +389,13 @@ class SimulationEngine:
         fe = self.frontend_stats
         cprog = bench.compiled()
         token_table = cprog.token_table(self.vocab, self.l_token)
+        static_ids = None
+        if self._rt_cache is not None:
+            # one instruction-encoder pass over n_static rows serves every
+            # dynamic clip of this benchmark (and dedupes across programs)
+            static_ids = self._rt_cache.ensure_rows(
+                token_table,
+                keys=cprog.token_row_keys(self.vocab, self.l_token))
         st = progen.fresh_compiled_state(bench)
         t0 = time.time()
         _, st = funcsim.run_compiled(cprog, self.warmup, st)
@@ -327,8 +414,12 @@ class SimulationEngine:
             fe.n_instructions += n
 
             t0 = time.time()
-            tok, mask = std_mod.encode_fixed_clips(
-                token_table, trace.pc, self.l_min, self.l_clip)
+            if static_ids is not None:
+                tok, mask = std_mod.fixed_clip_indices(
+                    static_ids, trace.pc, self.l_min, self.l_clip)
+            else:
+                tok, mask = std_mod.encode_fixed_clips(
+                    token_table, trace.pc, self.l_min, self.l_clip)
             n_clips = tok.shape[0]                 # slice_fixed partition
             fe.tokenize_seconds += time.time() - t0
 
@@ -341,7 +432,10 @@ class SimulationEngine:
 
             job.n_clips += n_clips
             fe.n_clips += n_clips
-            pred.add(tok, ctx, mask)
+            if static_ids is not None:
+                pred.add_indexed(tok, ctx, mask)
+            else:
+                pred.add(tok, ctx, mask)
             if self.with_oracle:
                 t0 = time.time()
                 job.oracle_cycles += timing.total_cycles_columnar(
@@ -359,20 +453,28 @@ class SimulationEngine:
         self.frontend_stats = FrontendStats()
         pred = BatchedPredictor(
             self.params, self.cfg, batch_size=self.batch_size,
-            use_context=self.use_context, max_in_flight=self.max_in_flight)
+            use_context=self.use_context, max_in_flight=self.max_in_flight,
+            rt_cache=self._rt_cache)
+        rt_stats = (self._rt_cache.stats if self._rt_cache is not None
+                    else RTCacheStats())
         offset = 0
         for job in jobs:
             job.offset = offset
             t0 = time.time()
             d0 = pred.stats.dispatch_seconds
+            b0 = rt_stats.build_seconds
             self._functional(job.bench, pred, job)
-            # dispatch (and any blocking retire) overlaps the functional
-            # window; subtract it so predict time isn't counted twice
+            # dispatch (and any blocking retire) and the RT-cache build
+            # overlap the functional window; subtract both so device
+            # predict time isn't counted twice
             job.func_seconds = (time.time() - t0 - job.oracle_seconds
-                                - (pred.stats.dispatch_seconds - d0))
+                                - (pred.stats.dispatch_seconds - d0)
+                                - (rt_stats.build_seconds - b0))
             offset = job.offset + job.n_clips
         preds = pred.drain()
         self.last_stats = pred.stats
+        self.last_rt_stats = (dataclasses.replace(rt_stats)
+                              if self._rt_cache is not None else None)
         assert preds.shape[0] == offset == pred.stats.n_predicted, \
             "clip accounting mismatch between pool and predictions"
 

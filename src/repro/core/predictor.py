@@ -153,7 +153,11 @@ def _mha(p, q_in, kv_in, cfg, kv_mask=None, prefix: str = ""):
         if kv_mask is not None:
             s = jnp.where(kv_mask[:, None, None, :] > 0, s, NEG_INF)
         a = jax.nn.softmax(s, axis=-1).astype(v.dtype)
-        o = jnp.einsum("bhqk,bkhd->bqhd", a, v)
+        # f32 accumulation for the output matmul too: in bf16 mode the
+        # weights/values stay bf16 but partial sums do not round per-step
+        # (identical bits in f32 mode, where this is already the dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", a, v,
+                       preferred_element_type=jnp.float32).astype(v.dtype)
     o = o.reshape(q_in.shape[0], q_in.shape[1], -1)
     out = jnp.einsum("bsh,hd->bsd", o, _w(p, f"{prefix}wo", cfg))
     return out.astype(q_in.dtype)
@@ -249,16 +253,28 @@ def block_encoder(params, rt, ctx, clip_mask, cfg):
     return out, None                                     # all M rows valid
 
 
-def forward(params, batch, cfg, use_context: bool = True):
-    """batch: clip_tokens (B,L,T), context_tokens (B,M), clip_mask (B,L).
+def encode_instructions(params, token_rows, cfg):
+    """Static half of the split forward: (N, L_token) int32 standardized
+    rows -> (N, E) RT vectors (Eq 5-8).
 
-    Returns predicted clip times (B,) in cycles.
+    Standardization (and therefore RT_i) depends only on the *static*
+    instruction, so a program's ``token_table`` needs exactly one pass
+    through the 4-layer instruction encoder — the RT-cache build.  Rows
+    encode independently, so the result is bitwise the rows the monolithic
+    ``forward`` would compute inside a (B, L_clip) clip batch.
     """
-    clip_tokens = batch["clip_tokens"]
-    clip_mask = batch["clip_mask"].astype(jnp.float32)
-    B = clip_tokens.shape[0]
+    return instruction_encoder(params, token_rows[None], cfg)[0]
 
-    rt = instruction_encoder(params, clip_tokens, cfg)
+
+def block_forward(params, rt, batch, cfg, use_context: bool = True):
+    """Dynamic half of the split forward: block encoder + head over
+    already-encoded RT vectors.
+
+    rt: (B, L_clip, E) instruction vectors (from ``instruction_encoder``
+    or an RT-table gather); batch supplies context_tokens (B, M) and
+    clip_mask (B, L_clip).  Returns predicted clip times (B,) in cycles.
+    """
+    clip_mask = batch["clip_mask"].astype(jnp.float32)
     rt = shard_logical(rt, "batch", None, None)
 
     ctx = None
@@ -282,6 +298,59 @@ def forward(params, batch, cfg, use_context: bool = True):
         cpi = (y * out_mask).sum(-1) / denom
     n_inst = jnp.maximum(clip_mask.sum(-1), 1.0)
     return jax.nn.softplus(cpi) * n_inst                 # cycles
+
+
+def forward(params, batch, cfg, use_context: bool = True):
+    """batch: clip_tokens (B,L,T), context_tokens (B,M), clip_mask (B,L).
+
+    Returns predicted clip times (B,) in cycles.  Monolithic path: the
+    instruction encoder runs over every dynamic clip row.  The serving
+    engines use ``forward_cached`` instead, which replaces it with an
+    RT-table gather.
+    """
+    rt = instruction_encoder(params, batch["clip_tokens"], cfg)
+    return block_forward(params, rt, batch, cfg, use_context)
+
+
+def forward_cached(params, rt_table, batch, cfg, use_context: bool = True):
+    """RT-cache serving path: batch carries rt_idx (B, L_clip) int32 rows
+    into ``rt_table`` ((C, E), from ``encode_instructions``) instead of
+    clip_tokens.  Device FLOPs drop to block encoder + head only; in fp32
+    the result is bitwise equal to ``forward`` on the gathered tokens.
+    """
+    rt = rt_table[batch["rt_idx"]]                       # (B, L_clip, E)
+    return block_forward(params, rt, batch, cfg, use_context)
+
+
+# Inference precision knob: fp32 is the bitwise-reference mode; bf16 keeps
+# fp32 master params and casts at dispatch (``_w``) with fp32 softmax and
+# fp32 score/output accumulation (``preferred_element_type`` above), so it
+# is relative-error-bounded rather than bitwise.
+PRECISION_DTYPES = {"fp32": "float32", "bf16": "bfloat16"}
+
+
+def inference_config(cfg, precision: Optional[str] = None):
+    """Resolve the inference-time numerics + kernel config.
+
+    ``precision`` None leaves cfg.dtype untouched (the bitwise-compatible
+    default); "fp32"/"bf16" select the compute dtype.  On TPU the default
+    XLA attention is swapped for the Pallas flash kernel (which takes the
+    same ``kv_mask``) unless the config already picked an attn_impl other
+    than the "chunked" default.  The kernel swap is allclose-not-bitwise
+    vs XLA, so any reference comparison must resolve BOTH sides through
+    this function (as ``bench_speed.run_multi`` does) — on CPU it is the
+    identity for precision=None.
+    """
+    if precision is not None:
+        try:
+            cfg = cfg.replace(dtype=PRECISION_DTYPES[precision])
+        except KeyError:
+            raise ValueError(
+                f"precision must be one of {sorted(PRECISION_DTYPES)}, "
+                f"got {precision!r}") from None
+    if jax.default_backend() == "tpu" and cfg.attn_impl == "chunked":
+        cfg = cfg.replace(attn_impl="pallas")
+    return cfg
 
 
 def mape_loss(params, batch, cfg, use_context: bool = True):

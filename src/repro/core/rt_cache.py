@@ -1,0 +1,183 @@
+"""Static-instruction RT cache: the two-level inference split.
+
+An instruction's ideal-execution-time vector RT_i (paper Eq 5-8) depends
+only on its *static* standardized tokens — the same static/dynamic split
+the columnar IR's ``token_table`` exploits one level down.  The monolithic
+``forward`` nevertheless re-runs the 4-layer instruction encoder over all
+B x L_clip dynamic rows of every batch.  This cache hoists that work out
+of the per-clip loop:
+
+  build   one device pass of ``encode_instructions`` over a program's
+          ``n_static`` unique rows (orders of magnitude fewer than the
+          dynamic rows a benchmark's trace expands them into),
+  serve   every clip batch becomes an ``rt_table[rt_idx]`` gather inside
+          the jit'd ``forward_cached`` — device FLOPs per clip drop from
+          (instruction encoder + block encoder) to (block encoder only).
+
+The cache is *content-addressed*: rows are keyed by their standardized
+token bytes, so it is shared across programs (common instruction shapes
+dedupe globally) and serves both the trace engine (whole token tables at
+once) and the serving engine (arbitrary tokenized requests, deduped via
+``index_clips``).  Row id 0 is reserved for the all-<PAD> row, so masked
+clip slots gather a real encoder output and fp32 results stay bitwise
+identical to the monolithic path (rows encode independently).
+
+Invalidation: entries are pure functions of (params, cfg numerics, row
+bytes).  The cache pins the params it was built with — build a fresh
+``RTCache`` (or engine) when params change; new *programs* never
+invalidate anything, their unseen rows are simply appended.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import lru_cache
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import predictor as pred_mod
+
+PAD_ROW_ID = 0
+
+
+@lru_cache(maxsize=64)
+def rt_encode_fn(cfg):
+    """Cached jit'd RT-table build pass: (N, L_token) rows -> (N, E)."""
+    return jax.jit(lambda p, rows: pred_mod.encode_instructions(p, rows,
+                                                                cfg))
+
+
+def encode_bucket(n: int) -> int:
+    """Pad target for an encode pass: next power of two >= max(n, 8),
+    bounding compiled shapes to ~log2(n_static) variants."""
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class RTCacheStats:
+    n_rows_encoded: int = 0        # unique static rows run through encoder
+    n_encode_passes: int = 0       # device passes (one per new-row flush)
+    n_rows_served: int = 0         # dynamic (unmasked) rows answered by gather
+    n_lookups: int = 0             # rows presented to ensure_rows
+    build_seconds: float = 0.0     # wall time inside ensure_rows
+
+    @property
+    def rows_avoided(self) -> int:
+        """Dynamic instruction-encoder rows the gather replaced."""
+        return max(self.n_rows_served - self.n_rows_encoded, 0)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"rt_rows_encoded": self.n_rows_encoded,
+                "rt_encode_passes": self.n_encode_passes,
+                "rt_rows_served": self.n_rows_served,
+                "rt_rows_avoided": self.rows_avoided,
+                "rt_lookups": self.n_lookups,
+                "rt_build_seconds": self.build_seconds}
+
+
+class RTCache:
+    """Content-addressed map from standardized token rows to rows of a
+    device-resident RT table.
+
+    ``ensure_rows`` returns global int32 row ids, encoding unseen rows in
+    one bucketed device pass; ``table`` is the (capacity, E) device array
+    ``forward_cached`` gathers from.  The table grows by doubling, so jit
+    retraces stay bounded; in-flight batches keep referencing the
+    (immutable) array version they were dispatched with.
+    """
+
+    def __init__(self, params, cfg, l_token: Optional[int] = None, *,
+                 capacity: int = 4096):
+        self.params = params
+        self.cfg = cfg
+        self.l_token = l_token
+        self._encode = rt_encode_fn(cfg)
+        self._index: Dict[bytes, int] = {}
+        self._table: Optional[jax.Array] = None
+        self._capacity = capacity
+        self._n = 0
+        self.stats = RTCacheStats()
+
+    @property
+    def n_rows(self) -> int:
+        return self._n
+
+    @property
+    def table(self) -> jax.Array:
+        assert self._table is not None, "RT cache is empty (no rows ensured)"
+        return self._table
+
+    def ensure_rows(self, rows: np.ndarray,
+                    keys: Optional[Sequence[bytes]] = None) -> np.ndarray:
+        """rows: (k, L_token) int32 standardized rows -> (k,) int32 global
+        RT row ids; unseen rows are encoded in one padded device pass.
+        ``keys`` (the rows' ``tobytes()``, e.g. a program's memoized
+        ``token_row_keys``) skips re-hashing."""
+        t0 = time.time()
+        rows = np.ascontiguousarray(rows, dtype=np.int32)
+        if self.l_token is None:
+            self.l_token = rows.shape[1]
+        assert rows.ndim == 2 and rows.shape[1] == self.l_token, rows.shape
+        if keys is None:
+            keys = [r.tobytes() for r in rows]
+        self.stats.n_lookups += rows.shape[0]
+
+        new_rows: List[np.ndarray] = []
+        pending: Dict[bytes, int] = {}
+        if self._n == 0:                     # reserve the all-<PAD> row
+            pad = np.zeros(self.l_token, np.int32)
+            pending[pad.tobytes()] = PAD_ROW_ID
+            new_rows.append(pad)
+        ids = np.empty(rows.shape[0], np.int32)
+        index = self._index
+        for i, key in enumerate(keys):
+            gid = index.get(key)
+            if gid is None:
+                gid = pending.get(key)
+                if gid is None:
+                    gid = self._n + len(new_rows)
+                    pending[key] = gid
+                    new_rows.append(rows[i])
+            ids[i] = gid
+        if new_rows:
+            self._flush(np.stack(new_rows), pending)
+        self.stats.build_seconds += time.time() - t0
+        return ids
+
+    def index_clips(self, clip_tokens: np.ndarray) -> np.ndarray:
+        """Serving-path adapter: (n, L_clip, L_token) tokenized clips ->
+        (n, L_clip) int32 RT row ids.  Dynamic rows are deduped before the
+        encoder sees them; all-<PAD> (masked) slots land on row 0."""
+        from repro.core.standardize import dedupe_token_rows
+        n, L, T = clip_tokens.shape
+        uniq, inv = dedupe_token_rows(clip_tokens.reshape(n * L, T))
+        ids = self.ensure_rows(uniq)
+        return ids[inv].reshape(n, L).astype(np.int32)
+
+    def _flush(self, rows: np.ndarray, pending: Dict[bytes, int]) -> None:
+        k = rows.shape[0]
+        bucket = encode_bucket(k)
+        if bucket != k:
+            rows = np.concatenate(
+                [rows, np.zeros((bucket - k, self.l_token), np.int32)])
+        rt = self._encode(self.params, jnp.asarray(rows))[:k]
+        lo = self._n
+        while lo + k > self._capacity:
+            self._capacity *= 2
+        if self._table is None or self._table.shape[0] < self._capacity:
+            table = jnp.zeros((self._capacity, rt.shape[1]), rt.dtype)
+            if self._table is not None and lo:
+                table = table.at[:lo].set(self._table[:lo])
+            self._table = table
+        self._table = self._table.at[lo:lo + k].set(rt)
+        self._table.block_until_ready()      # build time stays in stats
+        self._index.update(pending)
+        self._n += k
+        self.stats.n_rows_encoded += k
+        self.stats.n_encode_passes += 1

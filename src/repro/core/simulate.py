@@ -29,10 +29,17 @@ def capsim_simulate(bench: progen.Benchmark, params, cfg,
                     batch_size: int = 256, use_context: bool = True,
                     with_oracle: bool = True,
                     timing_params: timing.TimingParams =
-                    timing.TimingParams()) -> SimResult:
+                    timing.TimingParams(),
+                    rt_cache: bool = True,
+                    precision: "str | None" = None) -> SimResult:
+    """``rt_cache`` (default on) serves clips from the static-instruction
+    RT table (bitwise-equal in fp32); ``precision`` None keeps cfg.dtype,
+    "fp32"/"bf16" select the inference numerics (bf16 is relative-error
+    bounded, not bitwise)."""
     engine = SimulationEngine(
         params, cfg, vocab, interval_size=interval_size, warmup=warmup,
         max_checkpoints=max_checkpoints, l_min=l_min, l_clip=l_clip,
         l_token=l_token, batch_size=batch_size, use_context=use_context,
-        with_oracle=with_oracle, timing_params=timing_params)
+        with_oracle=with_oracle, timing_params=timing_params,
+        rt_cache=rt_cache, precision=precision)
     return engine.simulate(bench)

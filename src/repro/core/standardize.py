@@ -254,3 +254,48 @@ def encode_fixed_clips(token_table: np.ndarray, pcs: np.ndarray,
         toks[k_full, :r] = rows[n - rem: n - rem + r]
         mask[k_full, :r] = 1.0
     return toks, mask
+
+
+def dedupe_token_rows(rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Content-dedupe standardized token rows: (k, l_token) ->
+    ``(uniq (n_unique, l_token) int32, inverse (k,) int32)`` with
+    ``uniq[inverse]`` bitwise equal to ``rows``.
+
+    Token ids are non-negative, so when an all-<PAD> (zero) row is present
+    it lexicographically sorts to local id 0 — the convention the RT
+    cache's pad slot and ``data.dataset.indexed_clips`` both rely on.
+    """
+    uniq, inv = np.unique(rows, axis=0, return_inverse=True)
+    return (np.ascontiguousarray(uniq, np.int32),
+            inv.reshape(rows.shape[0]).astype(np.int32))
+
+
+def fixed_clip_indices(static_ids: np.ndarray, pcs: np.ndarray,
+                       l_min: int, l_clip: int, pad_id: int = 0
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """RT-cache analogue of ``encode_fixed_clips``: same ``slice_fixed``
+    partition and mask, but each instruction becomes one int32 RT-table
+    row id instead of an (l_token,) token row — the front-end never
+    materializes token tensors at all.
+
+    ``static_ids`` maps static pc -> global RT row id (from
+    ``RTCache.ensure_rows`` over the program's token table); ``pad_id``
+    (default 0, the cache's all-<PAD> row) fills masked slots.  Returns
+    ``((n_clips, l_clip) int32 rt_idx, (n_clips, l_clip) float32 mask)``
+    with mask bitwise equal to the ``encode_fixed_clips`` mask.
+    """
+    n = pcs.shape[0]
+    k_full, rem = n // l_min, n % l_min
+    n_clips = k_full + (1 if rem else 0)
+    idx = np.full((n_clips, l_clip), pad_id, np.int32)
+    mask = np.zeros((n_clips, l_clip), np.float32)
+    ids = static_ids[pcs]
+    w = min(l_min, l_clip)
+    if k_full:
+        idx[:k_full, :w] = ids[: k_full * l_min].reshape(k_full, l_min)[:, :w]
+        mask[:k_full, :w] = 1.0
+    if rem:
+        r = min(rem, l_clip)
+        idx[k_full, :r] = ids[n - rem: n - rem + r]
+        mask[k_full, :r] = 1.0
+    return idx, mask

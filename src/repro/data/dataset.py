@@ -201,6 +201,26 @@ def split_dataset(ds: ClipDataset, fractions=(0.8, 0.1, 0.1),
     return tuple(out)
 
 
+def indexed_clips(ds: ClipDataset) -> Tuple[np.ndarray, np.ndarray]:
+    """Dedupe a dataset's instruction rows for RT-cache-style serving:
+    returns ``(row_table (n_unique, l_token) int32, rt_idx (N, l_clip)
+    int32)`` with ``row_table[rt_idx]`` bitwise equal to
+    ``ds.clip_tokens``.
+
+    Traces are loopy, so n_unique is orders of magnitude below N x l_clip
+    — this is both a storage compression and the bridge to cache-aware
+    evaluation: ``RTCache.ensure_rows(row_table)`` maps local row ids to
+    global ones, after which every eval batch is an ``rt_idx`` gather
+    through ``predictor.forward_cached``.  When the dataset has any
+    masked (all-<PAD>) slot the all-zero row occupies local row 0
+    (``dedupe_token_rows``), matching the cache's pad slot.
+    """
+    n, l_clip, l_token = ds.clip_tokens.shape
+    uniq, inv = std_mod.dedupe_token_rows(
+        ds.clip_tokens.reshape(n * l_clip, l_token))
+    return uniq, inv.reshape(n, l_clip)
+
+
 def shard_range(n: int, host: int, n_hosts: int) -> Tuple[int, int]:
     """Contiguous per-host shard bounds (clips are i.i.d.)."""
     per = n // n_hosts

@@ -94,6 +94,8 @@ class CompiledProgram:
     has_target: np.ndarray                     # (n,) bool
     _token_tables: Dict[int, Tuple[object, np.ndarray]] = \
         dataclasses.field(default_factory=dict, repr=False, compare=False)
+    _token_keys: Dict[int, Tuple[object, Tuple[bytes, ...]]] = \
+        dataclasses.field(default_factory=dict, repr=False, compare=False)
     _handlers: Optional[list] = \
         dataclasses.field(default=None, repr=False, compare=False)
     # per-static operand/property tables memoized by isa/timing
@@ -146,6 +148,18 @@ class CompiledProgram:
         table.setflags(write=False)
         self._token_tables[l_token] = (vocab, table)
         return table
+
+    def token_row_keys(self, vocab, l_token: int) -> Tuple[bytes, ...]:
+        """Memoized content keys (``tobytes`` per ``token_table`` row) —
+        what the static-instruction RT cache dedupes on.  Keyed like
+        ``token_table`` (identity-checked vocab per l_token)."""
+        cached = self._token_keys.get(l_token)
+        if cached is not None and cached[0] is vocab:
+            return cached[1]
+        table = self.token_table(vocab, l_token)
+        keys = tuple(r.tobytes() for r in np.ascontiguousarray(table))
+        self._token_keys[l_token] = (vocab, keys)
+        return keys
 
 
 def compile_program(program: Sequence[Instruction]) -> CompiledProgram:

@@ -30,7 +30,8 @@ def serve_capsim(args) -> None:
     engine = SimulationEngine(
         params, cfg, vocab, interval_size=args.interval_size, warmup=0,
         max_checkpoints=1, l_min=100, batch_size=args.batch_size,
-        with_oracle=False)
+        with_oracle=False, rt_cache=not args.no_rt_cache,
+        precision=args.precision)
 
     names = list(progen.TABLE_II)[: args.n_benchmarks]
     engine.submit_names(names)
@@ -45,6 +46,11 @@ def serve_capsim(args) -> None:
           f"({stats.n_clips} clips, {stats.n_batches} device batches, "
           f"{stats.n_pad} pad rows) in {wall:.1f}s "
           f"= {stats.n_clips / max(wall, 1e-9):.0f} clips/s")
+    rt = engine.last_rt_stats
+    if rt is not None:
+        print(f"rt-cache: {rt.n_rows_encoded} static rows encoded in "
+              f"{rt.build_seconds:.2f}s served {rt.n_rows_served} dynamic "
+              f"rows ({rt.rows_avoided} instruction-encoder rows avoided)")
 
 
 def serve_lm(args) -> None:
@@ -94,6 +100,14 @@ def main() -> None:
     ap.add_argument("--interval-size", type=int, default=10_000)
     ap.add_argument("--n-benchmarks", type=int, default=4)
     ap.add_argument("--decode-steps", type=int, default=8)
+    ap.add_argument("--no-rt-cache", action="store_true",
+                    help="monolithic predict path (re-encode every "
+                         "dynamic instruction row; the bitwise reference)")
+    ap.add_argument("--precision", default=None,
+                    choices=("fp32", "bf16"),
+                    help="inference numerics; default keeps the config "
+                         "dtype (fp32 here).  bf16 casts fp32 params at "
+                         "dispatch, keeps fp32 softmax/accumulation")
     args = ap.parse_args()
     if args.arch == "capsim":
         serve_capsim(args)

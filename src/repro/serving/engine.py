@@ -11,19 +11,29 @@ count (paper Fig 7): requests never serialize.
 The batch backend is ``repro.core.engine.BatchedPredictor``: the shared
 cached-jit predict step (no re-trace per engine instance), size-bucketed
 remainder padding (bounded compiled shapes), and async double-buffered
-dispatch.  The engine is synchronous-by-batch (submit/flush); a production
-front-end would put a queue in front, but batching policy — the part that
+dispatch.  On top of it sits the static-instruction RT cache
+(``repro.core.rt_cache``, on by default): request token rows are deduped
+against a content-addressed table that persists *across flushes*, so a
+steady request stream pays the 4-layer instruction encoder only for
+never-before-seen static rows and every clip runs block-encoder-only
+FLOPs.  ``precision="bf16"`` selects the low-precision inference mode
+(fp32 master params cast at dispatch; relative-error bounded).
+
+The engine is synchronous-by-batch (submit/flush); a production front-end
+would put a queue in front, but batching policy — the part that
 determines accelerator utilization — is all in the backend.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
+from repro.core import predictor as pred_mod
 from repro.core.engine import BatchedPredictor
+from repro.core.rt_cache import RTCache, RTCacheStats
 
 
 @dataclasses.dataclass
@@ -44,13 +54,22 @@ class Result:
 
 class PredictorEngine:
     def __init__(self, params, cfg, *, batch_size: int = 256,
-                 use_context: bool = True, max_in_flight: int = 2):
+                 use_context: bool = True, max_in_flight: int = 2,
+                 rt_cache: bool = True,
+                 precision: Optional[str] = None):
         self.params = params
-        self.cfg = cfg
+        self.cfg = pred_mod.inference_config(cfg, precision)
         self.batch_size = batch_size
         self.use_context = use_context
         self.max_in_flight = max_in_flight
+        # params are pinned for the engine's lifetime, so the RT table
+        # survives across flushes: only unseen static rows ever encode
+        self._cache = (RTCache(params, self.cfg) if rt_cache else None)
         self._pending: List[Request] = []
+
+    @property
+    def rt_stats(self) -> Optional[RTCacheStats]:
+        return self._cache.stats if self._cache is not None else None
 
     def submit(self, req: Request) -> None:
         self._pending.append(req)
@@ -66,7 +85,8 @@ class PredictorEngine:
 
         backend = BatchedPredictor(
             self.params, self.cfg, batch_size=self.batch_size,
-            use_context=self.use_context, max_in_flight=self.max_in_flight)
+            use_context=self.use_context, max_in_flight=self.max_in_flight,
+            rt_cache=self._cache)
         for r in reqs:
             backend.add(r.clip_tokens, r.context_tokens, r.clip_mask)
         times = backend.drain()

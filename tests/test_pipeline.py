@@ -108,6 +108,23 @@ def test_serving_engine_multi_request(tiny_ds):
     alone = lone.flush()[0]
     np.testing.assert_allclose(alone.total_cycles, results[0].total_cycles,
                                rtol=1e-5)
+    # the RT cache persists across flushes: replaying request 1 encodes
+    # zero new static rows and reproduces the pooled result bitwise
+    rt = engine.rt_stats
+    assert rt is not None and rt.n_rows_encoded > 0
+    encoded_before = rt.n_rows_encoded
+    engine.submit(Request(4, tiny_ds.clip_tokens[:n1],
+                          tiny_ds.context_tokens[:n1],
+                          tiny_ds.clip_mask[:n1]))
+    replay = engine.flush()[0]
+    assert rt.n_rows_encoded == encoded_before
+    assert replay.total_cycles == results[0].total_cycles
+    # and the monolithic reference path agrees
+    mono = PredictorEngine(params, SMALL_CFG, batch_size=8, rt_cache=False)
+    mono.submit(Request(5, tiny_ds.clip_tokens[:n1],
+                        tiny_ds.context_tokens[:n1],
+                        tiny_ds.clip_mask[:n1]))
+    assert mono.flush()[0].total_cycles == replay.total_cycles
 
 
 def test_capsim_simulate_end_to_end():

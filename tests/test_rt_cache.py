@@ -1,0 +1,215 @@
+"""Static-instruction RT cache + split predictor forward invariants.
+
+The tentpole contract: serving clips through the RT-table gather
+(``forward_cached`` — block encoder + head only) is *bitwise* identical
+in fp32 to the monolithic ``forward`` that re-encodes every dynamic row,
+because RT_i depends only on the static standardized tokens and rows
+encode independently.  bf16 precision mode is relative-error bounded,
+and the Pallas kernel's kv_mask plumbing must hold on padded remainder
+batches (interpret mode on CPU).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import predictor
+from repro.core.engine import BatchedPredictor, SimulationEngine
+from repro.core.rt_cache import PAD_ROW_ID, RTCache, encode_bucket
+from repro.core.standardize import build_vocab, encode_fixed_clips, \
+    fixed_clip_indices
+from repro.data.dataset import BuildConfig, build_bench_clips, indexed_clips
+from repro.isa import progen
+
+VOCAB = build_vocab()
+SMALL_CFG = get_config("capsim").replace(
+    d_model=32, head_dim=8, d_ff=64, dtype="float32")
+MIX = ["503.bwaves", "541.leela", "525.x264"]
+SIM_KW = dict(interval_size=1_500, warmup=200, max_checkpoints=3,
+              l_min=32, l_clip=32, l_token=16, batch_size=16,
+              with_oracle=False)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return predictor.init_params(SMALL_CFG, jax.random.PRNGKey(0))
+
+
+def _table_batch(params, rng, B=4, L=12):
+    """Random clips drawn from a real program's token table, as both a
+    token batch (monolithic forward) and an rt_idx batch (cached)."""
+    cprog = progen.build_benchmark("505.mcf").compiled()
+    table = cprog.token_table(VOCAB, 16)
+    cache = RTCache(params, SMALL_CFG, 16)
+    ids = cache.ensure_rows(table, keys=cprog.token_row_keys(VOCAB, 16))
+    pc = rng.randint(0, table.shape[0], (B, L)).astype(np.int32)
+    mask = (rng.uniform(size=(B, L)) < 0.8).astype(np.float32)
+    mask[:, 0] = 1.0
+    tok = table[pc] * mask[..., None].astype(np.int32)   # masked slots PAD
+    rt_idx = np.where(mask > 0, ids[pc], PAD_ROW_ID).astype(np.int32)
+    ctx = rng.randint(1, SMALL_CFG.vocab_size,
+                      (B, SMALL_CFG.context_tokens)).astype(np.int32)
+    return cache, tok, rt_idx, ctx, mask
+
+
+def test_forward_cached_bitwise_equals_forward(params):
+    """Gathering RT rows from the cache table == re-encoding the same
+    token rows inside the clip batch, bit for bit (fp32)."""
+    cache, tok, rt_idx, ctx, mask = _table_batch(
+        params, np.random.RandomState(0))
+    mono = predictor.forward(
+        params, {"clip_tokens": jnp.asarray(tok),
+                 "context_tokens": jnp.asarray(ctx),
+                 "clip_mask": jnp.asarray(mask)}, SMALL_CFG)
+    cached = predictor.forward_cached(
+        params, cache.table, {"rt_idx": jnp.asarray(rt_idx),
+                              "context_tokens": jnp.asarray(ctx),
+                              "clip_mask": jnp.asarray(mask)}, SMALL_CFG)
+    np.testing.assert_array_equal(np.asarray(mono), np.asarray(cached))
+
+
+def test_engine_rt_cache_bitwise_per_benchmark(params):
+    """SimulationEngine with the RT cache == monolithic engine, bitwise,
+    per benchmark — the CI gate's unit-scale twin."""
+    runs = {}
+    for rt in (True, False):
+        eng = SimulationEngine(params, SMALL_CFG, VOCAB, rt_cache=rt,
+                               **SIM_KW)
+        eng.submit_names(MIX)
+        runs[rt] = eng.run()
+        if rt:
+            st = eng.last_rt_stats
+            assert st.n_rows_encoded < st.n_rows_served
+            assert st.build_seconds > 0.0
+            assert eng.last_stats.n_clips > 0
+        else:
+            assert eng.last_rt_stats is None
+    for a, b in zip(runs[True], runs[False]):
+        assert a.name == b.name and a.n_clips == b.n_clips
+        assert a.predicted_cycles == b.predicted_cycles     # bitwise
+
+
+def test_batched_predictor_token_path_through_cache(params):
+    """Serving-style ``add`` of raw tokenized clips dedupes through the
+    cache and still matches the monolithic backend bitwise, across a
+    bucketed remainder (zero-row padding)."""
+    rng = np.random.RandomState(3)
+    cache, tok, rt_idx, ctx, mask = _table_batch(params, rng, B=23, L=32)
+    mono = BatchedPredictor(params, SMALL_CFG, batch_size=16)
+    mono.add(tok, ctx, mask)
+    ref = mono.drain()
+
+    cached = BatchedPredictor(params, SMALL_CFG, batch_size=16,
+                              rt_cache=cache)
+    for lo, hi in ((0, 5), (5, 17), (17, 23)):
+        cached.add(tok[lo:hi], ctx[lo:hi], mask[lo:hi])
+    out = cached.drain()
+    assert ref.shape == out.shape == (23,)
+    np.testing.assert_array_equal(ref, out)
+    assert cached.stats.n_predicted == 23 and cached.stats.n_pad == 1
+
+
+def test_rt_cache_dedupe_and_pad_row(params):
+    cache = RTCache(params, SMALL_CFG, 16)
+    rows = np.zeros((3, 16), np.int32)
+    rows[1, :4] = (1, 3, 2, 2)
+    rows[2, :4] = (1, 3, 2, 2)                   # dup of row 1
+    ids = cache.ensure_rows(rows)
+    assert ids[0] == PAD_ROW_ID                  # all-<PAD> -> pad slot
+    assert ids[1] == ids[2] != PAD_ROW_ID
+    n0 = cache.stats.n_rows_encoded
+    assert n0 == 2                               # pad row + one unique
+    again = cache.ensure_rows(rows)
+    np.testing.assert_array_equal(ids, again)
+    assert cache.stats.n_rows_encoded == n0      # pure cache hits
+    assert cache.stats.n_encode_passes == 1
+
+
+def test_encode_bucket():
+    assert encode_bucket(1) == 8 and encode_bucket(8) == 8
+    assert encode_bucket(9) == 16 and encode_bucket(500) == 512
+
+
+def test_fixed_clip_indices_matches_encode_fixed_clips():
+    """Index building is the gather-free twin of token tokenization:
+    same mask, and table[idx] == the token tensors."""
+    cprog = progen.build_benchmark("505.mcf").compiled()
+    table = cprog.token_table(VOCAB, 16)
+    rng = np.random.RandomState(1)
+    pcs = rng.randint(0, table.shape[0], 137).astype(np.int32)
+    tok, mask = encode_fixed_clips(table, pcs, 32, 40)
+    # local ids == pc, pad row appended at index n_static
+    ext = np.concatenate([table, np.zeros((1, 16), np.int32)])
+    idx, mask_i = fixed_clip_indices(
+        np.arange(table.shape[0], dtype=np.int32), pcs, 32, 40,
+        pad_id=table.shape[0])
+    np.testing.assert_array_equal(mask, mask_i)
+    np.testing.assert_array_equal(tok, ext[idx])
+
+
+def test_bf16_precision_within_relative_error(params):
+    """Opt-in bf16 inference: fp32 params cast at dispatch, fp32
+    softmax/accumulation — per-benchmark predictions within 1%."""
+    results = {}
+    for prec in (None, "bf16"):
+        eng = SimulationEngine(params, SMALL_CFG, VOCAB, precision=prec,
+                               **SIM_KW)
+        eng.submit_names(MIX)
+        results[prec] = eng.run()
+    for a, b in zip(results[None], results["bf16"]):
+        rel = abs(b.predicted_cycles - a.predicted_cycles) \
+            / abs(a.predicted_cycles)
+        assert rel < 0.01, (a.name, rel)
+
+
+def test_inference_config_precision_knob():
+    resolved = predictor.inference_config(SMALL_CFG, None)
+    if jax.default_backend() == "tpu":       # Pallas-by-default on TPU
+        assert resolved.attn_impl == "pallas"
+        assert resolved.replace(attn_impl="chunked") == SMALL_CFG
+    else:
+        assert resolved == SMALL_CFG         # identity off-TPU
+    assert predictor.inference_config(SMALL_CFG, "fp32").dtype == "float32"
+    assert predictor.inference_config(SMALL_CFG, "bf16").dtype == "bfloat16"
+    with pytest.raises(ValueError):
+        predictor.inference_config(SMALL_CFG, "fp8")
+
+
+def test_pallas_kv_mask_on_padded_remainder(params):
+    """The Pallas flash path (interpret mode on CPU) must honor kv_mask on
+    a drain-style batch: fully-masked zero remainder rows and partially
+    masked clips, matching the XLA path and ignoring pad content."""
+    rng = np.random.RandomState(5)
+    cache, tok, rt_idx, ctx, mask = _table_batch(params, rng, B=6, L=16)
+    # drain-style remainder: last two rows fully masked zero rows
+    tok[4:] = 0
+    rt_idx[4:] = PAD_ROW_ID
+    ctx[4:] = 0
+    mask[4:] = 0.0
+    pcfg = SMALL_CFG.replace(attn_impl="pallas")
+    batch = {"clip_tokens": jnp.asarray(tok),
+             "context_tokens": jnp.asarray(ctx),
+             "clip_mask": jnp.asarray(mask)}
+    ref = np.asarray(predictor.forward(params, batch, SMALL_CFG))
+    out = np.asarray(predictor.forward(params, batch, pcfg))
+    np.testing.assert_allclose(out[:4], ref[:4], rtol=2e-4, atol=2e-4)
+    cached = np.asarray(predictor.forward_cached(
+        params, cache.table, {"rt_idx": jnp.asarray(rt_idx),
+                              "context_tokens": jnp.asarray(ctx),
+                              "clip_mask": jnp.asarray(mask)}, pcfg))
+    np.testing.assert_allclose(cached[:4], ref[:4], rtol=2e-4, atol=2e-4)
+    assert np.isfinite(out).all() and np.isfinite(cached).all()
+
+
+def test_dataset_indexed_clips_round_trip():
+    bcfg = BuildConfig(interval_size=1_200, warmup=100, max_checkpoints=1,
+                       l_min=25, l_clip=32, l_token=16, sample=False)
+    ds = build_bench_clips(progen.build_benchmark("541.leela"), bcfg, VOCAB)
+    assert len(ds) > 0
+    rows, idx = indexed_clips(ds)
+    assert rows.shape[0] < ds.clip_tokens.shape[0] * ds.clip_tokens.shape[1]
+    np.testing.assert_array_equal(rows[idx], ds.clip_tokens)
+    # masked slots exist -> the all-<PAD> row sorts to local id 0
+    if (ds.clip_mask == 0).any():
+        assert not rows[0].any()
