@@ -30,7 +30,7 @@ import numpy as np
 if __package__ in (None, ""):     # direct `python benchmarks/bench_speed.py`
     sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
-from benchmarks.common import bench_cfg, full_cfg
+from benchmarks.common import BENCH_SCHEMA_VERSION, bench_cfg, full_cfg
 from repro.core import context as ctx_mod
 from repro.core import predictor
 from repro.core import slicer as slicer_mod
@@ -38,7 +38,7 @@ from repro.core import standardize as std_mod
 from repro.core.engine import SimulationEngine
 from repro.core.simulate import capsim_simulate
 from repro.core.standardize import build_vocab
-from repro.isa import funcsim, progen, timing
+from repro.isa import funcsim, multicore, progen, timing
 
 BENCHES = ["503.bwaves", "505.mcf", "548.exchange2"]
 
@@ -375,7 +375,8 @@ def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
         "bf16_predict_seconds": p_bf16[0]["predict_seconds"],
         "bf16_max_rel_error": bf16_max_rel,
         "rt_cache": rt_cache_stats}
-    return {"n_benchmarks": n_benchmarks, "n_clips": n_clips,
+    return {"schema_version": BENCH_SCHEMA_VERSION,
+            "n_benchmarks": n_benchmarks, "n_clips": n_clips,
             "quick": quick,
             "sequential_seconds": seq_seconds,
             "engine_seconds": eng_seconds,
@@ -387,6 +388,7 @@ def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
             "all_bitwise_equal": not mismatches,
             "predict": predict,
             "frontend": {
+                "schema_version": BENCH_SCHEMA_VERSION,
                 "sequential_seconds": seq_fe_seconds,
                 "engine": fe.as_dict(),
                 "predict_seconds": stats.predict_seconds,
@@ -398,11 +400,230 @@ def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
             "per_bench": per_bench}
 
 
+# --------------------------------------------------------------------------- #
+# Multicore: engine (benchmark, core) shards vs sequential per-core path
+# --------------------------------------------------------------------------- #
+
+def _sequential_multicore(mb, params, cfg, vocab, *, interval_size,
+                          max_checkpoints, l_min, l_clip, l_token,
+                          batch_size, quantum, timing_params):
+    """The no-engine multicore reference: the SAME interleaved front-end
+    (``run_multicore``), but each (core, checkpoint) clip batch predicts
+    through its own synchronous monolithic loop with full-batch padding —
+    no pooling, no RT cache.  Accumulation mirrors the engine exactly:
+    one ``float(chunk.sum())`` per (core, checkpoint) segment, so per-core
+    AND summed cycles must agree bitwise with the pooled RT-cache path.
+    Returns per-core predicted cycles, per-core oracle cycles
+    (``simulate_multicore`` over the recorded interleave), clip counts,
+    and the predict wall time.
+    """
+    predict = jax.jit(lambda p, b: predictor.predict_step(p, b, cfg))
+    cprogs = mb.compiled()
+    tables = [cp.token_table(vocab, l_token) for cp in cprogs]
+    states = mb.fresh_states()
+    n = mb.n_cores
+    pred_cycles = [0.0] * n
+    oracle_cycles = [0.0] * n
+    clips = [0] * n
+    predict_seconds = 0.0
+    oracle_seconds = 0.0
+    for _ in range(min(mb.ckp_num, max_checkpoints)):
+        mtrace = multicore.run_multicore(
+            cprogs, interval_size, states, snapshot_every=l_min,
+            quantum=quantum)
+        if len(mtrace) == 0:
+            break
+        for c, trace in enumerate(mtrace.cores):
+            if not len(trace):
+                continue
+            tok, mask = std_mod.encode_fixed_clips(
+                tables[c], trace.pc, l_min, l_clip)
+            ctx_all = ctx_mod.context_tokens_from_matrix(
+                trace.snapshots, vocab, core_id=c)
+            rows = np.minimum(np.arange(tok.shape[0]), len(ctx_all) - 1)
+            ctx = ctx_all[rows]
+            k = tok.shape[0]
+            pad = (-k) % batch_size
+            if pad:
+                tok = np.concatenate(
+                    [tok, np.zeros((pad,) + tok.shape[1:], tok.dtype)])
+                ctx = np.concatenate(
+                    [ctx, np.zeros((pad,) + ctx.shape[1:], ctx.dtype)])
+                mask = np.concatenate(
+                    [mask, np.zeros((pad,) + mask.shape[1:], mask.dtype)])
+            preds = []
+            t0 = time.time()
+            for lo in range(0, tok.shape[0], batch_size):
+                batch = {
+                    "clip_tokens": jnp.asarray(tok[lo:lo + batch_size]),
+                    "context_tokens": jnp.asarray(ctx[lo:lo + batch_size]),
+                    "clip_mask": jnp.asarray(mask[lo:lo + batch_size])}
+                preds.append(np.asarray(predict(params, batch)))
+            predict_seconds += time.time() - t0
+            pred_cycles[c] += float(np.concatenate(preds)[:k].sum())
+            clips[c] += k
+        t0 = time.time()
+        totals = timing.total_cycles_multicore(
+            mtrace.cores, mtrace.schedule, timing_params)
+        oracle_seconds += time.time() - t0
+        for c, cyc in enumerate(totals):
+            oracle_cycles[c] += cyc
+    return (pred_cycles, oracle_cycles, clips, predict_seconds,
+            oracle_seconds)
+
+
+def _columnar_oracle_n1(mb, *, interval_size, max_checkpoints, l_min,
+                        timing_params):
+    """Single-core anchor: the same intervals through plain
+    ``run_compiled`` + ``simulate_columnar`` (no multicore machinery at
+    all) — ``simulate_multicore`` at N=1 must match this bitwise."""
+    assert mb.n_cores == 1
+    cprog = mb.compiled()[0]
+    st = mb.fresh_states()[0]
+    cycles = 0.0
+    for _ in range(min(mb.ckp_num, max_checkpoints)):
+        trace, st = funcsim.run_compiled(cprog, interval_size, st,
+                                         snapshot_every=l_min)
+        if not len(trace):
+            break
+        cycles += timing.total_cycles_columnar(trace, timing_params)
+    return cycles
+
+
+def run_multicore_bench(emit, *, core_counts=(1, 2, 4),
+                        quick: bool = False) -> dict:
+    """Engine-vs-sequential equality and throughput at 1/2/4 cores.
+
+    Engine = ``SimulationEngine.run_multicore``: interleaved per-core
+    functional sims -> (benchmark, core) shards through one pooled
+    RT-cached predictor -> demuxed per-core sums.  Sequential = the same
+    front-end with per-(core, checkpoint) monolithic predict loops.  The
+    gates (CI-enforced): per-core AND summed predicted cycles bitwise
+    equal at every core count; oracle cycles equal between both paths;
+    and at N=1 the multicore oracle bitwise equal to
+    ``simulate_columnar``.
+    """
+    vocab = build_vocab()
+    cfg = predictor.inference_config(bench_cfg() if quick else full_cfg())
+    params = predictor.init_params(cfg, jax.random.PRNGKey(0))
+    names = list(multicore.MULTICORE_NAMES)
+    tp = timing.TimingParams()
+    kw = dict(interval_size=2_000 if quick else 10_000,
+              max_checkpoints=1 if quick else 2,
+              l_min=100, l_clip=128, l_token=16,
+              batch_size=32 if quick else 64)
+    quantum = multicore.DEFAULT_QUANTUM
+
+    per_count = {}
+    mismatches = []
+    for n_cores in core_counts:
+        mbenches = [multicore.build_multicore_benchmark(n, n_cores)
+                    for n in names]
+        engine = SimulationEngine(params, cfg, vocab, warmup=0,
+                                  with_oracle=False, rt_cache=True, **kw)
+        t0 = time.time()
+        results = engine.run_multicore(mbenches, quantum=quantum)
+        eng_seconds = time.time() - t0
+        fe = engine.frontend_stats
+        stats = engine.last_stats
+        n_clips = stats.n_clips
+
+        t0 = time.time()
+        per_bench = {}
+        seq_predict_seconds = 0.0
+        seq_oracle_seconds = 0.0
+        prior_mismatches = len(mismatches)
+        for mb, r in zip(mbenches, results):
+            seq_pred, seq_oracle, seq_clips, p_s, o_s = \
+                _sequential_multicore(mb, params, cfg, vocab,
+                                      quantum=quantum, timing_params=tp,
+                                      **kw)
+            seq_predict_seconds += p_s
+            seq_oracle_seconds += o_s
+            cores = []
+            core_equal = True
+            for c, cr in enumerate(r.cores):
+                eq = cr.predicted_cycles == seq_pred[c]
+                core_equal &= eq
+                assert cr.n_clips == seq_clips[c], \
+                    (cr.name, cr.n_clips, seq_clips[c])
+                cores.append({"core": c,
+                              "engine_cycles": cr.predicted_cycles,
+                              "sequential_cycles": seq_pred[c],
+                              "oracle_cycles": seq_oracle[c],
+                              "n_clips": cr.n_clips,
+                              "bitwise_equal": eq})
+            summed_seq = 0.0
+            for v in seq_pred:
+                summed_seq += v
+            summed_equal = r.predicted_cycles == summed_seq
+            entry = {"cores": cores,
+                     "summed_engine_cycles": r.predicted_cycles,
+                     "summed_sequential_cycles": summed_seq,
+                     "summed_bitwise_equal": summed_equal,
+                     "oracle_cycles_total": sum(seq_oracle)}
+            if not (core_equal and summed_equal):
+                mismatches.append(f"{mb.name}@{n_cores}")
+            per_bench[mb.name] = entry
+        seq_seconds = (time.time() - t0 - seq_oracle_seconds)
+        if n_cores == 1:
+            # the single-core oracle anchor runs OUTSIDE the timed
+            # window: it is a correctness reference, not part of the
+            # sequential path's throughput accounting
+            for mb in mbenches:
+                entry = per_bench[mb.name]
+                ref = _columnar_oracle_n1(
+                    mb, interval_size=kw["interval_size"],
+                    max_checkpoints=kw["max_checkpoints"],
+                    l_min=kw["l_min"], timing_params=tp)
+                entry["n1_oracle_columnar_cycles"] = ref
+                entry["n1_oracle_bitwise_equal"] = \
+                    ref == entry["oracle_cycles_total"]
+                if not entry["n1_oracle_bitwise_equal"]:
+                    mismatches.append(f"{mb.name}@1:oracle")
+        eng_cps = n_clips / max(eng_seconds, 1e-9)
+        per_count[str(n_cores)] = {
+            "n_clips": n_clips,
+            "engine_seconds": eng_seconds,
+            "sequential_seconds": seq_seconds,
+            "engine_clips_per_s": eng_cps,
+            "per_core_clips_per_s": eng_cps / n_cores,
+            "sequential_clips_per_s": n_clips / max(seq_seconds, 1e-9),
+            "sequential_predict_seconds": seq_predict_seconds,
+            "engine_predict_seconds": stats.predict_seconds,
+            "frontend": fe.as_dict(),
+            "rt": (engine.last_rt_stats.as_dict()
+                   if engine.last_rt_stats else {}),
+            "per_bench": per_bench}
+        emit.emit(f"speed.multicore_{n_cores}", eng_seconds * 1e6
+                  / max(n_clips, 1),
+                  f"{len(names)} mt benchmarks x {n_cores} cores: "
+                  f"{n_clips} clips in {eng_seconds:.2f}s = "
+                  f"{eng_cps:.0f} clips/s ({eng_cps / n_cores:.0f}/core) "
+                  f"vs sequential {seq_seconds:.2f}s; cycles "
+                  f"{'bitwise equal' if len(mismatches) == prior_mismatches else 'MISMATCH'}")
+
+    return {"schema_version": BENCH_SCHEMA_VERSION,
+            "quick": quick,
+            "quantum": quantum,
+            "core_counts": list(core_counts),
+            "benchmarks": names,
+            "all_bitwise_equal": not mismatches,
+            "mismatches": mismatches,
+            "per_core_count": per_count}
+
+
 if __name__ == "__main__":
     from benchmarks.common import CsvEmitter
     ap = argparse.ArgumentParser()
     ap.add_argument("--multi", action="store_true",
                     help="multi-benchmark sequential-vs-engine throughput")
+    ap.add_argument("--multicore", action="store_true",
+                    help="multicore engine-vs-sequential equality + "
+                         "per-core throughput at 1/2/4 cores")
+    ap.add_argument("--core-counts", type=int, nargs="+",
+                    default=[1, 2, 4],
+                    help="core counts for --multicore")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke scale (small model, short intervals)")
     ap.add_argument("--n-benchmarks", type=int, default=8)
@@ -426,7 +647,16 @@ if __name__ == "__main__":
                          "tracks where host time goes across PRs")
     args = ap.parse_args()
     emitter = CsvEmitter()
-    if args.multi:
+    if args.multicore:
+        res = run_multicore_bench(emitter, core_counts=args.core_counts,
+                                  quick=args.quick)
+        if args.json:
+            Path(args.json).write_text(json.dumps(res, indent=2))
+        if not res["all_bitwise_equal"]:
+            raise SystemExit(
+                "multicore engine/sequential/oracle cycles diverged: "
+                f"{res['mismatches']}")
+    elif args.multi:
         res = run_multi(emitter, n_benchmarks=args.n_benchmarks,
                         quick=args.quick)
         if args.json:

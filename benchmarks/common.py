@@ -29,6 +29,12 @@ from repro.training.train_loop import (TrainConfig, init_train_state,
 DATA_DIR = Path("results/bench_data")
 VOCAB = build_vocab()
 
+# Stamped into every bench JSON (writers) and checked FIRST by the CI
+# gate readers: a field rename bumps this and fails the gate loudly
+# instead of KeyError-ing halfway through a reader.  v1 = the implicit
+# pre-stamp schema; v2 adds the stamp itself + the multicore breakdown.
+BENCH_SCHEMA_VERSION = 2
+
 BENCH_BCFG = BuildConfig(interval_size=6_000, warmup=600,
                          max_checkpoints=2, l_min=50, l_clip=64,
                          l_token=16, threshold=50, coef=0.1)

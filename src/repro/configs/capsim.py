@@ -18,8 +18,9 @@ def config() -> ArchConfig:
         num_kv_heads=4,
         head_dim=32,
         d_ff=512,
-        vocab_size=512,               # standardized-token vocab is 382; padded
-                                      # to 512 for clean TPU lane tiling
+        vocab_size=512,               # standardized-token vocab is 383 (incl.
+                                      # the <CORE> channel token); padded to
+                                      # 512 for clean TPU lane tiling
         clip_tokens=16,               # L_token: max standardized length is 14
         context_tokens=360,           # M = 40 registers x (1 name + 8 value tokens)
         shape_names=tuple(CAPSIM_SHAPES),

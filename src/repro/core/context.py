@@ -14,16 +14,22 @@ yields the (M, E)-shaped context matrix after embedding, M = 40 * 9 = 360
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
-from repro.core.standardize import BYTE_TOKENS, Vocab
+from repro.core.standardize import BYTE_TOKENS, CORE, Vocab
 from repro.isa.isa import CONTEXT_REGS
 
 TOKENS_PER_REG = 9          # 1 name + 8 value bytes
 CONTEXT_LEN = len(CONTEXT_REGS) * TOKENS_PER_REG
 assert CONTEXT_LEN == 360
+# Multicore context: one extra pseudo-register row (<CORE> name + the
+# core id's 8 value bytes) appended after the 40 architectural rows, so
+# the predictor can condition on WHICH core a clip executed on.  The
+# single-core layout (and every token id inside it) is unchanged.
+MULTICORE_CONTEXT_LEN = CONTEXT_LEN + TOKENS_PER_REG
+assert MULTICORE_CONTEXT_LEN == 369
 
 
 def context_token_ids(snapshot: Dict[str, int], vocab: Vocab) -> np.ndarray:
@@ -46,8 +52,20 @@ def batch_context_tokens(snapshots: Sequence[Dict[str, int]],
     return np.stack([context_token_ids(s, vocab) for s in snapshots])
 
 
-def context_tokens_from_matrix(snapshots: np.ndarray,
-                               vocab: Vocab) -> np.ndarray:
+def core_id_tokens(core_id: int, vocab: Vocab) -> np.ndarray:
+    """The core-id context channel: ``(TOKENS_PER_REG,) int32`` —
+    ``<CORE>`` name token followed by the big-endian bytes of the id."""
+    out = np.empty(TOKENS_PER_REG, np.int32)
+    out[0] = vocab[CORE]
+    byte0 = vocab[BYTE_TOKENS[0]]
+    v = int(core_id) & ((1 << 64) - 1)
+    for shift in range(56, -8, -8):                      # big-endian bytes
+        out[1 + (56 - shift) // 8] = byte0 + ((v >> shift) & 0xFF)
+    return out
+
+
+def context_tokens_from_matrix(snapshots: np.ndarray, vocab: Vocab,
+                               core_id: Optional[int] = None) -> np.ndarray:
     """Columnar path: ``(B, 40) uint64`` snapshot matrix (rows in
     ``CONTEXT_REGS`` order, as emitted by the columnar funcsim) ->
     ``(B, 360) int32`` token ids, bitwise equal to stacking
@@ -55,6 +73,12 @@ def context_tokens_from_matrix(snapshots: np.ndarray,
 
     The per-register byte loop becomes one vectorized big-endian byte
     decomposition: shift the whole matrix by 56..0 and mask.
+
+    With ``core_id`` set (the multicore engine), one extra
+    ``core_id_tokens`` row is appended to every matrix —
+    ``(B, MULTICORE_CONTEXT_LEN)`` out — so clips from different cores of
+    one benchmark carry distinct contexts; ``core_id=None`` keeps the
+    single-core layout bit for bit.
     """
     snaps = np.ascontiguousarray(snapshots, np.uint64)
     b = snaps.shape[0]
@@ -63,4 +87,9 @@ def context_tokens_from_matrix(snapshots: np.ndarray,
     out = np.empty((b, len(CONTEXT_REGS), TOKENS_PER_REG), np.int32)
     out[:, :, 0] = np.asarray([vocab[r] for r in CONTEXT_REGS], np.int32)
     out[:, :, 1:] = bytes_.astype(np.int32) + vocab[BYTE_TOKENS[0]]
-    return out.reshape(b, CONTEXT_LEN)
+    flat = out.reshape(b, CONTEXT_LEN)
+    if core_id is None:
+        return flat
+    chan = np.broadcast_to(core_id_tokens(core_id, vocab),
+                           (b, TOKENS_PER_REG))
+    return np.concatenate([flat, chan], axis=1)

@@ -59,7 +59,7 @@ from repro.core import context as ctx_mod
 from repro.core import predictor as pred_mod
 from repro.core import standardize as std_mod
 from repro.core.rt_cache import RTCache, RTCacheStats
-from repro.isa import funcsim, progen, timing
+from repro.isa import funcsim, multicore, progen, timing
 
 
 @dataclasses.dataclass
@@ -323,7 +323,7 @@ class BatchedPredictor:
 
 @dataclasses.dataclass
 class _Job:
-    bench: progen.Benchmark
+    bench: object                     # Benchmark or (multicore) core label
     offset: int = 0                   # first clip index in the global pool
     n_clips: int = 0
     n_intervals: int = 0
@@ -331,6 +331,43 @@ class _Job:
     oracle_cycles: float = 0.0
     oracle_seconds: float = 0.0
     func_seconds: float = 0.0
+    # multicore demux: (bench, core) clips land in per-checkpoint
+    # segments interleaved across cores, so predictions accumulate
+    # segment-by-segment instead of as one contiguous pool slice
+    predicted_cycles: float = 0.0
+    name: str = ""
+
+
+@dataclasses.dataclass
+class MulticoreSimResult:
+    """One multicore benchmark's demuxed (benchmark, core) results.
+
+    ``predicted_cycles`` / ``oracle_cycles`` are the across-core sums —
+    total core-cycles of the N-core run; the per-core breakdown is in
+    ``cores`` (entries named ``<bench>#c<k>``).
+    """
+
+    name: str
+    n_cores: int
+    cores: List[SimResult]
+
+    @property
+    def predicted_cycles(self) -> float:
+        return sum(r.predicted_cycles for r in self.cores)
+
+    @property
+    def oracle_cycles(self) -> Optional[float]:
+        if any(r.oracle_cycles is None for r in self.cores):
+            return None
+        return sum(r.oracle_cycles for r in self.cores)
+
+    @property
+    def n_clips(self) -> int:
+        return sum(r.n_clips for r in self.cores)
+
+    @property
+    def n_instructions(self) -> int:
+        return sum(r.n_instructions for r in self.cores)
 
 
 class SimulationEngine:
@@ -380,6 +417,44 @@ class SimulationEngine:
         for name in names:
             self.submit(progen.build_benchmark(name))
 
+    def _feed_trace(self, trace, token_table, static_ids,
+                    pred: BatchedPredictor, job: _Job,
+                    core_id: Optional[int] = None) -> int:
+        """Tokenize + context one interval trace and enqueue its clips —
+        the shared interval body of the single-core and multicore paths
+        (``core_id=None`` keeps the single-core context layout bit for
+        bit).  Returns the clip count enqueued."""
+        fe = self.frontend_stats
+        n = len(trace)
+        job.n_intervals += 1
+        job.n_instructions += n
+        fe.n_instructions += n
+
+        t0 = time.time()
+        if static_ids is not None:
+            tok, mask = std_mod.fixed_clip_indices(
+                static_ids, trace.pc, self.l_min, self.l_clip)
+        else:
+            tok, mask = std_mod.encode_fixed_clips(
+                token_table, trace.pc, self.l_min, self.l_clip)
+        n_clips = tok.shape[0]                 # slice_fixed partition
+        fe.tokenize_seconds += time.time() - t0
+
+        t0 = time.time()
+        ctx_all = ctx_mod.context_tokens_from_matrix(
+            trace.snapshots, self.vocab, core_id=core_id)
+        rows = np.minimum(np.arange(n_clips), len(ctx_all) - 1)
+        ctx = ctx_all[rows]
+        fe.context_seconds += time.time() - t0
+
+        job.n_clips += n_clips
+        fe.n_clips += n_clips
+        if static_ids is not None:
+            pred.add_indexed(tok, ctx, mask)
+        else:
+            pred.add(tok, ctx, mask)
+        return n_clips
+
     def _functional(self, bench: progen.Benchmark, pred: BatchedPredictor,
                     job: _Job) -> None:
         """Columnar functional sim + slice + tokenize one benchmark,
@@ -406,36 +481,9 @@ class SimulationEngine:
             trace, st = funcsim.run_compiled(
                 cprog, self.interval_size, st, snapshot_every=self.l_min)
             fe.interpret_seconds += time.time() - t0
-            n = len(trace)
-            if not n:
+            if not len(trace):
                 break
-            job.n_intervals += 1
-            job.n_instructions += n
-            fe.n_instructions += n
-
-            t0 = time.time()
-            if static_ids is not None:
-                tok, mask = std_mod.fixed_clip_indices(
-                    static_ids, trace.pc, self.l_min, self.l_clip)
-            else:
-                tok, mask = std_mod.encode_fixed_clips(
-                    token_table, trace.pc, self.l_min, self.l_clip)
-            n_clips = tok.shape[0]                 # slice_fixed partition
-            fe.tokenize_seconds += time.time() - t0
-
-            t0 = time.time()
-            ctx_all = ctx_mod.context_tokens_from_matrix(
-                trace.snapshots, self.vocab)
-            rows = np.minimum(np.arange(n_clips), len(ctx_all) - 1)
-            ctx = ctx_all[rows]
-            fe.context_seconds += time.time() - t0
-
-            job.n_clips += n_clips
-            fe.n_clips += n_clips
-            if static_ids is not None:
-                pred.add_indexed(tok, ctx, mask)
-            else:
-                pred.add(tok, ctx, mask)
+            self._feed_trace(trace, token_table, static_ids, pred, job)
             if self.with_oracle:
                 t0 = time.time()
                 job.oracle_cycles += timing.total_cycles_columnar(
@@ -500,3 +548,127 @@ class SimulationEngine:
     def simulate(self, bench: progen.Benchmark) -> SimResult:
         """Single-benchmark convenience path (``capsim_simulate``)."""
         return self.run([bench])[0]
+
+    # ------------------------------ multicore ------------------------------ #
+
+    def run_multicore(self,
+                      mbenches: Sequence[multicore.MulticoreBenchmark], *,
+                      quantum: int = multicore.DEFAULT_QUANTUM
+                      ) -> List[MulticoreSimResult]:
+        """Multicore path: interleaved per-core functional sims ->
+        (benchmark, core) clip shards through the SAME pooled
+        ``BatchedPredictor`` + shared ``RTCache`` -> demuxed per-core
+        ``SimResult``s summed into per-benchmark cycles.
+
+        Clips arrive in per-(core, checkpoint) segments interleaved
+        across cores, so demux walks the recorded segment list; per-core
+        predicted cycles accumulate one ``float(segment.sum())`` per
+        checkpoint — the exact accumulation order the sequential
+        reference path (``bench_speed.run_multicore_bench``) mirrors, so
+        equality is bitwise, per core and summed.  Each core's context
+        matrices carry its ``core_id`` channel
+        (``context_tokens_from_matrix(..., core_id=c)``); the oracle is
+        ``timing.simulate_multicore`` over the recorded commit
+        interleave.
+        """
+        self.frontend_stats = FrontendStats()
+        fe = self.frontend_stats
+        pred = BatchedPredictor(
+            self.params, self.cfg, batch_size=self.batch_size,
+            use_context=self.use_context, max_in_flight=self.max_in_flight,
+            rt_cache=self._rt_cache)
+        rt_stats = (self._rt_cache.stats if self._rt_cache is not None
+                    else RTCacheStats())
+        all_jobs: List[List[_Job]] = []
+        segments: List[Tuple[_Job, int]] = []
+        for mb in mbenches:
+            cprogs = mb.compiled()
+            token_tables = [cp.token_table(self.vocab, self.l_token)
+                            for cp in cprogs]
+            static_ids = None
+            if self._rt_cache is not None:
+                # all cores of one program share identical token tables
+                # (immediates collapse to <CONST>), so rows dedupe to one
+                # RT-table entry set across the whole benchmark
+                static_ids = [
+                    self._rt_cache.ensure_rows(
+                        tt, keys=cp.token_row_keys(self.vocab,
+                                                   self.l_token))
+                    for cp, tt in zip(cprogs, token_tables)]
+            jobs = [_Job(bench=mb, name=f"{mb.name}#c{c}")
+                    for c in range(mb.n_cores)]
+            all_jobs.append(jobs)
+            states = mb.fresh_states()
+            t_mb = time.time()
+            d0 = pred.stats.dispatch_seconds
+            b0 = rt_stats.build_seconds
+            oracle_s = 0.0
+            if self.warmup:
+                t0 = time.time()
+                multicore.run_multicore(cprogs, self.warmup, states,
+                                        quantum=quantum)
+                fe.interpret_seconds += time.time() - t0
+            n_ckp = min(mb.ckp_num, self.max_checkpoints)
+            for _ in range(n_ckp):
+                t0 = time.time()
+                mtrace = multicore.run_multicore(
+                    cprogs, self.interval_size, states,
+                    snapshot_every=self.l_min, quantum=quantum)
+                fe.interpret_seconds += time.time() - t0
+                if len(mtrace) == 0:
+                    break
+                for c, trace in enumerate(mtrace.cores):
+                    if not len(trace):
+                        continue
+                    n_clips = self._feed_trace(
+                        trace, token_tables[c],
+                        static_ids[c] if static_ids is not None else None,
+                        pred, jobs[c], core_id=c)
+                    segments.append((jobs[c], n_clips))
+                if self.with_oracle:
+                    t0 = time.time()
+                    totals = timing.total_cycles_multicore(
+                        mtrace.cores, mtrace.schedule, self.timing_params)
+                    dt = time.time() - t0
+                    oracle_s += dt
+                    for c, cyc in enumerate(totals):
+                        jobs[c].oracle_cycles += cyc
+                        jobs[c].oracle_seconds += dt / mb.n_cores
+            mb_seconds = (time.time() - t_mb - oracle_s
+                          - (pred.stats.dispatch_seconds - d0)
+                          - (rt_stats.build_seconds - b0))
+            mb_clips = max(sum(j.n_clips for j in jobs), 1)
+            for job in jobs:
+                job.func_seconds = mb_seconds * (job.n_clips / mb_clips)
+
+        preds = pred.drain()
+        self.last_stats = pred.stats
+        self.last_rt_stats = (dataclasses.replace(rt_stats)
+                              if self._rt_cache is not None else None)
+        total = sum(n for _, n in segments)
+        assert preds.shape[0] == total == pred.stats.n_predicted, \
+            "clip accounting mismatch between shards and predictions"
+        off = 0
+        for job, n in segments:
+            job.predicted_cycles += float(preds[off:off + n].sum())
+            off += n
+
+        results = []
+        total_clips = max(total, 1)
+        for mb, jobs in zip(mbenches, all_jobs):
+            cores = [SimResult(
+                name=job.name,
+                n_intervals=job.n_intervals,
+                n_instructions=job.n_instructions,
+                n_clips=job.n_clips,
+                predicted_cycles=job.predicted_cycles,
+                oracle_cycles=job.oracle_cycles if self.with_oracle
+                else None,
+                func_seconds=job.func_seconds,
+                predict_seconds=pred.stats.predict_seconds
+                * (job.n_clips / total_clips),
+                oracle_seconds=job.oracle_seconds if self.with_oracle
+                else None) for job in jobs]
+            results.append(MulticoreSimResult(
+                name=mb.name, n_cores=mb.n_cores, cores=cores))
+        return results

@@ -15,10 +15,13 @@ Use the engine directly when simulating more than one benchmark.
 from __future__ import annotations
 
 from repro.core import standardize as std_mod
-from repro.core.engine import SimResult, SimulationEngine
+from repro.core.engine import (MulticoreSimResult, SimResult,
+                               SimulationEngine)
+from repro.isa import multicore as mc_mod
 from repro.isa import progen, timing
 
-__all__ = ["SimResult", "capsim_simulate"]
+__all__ = ["MulticoreSimResult", "SimResult", "capsim_simulate",
+           "capsim_simulate_multicore"]
 
 
 def capsim_simulate(bench: progen.Benchmark, params, cfg,
@@ -43,3 +46,31 @@ def capsim_simulate(bench: progen.Benchmark, params, cfg,
         with_oracle=with_oracle, timing_params=timing_params,
         rt_cache=rt_cache, precision=precision)
     return engine.simulate(bench)
+
+
+def capsim_simulate_multicore(mbench: mc_mod.MulticoreBenchmark, params,
+                              cfg, vocab: std_mod.Vocab, *,
+                              interval_size: int = 20_000,
+                              warmup: int = 2_000,
+                              max_checkpoints: int = 4, l_min: int = 100,
+                              l_clip: int = 128, l_token: int = 16,
+                              batch_size: int = 256,
+                              use_context: bool = True,
+                              with_oracle: bool = True,
+                              timing_params: timing.TimingParams =
+                              timing.TimingParams(),
+                              rt_cache: bool = True,
+                              precision: "str | None" = None,
+                              quantum: int = mc_mod.DEFAULT_QUANTUM
+                              ) -> MulticoreSimResult:
+    """Single multicore-benchmark convenience wrapper over
+    ``SimulationEngine.run_multicore``: N interleaved per-core functional
+    sims feeding one pooled predictor (shared RT cache, core-id context
+    channel), demuxed per core and summed per benchmark."""
+    engine = SimulationEngine(
+        params, cfg, vocab, interval_size=interval_size, warmup=warmup,
+        max_checkpoints=max_checkpoints, l_min=l_min, l_clip=l_clip,
+        l_token=l_token, batch_size=batch_size, use_context=use_context,
+        with_oracle=with_oracle, timing_params=timing_params,
+        rt_cache=rt_cache, precision=precision)
+    return engine.run_multicore([mbench], quantum=quantum)[0]

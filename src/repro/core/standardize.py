@@ -46,6 +46,11 @@ SPECIAL_TOKENS = (PAD, REP, END, OPCODE, DSTS, DSTS_E, SRCS, SRCS_E,
 
 BYTE_TOKENS = tuple(f"<B{b:02X}>" for b in range(256))
 
+# Multicore context channel name (context.py): the core-id pseudo-register
+# heading one extra 9-token row appended to the context matrix.  Appended
+# AFTER the byte tokens so every pre-existing token id is unchanged.
+CORE = "<CORE>"
+
 
 @dataclasses.dataclass(frozen=True)
 class Vocab:
@@ -69,6 +74,7 @@ def build_vocab() -> Vocab:
     toks.extend(sorted(OPCODES))
     toks.extend(REGS)
     toks.extend(BYTE_TOKENS)
+    toks.append(CORE)                      # keep last: ids above are frozen
     assert len(set(toks)) == len(toks), "duplicate vocabulary tokens"
     return Vocab(token_to_id={t: i for i, t in enumerate(toks)},
                  id_to_token=tuple(toks))

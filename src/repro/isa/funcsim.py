@@ -547,8 +547,8 @@ def build_handlers(cprog: CompiledProgram) -> list:
 def run_compiled(cprog: CompiledProgram, max_instructions: int,
                  state: Optional[CompiledState] = None,
                  snapshot_every: Optional[int] = None,
-                 snapshot_at: Optional[Sequence[int]] = None
-                 ) -> Tuple[Trace, CompiledState]:
+                 snapshot_at: Optional[Sequence[int]] = None,
+                 start_pc: int = 0) -> Tuple[Trace, CompiledState]:
     """Columnar ``run``: execute until program exit or
     ``max_instructions``, returning ``(Trace, state)``.
 
@@ -556,6 +556,12 @@ def run_compiled(cprog: CompiledProgram, max_instructions: int,
     row i of ``trace.snapshots`` is the architectural context BEFORE
     trace position ``i*snapshot_every``; with ``snapshot_at`` (sorted
     trace positions), one row per requested position.
+
+    ``start_pc`` resumes execution mid-program (the multicore quantum
+    scheduler's hook): after any call that retired >= 1 instruction the
+    next pc is ``state.iregs[NIA_SLOT]``, so
+    ``run_compiled(cprog, q, st, start_pc=st.iregs[NIA_SLOT])`` continues
+    exactly where the previous quantum stopped.
     """
     st = state or CompiledState.fresh()
     handlers = build_handlers(cprog)
@@ -570,7 +576,7 @@ def run_compiled(cprog: CompiledProgram, max_instructions: int,
     at_n = len(at) if at is not None else 0
     every = snapshot_every or 0
     next_every = 0 if every else -1
-    pc = 0
+    pc = start_pc
     n = 0
     pcs_append, eas_append = pcs.append, eas.append
     takens_append = takens.append

@@ -1,0 +1,192 @@
+"""Multi-core trace simulation subsystem (front-end half).
+
+The paper motivates CAPSim by the cost of simulating modern multi-core
+CPUs, yet the base repro is single-core everywhere.  This module adds the
+missing workload axis while reusing the whole existing stack *per core*:
+
+``MulticoreBenchmark``
+    N per-core programs (``progen.build_core_program`` multi-threaded
+    variants: sharded stream/chase kernels plus a shared-counter
+    contention kernel) over ONE shared data memory.  Every core's program
+    is structurally identical — only heap-base immediates differ — so the
+    compiled token tables (and therefore the static-instruction RT cache)
+    are shared across cores for free.
+
+``run_multicore``
+    drives ``funcsim.run_compiled`` per core in a deterministic
+    round-robin quantum schedule over the shared memory: core ``order[0]``
+    commits up to ``quantum`` instructions, then ``order[1]``, ... until
+    every core has retired ``max_instructions_per_core`` (or exited).
+    Stores from core i's quantum are architecturally visible to every
+    later quantum — the interleaved commit order the timing oracle
+    (``timing.simulate_multicore``) replays.  Emits one columnar ``Trace``
+    per core plus the ``(core, n)`` chunk schedule.
+
+At N=1 the quantum scheduler degenerates to consecutive resumed
+``run_compiled`` calls on one state, so the emitted trace (pc/ea/taken
+columns AND snapshot rows) is bitwise identical to a single
+``run_compiled`` call — the anchor for the subsystem's bitwise gates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.isa import funcsim, progen
+from repro.isa.compiled import N_IREGS, NIA_SLOT, CompiledProgram, Trace, \
+    compile_program
+from repro.isa.funcsim import CompiledState
+from repro.isa.isa import Instruction
+
+DEFAULT_QUANTUM = 64
+
+MULTICORE_KINDS = progen.MT_KINDS
+MULTICORE_NAMES = tuple(f"mt.{k}" for k in MULTICORE_KINDS)
+
+
+@dataclasses.dataclass
+class MulticoreBenchmark:
+    """N per-core programs over a shared data memory."""
+
+    name: str                              # e.g. "mt.mix"
+    kind: str                              # progen.MT_KINDS member
+    n_cores: int
+    ckp_num: int
+    seed: int
+    programs: List[List[Instruction]]      # one per core
+    _compiled: Optional[List[CompiledProgram]] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def compiled(self) -> List[CompiledProgram]:
+        """Per-core columnar SoA programs, compiled once."""
+        if self._compiled is None:
+            self._compiled = [compile_program(p) for p in self.programs]
+        return self._compiled
+
+    def fresh_states(self) -> List[CompiledState]:
+        """Per-core architectural states sharing ONE memory dict,
+        initialized by ``progen.mt_setup_memory``."""
+        mem: Dict[int, int] = {}
+        progen.mt_setup_memory(mem, self.n_cores, self.seed)
+        return [CompiledState(iregs=[0] * N_IREGS, fregs=[0.0] * 32,
+                              mem=mem) for _ in range(self.n_cores)]
+
+
+def build_multicore_benchmark(name: str, n_cores: int,
+                              ckp_num: int = 4) -> MulticoreBenchmark:
+    """``name`` is "mt.<kind>" (or a bare kind) with kind one of
+    ``progen.MT_KINDS``."""
+    kind = name.split(".", 1)[1] if name.startswith("mt.") else name
+    if n_cores < 1:
+        raise ValueError(f"n_cores must be >= 1, got {n_cores}")
+    seed = zlib.crc32(f"mt.{kind}".encode()) & 0xFFFFFFFF
+    programs = [progen.build_core_program(kind, core, seed)
+                for core in range(n_cores)]
+    return MulticoreBenchmark(name=f"mt.{kind}", kind=kind,
+                              n_cores=n_cores, ckp_num=ckp_num, seed=seed,
+                              programs=programs)
+
+
+def all_multicore_benchmarks(n_cores: int) -> List[MulticoreBenchmark]:
+    return [build_multicore_benchmark(n, n_cores) for n in MULTICORE_NAMES]
+
+
+@dataclasses.dataclass
+class MulticoreTrace:
+    """Per-core columnar traces plus the deterministic commit interleave.
+
+    ``schedule`` lists ``(core, n)`` chunks in global commit order: the
+    first ``n`` uncommitted instructions of ``cores[core]`` committed as
+    one quantum.  ``sum(n for core==c) == len(cores[c])``.
+    """
+
+    cores: List[Trace]
+    schedule: List[Tuple[int, int]]
+
+    @property
+    def n_cores(self) -> int:
+        return len(self.cores)
+
+    def __len__(self) -> int:
+        return sum(len(t) for t in self.cores)
+
+
+def _concat_traces(cprog: CompiledProgram, chunks: List[Trace]) -> Trace:
+    if not chunks:
+        return Trace(program=cprog,
+                     pc=np.zeros(0, np.int32), ea=np.zeros(0, np.uint64),
+                     taken=np.zeros(0, np.int8),
+                     snapshots=np.zeros((0, N_IREGS), np.uint64))
+    if len(chunks) == 1:
+        return chunks[0]
+    return Trace(
+        program=cprog,
+        pc=np.concatenate([t.pc for t in chunks]),
+        ea=np.concatenate([t.ea for t in chunks]),
+        taken=np.concatenate([t.taken for t in chunks]),
+        snapshots=np.concatenate([t.snapshots for t in chunks]))
+
+
+def run_multicore(cprogs: Sequence[CompiledProgram],
+                  max_instructions_per_core: int,
+                  states: Sequence[CompiledState],
+                  snapshot_every: Optional[int] = None,
+                  quantum: int = DEFAULT_QUANTUM,
+                  core_order: Optional[Sequence[int]] = None
+                  ) -> MulticoreTrace:
+    """Round-robin interleaved execution of N cores over shared memory.
+
+    Each scheduling round visits the cores in ``core_order`` (default
+    0..N-1); a visit resumes the core at its saved pc and retires up to
+    ``quantum`` instructions through ``funcsim.run_compiled``.  All cores
+    start at pc 0 (one ``run_multicore`` call is one interval, matching
+    the single-core engine's restart-at-0 checkpoint semantics; state
+    carries across calls through ``states``).
+
+    ``snapshot_every`` snapshots core c's integer file before its OWN
+    trace positions 0, k, 2k, ... — the same per-trace-position contract
+    as ``run_compiled``, computed against the core-local instruction
+    count so the emitted rows line up with the per-core clip slicing.
+    """
+    n_cores = len(cprogs)
+    assert len(states) == n_cores, (len(states), n_cores)
+    order = list(core_order) if core_order is not None \
+        else list(range(n_cores))
+    assert sorted(order) == list(range(n_cores)), \
+        f"core_order must permute 0..{n_cores - 1}, got {order}"
+    assert quantum >= 1, quantum
+    chunks: List[List[Trace]] = [[] for _ in range(n_cores)]
+    schedule: List[Tuple[int, int]] = []
+    done = [0] * n_cores                   # instructions retired per core
+    pc = [0] * n_cores                     # resume pc per core
+    active = [True] * n_cores
+    budget = max_instructions_per_core
+    while True:
+        progressed = False
+        for c in order:
+            if not active[c] or done[c] >= budget:
+                continue
+            q = min(quantum, budget - done[c])
+            at = None
+            if snapshot_every:
+                at = [k for k in range(q)
+                      if (done[c] + k) % snapshot_every == 0]
+            tr, _ = funcsim.run_compiled(
+                cprogs[c], q, states[c],
+                snapshot_at=at or None, start_pc=pc[c])
+            k = len(tr)
+            if k:
+                chunks[c].append(tr)
+                schedule.append((c, k))
+                done[c] += k
+                pc[c] = int(states[c].iregs[NIA_SLOT])
+                progressed = True
+            if k < q:                      # program exited mid-quantum
+                active[c] = False
+        if not progressed:
+            break
+    cores = [_concat_traces(cprogs[c], chunks[c]) for c in range(n_cores)]
+    return MulticoreTrace(cores=cores, schedule=schedule)

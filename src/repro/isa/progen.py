@@ -306,6 +306,117 @@ def build_benchmark(name: str) -> Benchmark:
                      program=program, setup=setup)
 
 
+# --------------------------------------------------------------------------- #
+# Multi-threaded variants (the multicore subsystem's per-core programs)
+# --------------------------------------------------------------------------- #
+#
+# Each core runs the SAME program structure over a shared data memory;
+# only the heap-base immediates differ per core.  Standardization
+# collapses immediates to <CONST> (Fig 5a), so every core's token table
+# is bitwise identical and the static-instruction RT cache is shared
+# perfectly across cores.  Two sharing regimes:
+#
+#   sharded   stream / chase kernels over per-core disjoint slices of the
+#             shared heaps — a core's trace is invariant under core count
+#             and scheduling order (no conflicts by construction),
+#   shared    a read-modify-write counter kernel on ONE address all cores
+#             hammer — the classic contention/lost-update workload whose
+#             loaded values depend on the deterministic interleave.
+
+MT_HEAP_STREAM = 0x10000
+MT_HEAP_CHASE = 0x400000
+MT_SHARD_SLOTS = 2048            # 8-byte slots per core in each sharded heap
+MT_COUNTER_EA = 0xC00000         # the one shared contention counter
+
+MT_KINDS = ("stream", "chase", "counter", "mix")
+
+
+def shared_counter_kernel(ptr: str, scratch: str) -> List[Instruction]:
+    """Non-atomic read-modify-write on one shared address: every core
+    runs ld/addi/std against ``MT_COUNTER_EA`` — cross-core conflict
+    visibility (and lost updates) by design."""
+    return [I("ld", dsts=(scratch,), mem_base=ptr, mem_offset=0),
+            I("addi", dsts=(scratch,), srcs=(scratch,), imm=1),
+            I("std", srcs=(scratch,), mem_base=ptr, mem_offset=0)]
+
+
+def _mt_stream_base(core_id: int) -> int:
+    return MT_HEAP_STREAM + core_id * MT_SHARD_SLOTS * 8
+
+
+def _mt_chase_base(core_id: int) -> int:
+    return MT_HEAP_CHASE + core_id * MT_SHARD_SLOTS * 8
+
+
+def build_core_program(kind: str, core_id: int,
+                       seed: int) -> List[Instruction]:
+    """One core's program for a multi-threaded variant.
+
+    The RNG is seeded by ``seed`` only (not the core id), so all cores
+    share one program shape; ``core_id`` enters solely through the
+    heap-base immediates that shard the stream/chase heaps.
+    """
+    if kind not in MT_KINDS:
+        raise ValueError(f"unknown multicore kind {kind!r} "
+                         f"(one of {MT_KINDS})")
+    rng = np.random.RandomState(seed)
+    program: List[Instruction] = []
+    p_stream, p_chase, p_ctr = "R11", "R12", "R13"
+    _emit(program, [
+        I("addi", dsts=(p_stream,), imm=_mt_stream_base(core_id)),
+        I("addi", dsts=(p_chase,), imm=_mt_chase_base(core_id)),
+        I("addi", dsts=(p_ctr,), imm=MT_COUNTER_EA),
+    ])
+    outer_start = len(program)
+
+    def stream_block():
+        # stride * iters stays inside the core's MT_SHARD_SLOTS*8 shard,
+        # so streams never cross into a neighbour core's slice
+        stride = int(rng.choice([8, 64, 72]))
+        iters = int(rng.randint(32, 96))
+        body = stream_kernel(rng, p_stream, stride,
+                             store=bool(rng.rand() < 0.5))
+        return _loop(body, iters)
+
+    def chase_block():
+        return _loop(chase_kernel(p_chase) * int(rng.randint(1, 4)),
+                     int(rng.randint(32, 96)))
+
+    def counter_block():
+        body = shared_counter_kernel(p_ctr, "R20")
+        body += int_kernel(rng, n=int(rng.randint(3, 7)), div_ratio=0.0)
+        return _loop(body, int(rng.randint(32, 96)))
+
+    blocks = {"stream": [stream_block, stream_block],
+              "chase": [chase_block, chase_block],
+              "counter": [counter_block, counter_block],
+              "mix": [stream_block, chase_block, counter_block]}[kind]
+    for make in blocks:
+        _emit(program, make())
+        # re-anchor the sharded pointers so repeated outer iterations
+        # stay inside this core's slice
+        _emit(program, [
+            I("addi", dsts=(p_stream,), imm=_mt_stream_base(core_id)),
+            I("addi", dsts=(p_chase,), imm=_mt_chase_base(core_id)),
+        ])
+    program.append(I("b", target=outer_start))     # absolute, no rebase
+    return program
+
+
+def mt_setup_memory(mem: Dict[int, int], n_cores: int, seed: int) -> None:
+    """Initialize the SHARED data memory for an n-core run: one private
+    pointer-chase cycle per core (inside its shard) plus the zeroed
+    shared counter.  Core i's region depends only on ``core_id``, never
+    on ``n_cores`` — the sharded-trace invariance the tests pin down."""
+    for core in range(n_cores):
+        base = _mt_chase_base(core)
+        perm = np.random.RandomState(
+            (seed ^ 0x5EED) + core).permutation(MT_SHARD_SLOTS)
+        for i in range(MT_SHARD_SLOTS):
+            mem[(base + 8 * i) >> 3] = base + 8 * int(perm[i])
+    mem[MT_COUNTER_EA >> 3] = 0
+
+
 def all_benchmarks() -> List[Benchmark]:
     return [build_benchmark(n) for n in TABLE_II]
 

@@ -22,7 +22,7 @@ def serve_capsim(args) -> None:
     from repro.core import predictor
     from repro.core import standardize as std_mod
     from repro.core.engine import SimulationEngine
-    from repro.isa import progen
+    from repro.isa import multicore, progen
 
     vocab = std_mod.build_vocab()
     cfg = get_config("capsim").replace(dtype="float32")
@@ -33,16 +33,35 @@ def serve_capsim(args) -> None:
         with_oracle=False, rt_cache=not args.no_rt_cache,
         precision=args.precision)
 
-    names = list(progen.TABLE_II)[: args.n_benchmarks]
-    engine.submit_names(names)
-    t0 = time.time()
-    results = engine.run()
-    wall = time.time() - t0
-    stats = engine.last_stats
-    for r in results:
-        print(f"  {r.name:16s} clips={r.n_clips:5d} "
-              f"predicted={r.predicted_cycles:12.0f} cycles")
-    print(f"served {len(results)} benchmarks "
+    if args.multicore > 0:
+        # multicore serving: (benchmark, core) shards through the same
+        # pooled predictor; per-core results demuxed, per-benchmark summed
+        mbenches = multicore.all_multicore_benchmarks(args.multicore)
+        t0 = time.time()
+        mresults = engine.run_multicore(mbenches)
+        wall = time.time() - t0
+        stats = engine.last_stats
+        for mr in mresults:
+            print(f"  {mr.name:16s} x{mr.n_cores} cores "
+                  f"clips={mr.n_clips:5d} "
+                  f"predicted={mr.predicted_cycles:12.0f} core-cycles")
+            for cr in mr.cores:
+                print(f"    {cr.name:16s} clips={cr.n_clips:5d} "
+                      f"predicted={cr.predicted_cycles:12.0f} cycles")
+        served = (f"{len(mresults)} benchmarks x {args.multicore} cores "
+                  f"({sum(mr.n_cores for mr in mresults)} core shards)")
+    else:
+        names = list(progen.TABLE_II)[: args.n_benchmarks]
+        engine.submit_names(names)
+        t0 = time.time()
+        results = engine.run()
+        wall = time.time() - t0
+        stats = engine.last_stats
+        for r in results:
+            print(f"  {r.name:16s} clips={r.n_clips:5d} "
+                  f"predicted={r.predicted_cycles:12.0f} cycles")
+        served = f"{len(results)} benchmarks"
+    print(f"served {served} "
           f"({stats.n_clips} clips, {stats.n_batches} device batches, "
           f"{stats.n_pad} pad rows) in {wall:.1f}s "
           f"= {stats.n_clips / max(wall, 1e-9):.0f} clips/s")
@@ -99,6 +118,9 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=256)
     ap.add_argument("--interval-size", type=int, default=10_000)
     ap.add_argument("--n-benchmarks", type=int, default=4)
+    ap.add_argument("--multicore", type=int, default=0, metavar="N_CORES",
+                    help="serve the multi-threaded benchmark variants at "
+                         "N cores per benchmark (0 = single-core suite)")
     ap.add_argument("--decode-steps", type=int, default=8)
     ap.add_argument("--no-rt-cache", action="store_true",
                     help="monolithic predict path (re-encode every "
