@@ -50,7 +50,6 @@ def run(emit) -> None:
 
     # 1. oracle sequential scaling
     bench = progen.build_benchmark("505.mcf")
-    st = progen.fresh_state(bench)
     times = []
     for n in (5_000, 10_000, 20_000):
         trace, _, _ = funcsim.run(bench.program, n,
@@ -401,6 +400,71 @@ def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
 
 
 # --------------------------------------------------------------------------- #
+# Dataset-build throughput: per-stage breakdown, single- vs multicore
+# --------------------------------------------------------------------------- #
+
+def _build_report(stats, seconds: float, n_clips: int) -> dict:
+    return {"seconds": seconds,
+            "n_clips": n_clips,
+            "clips_per_s": n_clips / max(seconds, 1e-9),
+            "instructions_per_s":
+                stats.n_instructions / max(seconds, 1e-9),
+            "stages": stats.as_dict()}
+
+
+def run_dataset_build(emit, *, quick: bool = False,
+                      n_cores: int = 2) -> dict:
+    """Dataset-build throughput breakdown (training-side front end).
+
+    Builds the single-core Table-II clip dataset and the N-core mt.*
+    dataset through the shared tokenize/sample/shard pipeline, reporting
+    build seconds per stage (interpret / oracle / slice / sample /
+    replay / tokenize / context) and clips/sec — the perf-trajectory
+    artifact for the training subsystem, alongside the inference-side
+    front-end breakdown.
+    """
+    from repro.data.dataset import BuildConfig, BuildStats, build_dataset
+    from repro.data.multicore_dataset import (MulticoreBuildConfig,
+                                              build_multicore_dataset)
+
+    vocab = build_vocab()
+    kw = dict(interval_size=2_000 if quick else 10_000,
+              warmup=200 if quick else 1_000,
+              max_checkpoints=1 if quick else 2,
+              l_min=50, l_clip=64, l_token=16, threshold=50, coef=0.1)
+    names = list(progen.TABLE_II)[: 4 if quick else 8]
+
+    stats = BuildStats()
+    t0 = time.time()
+    ds = build_dataset(names, BuildConfig(**kw), vocab, stats=stats)
+    single = _build_report(stats, time.time() - t0, len(ds))
+    emit.emit("speed.dataset_build_single",
+              single["seconds"] * 1e6 / max(len(ds), 1),
+              f"{len(names)} benchmarks -> {len(ds)} clips in "
+              f"{single['seconds']:.2f}s = {single['clips_per_s']:.0f} "
+              f"clips/s (oracle {stats.oracle_seconds:.2f}s interpret "
+              f"{stats.interpret_seconds:.2f}s replay "
+              f"{stats.replay_seconds:.2f}s)")
+
+    mc_stats = BuildStats()
+    mc_cfg = MulticoreBuildConfig(n_cores=n_cores, **kw)
+    t0 = time.time()
+    mds = build_multicore_dataset(list(multicore.MULTICORE_NAMES),
+                                  mc_cfg, vocab, stats=mc_stats)
+    mc = _build_report(mc_stats, time.time() - t0, len(mds))
+    mc["n_cores"] = n_cores
+    mc["context_len"] = mds.context_len
+    emit.emit("speed.dataset_build_multicore",
+              mc["seconds"] * 1e6 / max(len(mds), 1),
+              f"{len(multicore.MULTICORE_NAMES)} mt benchmarks x "
+              f"{n_cores} cores -> {len(mds)} clips in "
+              f"{mc['seconds']:.2f}s = {mc['clips_per_s']:.0f} clips/s "
+              f"(multicore oracle {mc_stats.oracle_seconds:.2f}s)")
+    return {"schema_version": BENCH_SCHEMA_VERSION, "quick": quick,
+            "single": single, "multicore": mc}
+
+
+# --------------------------------------------------------------------------- #
 # Multicore: engine (benchmark, core) shards vs sequential per-core path
 # --------------------------------------------------------------------------- #
 
@@ -624,6 +688,10 @@ if __name__ == "__main__":
     ap.add_argument("--core-counts", type=int, nargs="+",
                     default=[1, 2, 4],
                     help="core counts for --multicore")
+    ap.add_argument("--dataset-build", action="store_true",
+                    help="dataset-build throughput breakdown (build "
+                         "seconds per stage, clips/sec) for the single- "
+                         "and multicore training builds")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke scale (small model, short intervals)")
     ap.add_argument("--n-benchmarks", type=int, default=8)
@@ -647,7 +715,11 @@ if __name__ == "__main__":
                          "tracks where host time goes across PRs")
     args = ap.parse_args()
     emitter = CsvEmitter()
-    if args.multicore:
+    if args.dataset_build:
+        res = run_dataset_build(emitter, quick=args.quick)
+        if args.json:
+            Path(args.json).write_text(json.dumps(res, indent=2))
+    elif args.multicore:
         res = run_multicore_bench(emitter, core_counts=args.core_counts,
                                   quick=args.quick)
         if args.json:

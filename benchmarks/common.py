@@ -18,10 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import predictor
 from repro.core.standardize import build_vocab
 from repro.data.dataset import (BuildConfig, ClipDataset, batches,
-                                build_dataset, split_dataset)
+                                build_dataset)
 from repro.isa import progen
 from repro.training.train_loop import (TrainConfig, init_train_state,
                                        make_train_step)

@@ -18,8 +18,8 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 
 # --------------------------------------------------------------------------- #

@@ -5,7 +5,8 @@ layers, MLP head with arithmetic mean (paper §VI-B).  "seq_len" in its shapes
 is the clip length L_clip; batch is clips per step.  Context matrix: Table I
 register file -> (name token + byte-pair value tokens) rows.
 """
-from repro.configs import ArchConfig, CAPSIM_SHAPES
+from repro.configs import CAPSIM_SHAPES, ArchConfig
+from repro.core.context import CONTEXT_LEN
 
 
 def config() -> ArchConfig:
@@ -22,7 +23,9 @@ def config() -> ArchConfig:
                                       # the <CORE> channel token); padded to
                                       # 512 for clean TPU lane tiling
         clip_tokens=16,               # L_token: max standardized length is 14
-        context_tokens=360,           # M = 40 registers x (1 name + 8 value tokens)
+        context_tokens=CONTEXT_LEN,   # M = 40 registers x (1 name + 8 value
+                                      # tokens); multicore layouts widen M
+                                      # at the data level (context.py)
         shape_names=tuple(CAPSIM_SHAPES),
         skipped_shapes=(),
         skip_reason="",

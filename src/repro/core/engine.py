@@ -205,6 +205,7 @@ class BatchedPredictor:
         self._tok: List[np.ndarray] = []      # token tensors OR rt_idx rows
         self._ctx: List[np.ndarray] = []
         self._mask: List[np.ndarray] = []
+        self._ctx_width: Optional[int] = None  # pinned by the first add
         self._buffered = 0
         self._pending: Deque[Tuple[jax.Array, int]] = deque()
         self._retired: List[np.ndarray] = []
@@ -233,6 +234,19 @@ class BatchedPredictor:
 
     def _buffer(self, tok: np.ndarray, ctx: np.ndarray,
                 mask: np.ndarray) -> None:
+        # dispatch-boundary width check: the pool concatenates context
+        # rows across many programs/cores, so a mixed or unknown layout
+        # must fail HERE with the producer on the stack, not as a shape
+        # error inside a later np.concatenate or jit re-trace
+        ctx_mod.validate_context_width(ctx.shape[1], "BatchedPredictor")
+        if self._ctx_width is None:
+            self._ctx_width = ctx.shape[1]
+        elif ctx.shape[1] != self._ctx_width:
+            raise ValueError(
+                f"BatchedPredictor: context width {ctx.shape[1]} differs "
+                f"from the pool's {self._ctx_width} — single-core, "
+                "core-tagged, and peer-channel clips cannot share one "
+                "batch pool")
         self._tok.append(tok)
         self._ctx.append(ctx)
         self._mask.append(mask)

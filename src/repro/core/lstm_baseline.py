@@ -10,7 +10,6 @@ the Fig-10 comparison isolates the *architecture*, not the output scaling.
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

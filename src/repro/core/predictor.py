@@ -34,8 +34,7 @@ from __future__ import annotations
 
 import math
 import time
-from functools import partial
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -273,6 +272,17 @@ def block_forward(params, rt, batch, cfg, use_context: bool = True):
     rt: (B, L_clip, E) instruction vectors (from ``instruction_encoder``
     or an RT-table gather); batch supplies context_tokens (B, M) and
     clip_mask (B, L_clip).  Returns predicted clip times (B,) in cycles.
+
+    The context stream is width-agnostic: M may be the single-core
+    register matrix (``context.CONTEXT_LEN``), the core-tagged multicore
+    layout, or the peer-channel layout in which every other core's
+    ``<CORE>``-tagged register block is appended — the block encoder's
+    self-attention then mixes rows *across cores*, which is how the
+    multicore-trained predictor learns to price LLC/bus interference
+    from the peers' architectural state.  Width validation lives at the
+    dataset-build and engine-dispatch boundaries
+    (``context.validate_context_width``), not here, so ablations and
+    synthetic-spec batches stay unconstrained.
     """
     clip_mask = batch["clip_mask"].astype(jnp.float32)
     rt = shard_logical(rt, "batch", None, None)

@@ -121,6 +121,45 @@ def fixed_bounds(n: int, l_min: int) -> np.ndarray:
     return np.stack([starts, ends], axis=1)
 
 
+def _slice_commit_column(commit_times: np.ndarray, l_min: int,
+                         include_tail: bool
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Shared Algorithm-1 core over one commit-cycle column.
+
+    With ``include_tail`` the residue after the final Algorithm-1 close
+    (the block that never reaches ``l_min`` *and* a commit change point)
+    becomes one extra closing clip, so the bounds partition the whole
+    trace and the clip times telescope to ``commit[-1]`` exactly — the
+    multicore training-target mode.  Without it, the residue is dropped,
+    matching ``slice_trace`` / the paper's Algorithm 1 verbatim.
+    """
+    c = np.asarray(commit_times, np.float64)
+    n = c.shape[0]
+    if n == 0:
+        return np.zeros((0, 2), np.int64), np.zeros(0, np.float64)
+    changes = np.flatnonzero(np.diff(c) != 0.0) + 1
+    if c[0] != 0.0:                            # time_prev starts at 0.0
+        changes = np.concatenate([[0], changes])
+    closes: List[int] = []
+    last = -1
+    for idx in changes.tolist():
+        if idx - last >= l_min:                # block_length == idx - last
+            closes.append(idx)
+            last = idx
+    if include_tail and last < n:
+        closes.append(n)                       # residue clip, < l_min ok
+    k = len(closes)
+    if k == 0:
+        return np.zeros((0, 2), np.int64), np.zeros(0, np.float64)
+    ends = np.asarray(closes, np.int64)
+    starts = np.concatenate([[0], ends[:-1]])
+    # clip j runtime telescopes between the commit times just before the
+    # closes; time_begin is 0.0 before the first close
+    prev_commit = np.where(ends >= 1, c[np.maximum(ends - 1, 0)], 0.0)
+    times = np.diff(np.concatenate([[0.0], prev_commit]))
+    return np.stack([starts, ends], axis=1), times
+
+
 def slice_trace_columnar(commit_times: np.ndarray, l_min: int
                          ) -> Tuple[np.ndarray, np.ndarray]:
     """Columnar Algorithm 1 over a commit-cycle column.
@@ -137,29 +176,30 @@ def slice_trace_columnar(commit_times: np.ndarray, l_min: int
     i.e. at a commit-time *change point*, found here with ``np.diff``;
     the greedy selection walks only the change points, not the trace.
     """
-    c = np.asarray(commit_times, np.float64)
-    n = c.shape[0]
-    if n == 0:
-        return np.zeros((0, 2), np.int64), np.zeros(0, np.float64)
-    changes = np.flatnonzero(np.diff(c) != 0.0) + 1
-    if c[0] != 0.0:                            # time_prev starts at 0.0
-        changes = np.concatenate([[0], changes])
-    closes: List[int] = []
-    last = -1
-    for idx in changes.tolist():
-        if idx - last >= l_min:                # block_length == idx - last
-            closes.append(idx)
-            last = idx
-    k = len(closes)
-    if k == 0:
-        return np.zeros((0, 2), np.int64), np.zeros(0, np.float64)
-    ends = np.asarray(closes, np.int64)
-    starts = np.concatenate([[0], ends[:-1]])
-    # clip j runtime telescopes between the commit times just before the
-    # closes; time_begin is 0.0 before the first close
-    prev_commit = np.where(ends >= 1, c[np.maximum(ends - 1, 0)], 0.0)
-    times = np.diff(np.concatenate([[0.0], prev_commit]))
-    return np.stack([starts, ends], axis=1), times
+    return _slice_commit_column(commit_times, l_min, include_tail=False)
+
+
+def slice_multicore_columnar(commits: Sequence[np.ndarray], l_min: int,
+                             include_tail: bool = False
+                             ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Per-core Algorithm-1 slicing over multicore commit columns.
+
+    ``commits`` is ``timing.simulate_multicore``'s output: one commit-
+    cycle column per core, in the shared-resource interleave.  Each core
+    slices independently — clip boundaries are core-local commit events,
+    so a clip's runtime is that core's commit-cycle delta *including* any
+    LLC/bus stalls other cores inflicted on it — which is exactly the
+    contention signal the multicore training targets must price.
+
+    Returns one ``(bounds, times)`` pair per core (``slice_trace_columnar``
+    semantics, duplicated-lead quirk included).  ``include_tail`` closes
+    the sub-``l_min`` residue block after each core's final Algorithm-1
+    boundary as one extra clip, making the bounds cover the core's whole
+    trace and ``times`` sum to the core's total cycles (``commit[-1]``);
+    the default drops the residue, bitwise matching the single-core
+    training slicer — the ``N=1 == build_dataset`` anchor.
+    """
+    return [_slice_commit_column(c, l_min, include_tail) for c in commits]
 
 
 def clip_lengths(bounds: np.ndarray) -> np.ndarray:

@@ -262,6 +262,53 @@ def encode_fixed_clips(token_table: np.ndarray, pcs: np.ndarray,
     return toks, mask
 
 
+def gather_bounded_clip(rows: np.ndarray, start: int, end: int,
+                        lead_dup: bool, l_clip: int) -> np.ndarray:
+    """Token rows for one Algorithm-1-bounded clip, truncated to
+    ``l_clip``.  ``lead_dup`` reproduces the slicer's quirk: Algorithm 1
+    seeds its block with I[0], so the interval's clip 0 carries a
+    duplicated leading instruction."""
+    body = rows[start:end]
+    if lead_dup:
+        body = np.concatenate([rows[:1], body])
+    return body[:l_clip]
+
+
+def bounded_clip_keys(rows: np.ndarray, bounds: np.ndarray) -> List[bytes]:
+    """Sampler content keys for Algorithm-1-bounded clips: the bytes of
+    each clip's (untruncated) gathered standardized-token rows — exactly
+    what Fig-5 standardization preserves of the instructions.  Shared by
+    the single- and multicore dataset builds so the occurrence sampler
+    sees identical keys through either."""
+    n = rows.shape[0]
+    return [gather_bounded_clip(rows, int(s), int(e), j == 0,
+                                max(n + 1, 1)).tobytes()
+            for j, (s, e) in enumerate(bounds)]
+
+
+def encode_bounded_clips(rows: np.ndarray, bounds: np.ndarray,
+                         keep: Sequence[int], l_clip: int
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Tokenize the kept Algorithm-1 clips of one interval trace.
+
+    ``rows`` is the trace's gathered ``token_table[trace.pc]`` matrix,
+    ``bounds`` the ``(k, 2)`` Algorithm-1 bounds, ``keep`` the sampler's
+    surviving clip indices.  Returns ``((n_keep, l_clip, l_token) int32,
+    (n_keep, l_clip) float32)`` — the bounded-slicing analogue of
+    ``encode_fixed_clips``, shared by the single- and multicore builds.
+    """
+    l_token = rows.shape[1]
+    toks = np.zeros((len(keep), l_clip, l_token), np.int32)
+    mask = np.zeros((len(keep), l_clip), np.float32)
+    for row_i, j in enumerate(keep):
+        body = gather_bounded_clip(rows, int(bounds[j, 0]),
+                                   int(bounds[j, 1]), j == 0, l_clip)
+        k = body.shape[0]
+        toks[row_i, :k] = body
+        mask[row_i, :k] = 1.0
+    return toks, mask
+
+
 def dedupe_token_rows(rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """Content-dedupe standardized token rows: (k, l_token) ->
     ``(uniq (n_unique, l_token) int32, inverse (k,) int32)`` with

@@ -1,3 +1,5 @@
 from repro.data.dataset import (  # noqa: F401
-    ClipDataset, BuildConfig, build_dataset, build_set_datasets, batches,
-    split_dataset)
+    BuildConfig, BuildStats, ClipDataset, batches, build_dataset,
+    build_set_datasets, split_dataset)
+from repro.data.multicore_dataset import (  # noqa: F401
+    MulticoreBuildConfig, build_multicore_dataset)

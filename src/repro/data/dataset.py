@@ -50,15 +50,64 @@ class BuildConfig:
 
 
 @dataclasses.dataclass
+class BuildStats:
+    """Per-stage wall-time breakdown across a dataset build — the
+    dataset-build analogue of the engine's ``FrontendStats``, reported by
+    ``bench_speed --dataset-build`` so build throughput joins the perf
+    trajectory."""
+
+    interpret_seconds: float = 0.0    # functional warmup + interval traces
+    oracle_seconds: float = 0.0       # commit-cycle ground truth
+    slice_seconds: float = 0.0        # Algorithm-1 bounds
+    sample_seconds: float = 0.0       # content keys + occurrence sampler
+    replay_seconds: float = 0.0       # snapshot replay pass
+    tokenize_seconds: float = 0.0     # token-row gather + clip packing
+    context_seconds: float = 0.0      # snapshot byte decomposition
+    n_instructions: int = 0
+    n_sliced: int = 0                 # clips before sampling
+    n_clips: int = 0                  # clips kept in the dataset
+
+    @property
+    def build_seconds(self) -> float:
+        return (self.interpret_seconds + self.oracle_seconds
+                + self.slice_seconds + self.sample_seconds
+                + self.replay_seconds + self.tokenize_seconds
+                + self.context_seconds)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)} | {
+                    "build_seconds": self.build_seconds}
+
+
+@dataclasses.dataclass
 class ClipDataset:
     clip_tokens: np.ndarray           # (N, l_clip, l_token) int32
-    context_tokens: np.ndarray        # (N, 360) int32
+    # (N, M) int32 — M is ctx_mod.context_len(n_cores, peer_channels):
+    # CONTEXT_LEN single-core, MULTICORE_CONTEXT_LEN core-tagged,
+    # n_cores such blocks with peer channels mixed in
+    context_tokens: np.ndarray
     clip_mask: np.ndarray             # (N, l_clip) float32
     time: np.ndarray                  # (N,) float32
     bench_names: List[str]            # provenance per clip
 
     def __len__(self) -> int:
         return self.clip_tokens.shape[0]
+
+    @property
+    def context_len(self) -> int:
+        return self.context_tokens.shape[1]
+
+    def validate(self) -> "ClipDataset":
+        """Dataset-build boundary check: consistent clip counts and a
+        recognized context layout (no stale hard-coded widths)."""
+        n = len(self)
+        assert self.context_tokens.shape[0] == n, self.context_tokens.shape
+        assert self.clip_mask.shape[0] == n, self.clip_mask.shape
+        assert self.time.shape[0] == n, self.time.shape
+        assert len(self.bench_names) == n, (len(self.bench_names), n)
+        ctx_mod.validate_context_width(self.context_len, "ClipDataset")
+        return self
 
     def select(self, idx: np.ndarray) -> "ClipDataset":
         return ClipDataset(self.clip_tokens[idx], self.context_tokens[idx],
@@ -88,91 +137,128 @@ class ClipDataset:
                            [str(s) for s in z["bench_names"]])
 
 
-def _gather_clip(rows: np.ndarray, start: int, end: int, lead_dup: bool,
-                 l_clip: int) -> Tuple[np.ndarray, int]:
-    """Token rows for one columnar clip (clip 0 carries Algorithm 1's
-    duplicated leading instruction), truncated to ``l_clip``."""
-    body = rows[start:end]
-    if lead_dup:
-        body = np.concatenate([rows[:1], body])
-    k = min(body.shape[0], l_clip)
-    return body[:k], k
+def empty_dataset(bcfg: BuildConfig,
+                  context_len: Optional[int] = None) -> ClipDataset:
+    """Zero-clip dataset with the build's tensor shapes (the degenerate
+    part both builders emit for a clip-less benchmark)."""
+    m = ctx_mod.CONTEXT_LEN if context_len is None else context_len
+    return ClipDataset(
+        np.zeros((0, bcfg.l_clip, bcfg.l_token), np.int32),
+        np.zeros((0, m), np.int32),
+        np.zeros((0, bcfg.l_clip), np.float32),
+        np.zeros((0,), np.float32), [])
+
+
+def sample_interval_clips(rows: np.ndarray, bounds: np.ndarray,
+                          bcfg: BuildConfig,
+                          stats: BuildStats) -> List[int]:
+    """Step 4 (shared by the single- and multicore builds): occurrence-
+    sample one interval's Algorithm-1 clips on their standardized-token
+    content keys; ``bcfg.sample=False`` keeps everything."""
+    t0 = time.time()
+    if bcfg.sample:
+        # content key = the clip's standardized-token bytes: exactly
+        # what Fig-5 standardization preserves of the instructions
+        keys = std_mod.bounded_clip_keys(rows, bounds)
+        keep, _ = sampler_mod.sample_indices(keys, bcfg.threshold,
+                                             bcfg.coef)
+    else:
+        keep = list(range(len(bounds)))
+    stats.sample_seconds += time.time() - t0
+    return keep
+
+
+def pack_interval_clips(rows: np.ndarray, bounds: np.ndarray,
+                        times: np.ndarray, keep: Sequence[int],
+                        ctx: np.ndarray, bcfg: BuildConfig,
+                        stats: BuildStats
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray]:
+    """Step 6 (shared): tokenize the kept clips of one interval into the
+    fixed-shape dataset tensors; ``ctx`` is the already-built context
+    matrix for the same kept clips (step 5)."""
+    assert ctx.shape[0] == len(keep), (ctx.shape, len(keep))
+    t0 = time.time()
+    toks, mask = std_mod.encode_bounded_clips(rows, bounds, keep,
+                                              bcfg.l_clip)
+    t = np.asarray([float(times[j]) for j in keep], np.float32)
+    stats.tokenize_seconds += time.time() - t0
+    stats.n_clips += len(keep)
+    return toks, ctx, mask, t
 
 
 def build_bench_clips(bench: progen.Benchmark, bcfg: BuildConfig,
-                      vocab: std_mod.Vocab) -> ClipDataset:
+                      vocab: std_mod.Vocab,
+                      stats: Optional[BuildStats] = None) -> ClipDataset:
     """Steps 1-6 for one benchmark, entirely on the columnar IR."""
+    stats = stats if stats is not None else BuildStats()
     cprog = bench.compiled()
     token_table = cprog.token_table(vocab, bcfg.l_token)
     st = progen.fresh_compiled_state(bench)
+    t0 = time.time()
     _, st = funcsim.run_compiled(cprog, bcfg.warmup, st)
+    stats.interpret_seconds += time.time() - t0
 
-    tok_list, ctx_list, mask_list, time_list = [], [], [], []
+    parts: List[Tuple[np.ndarray, ...]] = []
     n_ckp = min(bench.ckp_num, bcfg.max_checkpoints)
     for _ in range(n_ckp):
         st_ckp = st.clone()                             # replay anchor
+        t0 = time.time()
         trace, st = funcsim.run_compiled(cprog, bcfg.interval_size, st)
+        stats.interpret_seconds += time.time() - t0
         if not len(trace):
             break
+        stats.n_instructions += len(trace)
+        t0 = time.time()
         commits = timing.simulate_columnar(trace, bcfg.timing_params)
+        stats.oracle_seconds += time.time() - t0
+        t0 = time.time()
         bounds, times = slicer_mod.slice_trace_columnar(commits, bcfg.l_min)
+        stats.slice_seconds += time.time() - t0
         if not len(bounds):
             continue
+        stats.n_sliced += len(bounds)
         rows = token_table[trace.pc]
-        if bcfg.sample:
-            # content key = the clip's standardized-token bytes: exactly
-            # what Fig-5 standardization preserves of the instructions
-            keys = [_gather_clip(rows, int(s), int(e), j == 0,
-                                 10 ** 9)[0].tobytes()
-                    for j, (s, e) in enumerate(bounds)]
-            keep, _ = sampler_mod.sample_indices(keys, bcfg.threshold,
-                                                 bcfg.coef)
-        else:
-            keep = list(range(len(bounds)))
+        keep = sample_interval_clips(rows, bounds, bcfg, stats)
         if not keep:
             continue
         starts = bounds[keep, 0].tolist()
+        t0 = time.time()
         replay, _ = funcsim.run_compiled(cprog, bcfg.interval_size, st_ckp,
                                          snapshot_at=starts)
+        stats.replay_seconds += time.time() - t0
         snaps = replay.snapshots
         assert snaps.shape[0] == len(keep), (snaps.shape, len(keep))
-        ctx_list.append(ctx_mod.context_tokens_from_matrix(snaps, vocab))
-        for row_i, j in enumerate(keep):
-            body, k = _gather_clip(rows, int(bounds[j, 0]),
-                                   int(bounds[j, 1]), j == 0, bcfg.l_clip)
-            toks = np.zeros((bcfg.l_clip, bcfg.l_token), np.int32)
-            toks[:k] = body
-            mask = np.zeros(bcfg.l_clip, np.float32)
-            mask[:k] = 1.0
-            tok_list.append(toks)
-            mask_list.append(mask)
-            time_list.append(float(times[j]))
+        t0 = time.time()
+        ctx = ctx_mod.context_tokens_from_matrix(snaps, vocab)
+        stats.context_seconds += time.time() - t0
+        parts.append(pack_interval_clips(rows, bounds, times, keep, ctx,
+                                         bcfg, stats))
 
-    n = len(tok_list)
-    if n == 0:
-        return ClipDataset(
-            np.zeros((0, bcfg.l_clip, bcfg.l_token), np.int32),
-            np.zeros((0, ctx_mod.CONTEXT_LEN), np.int32),
-            np.zeros((0, bcfg.l_clip), np.float32),
-            np.zeros((0,), np.float32), [])
-    return ClipDataset(np.stack(tok_list), np.concatenate(ctx_list),
-                       np.stack(mask_list),
-                       np.asarray(time_list, np.float32),
+    if not parts:
+        return empty_dataset(bcfg)
+    n = sum(p[0].shape[0] for p in parts)
+    return ClipDataset(np.concatenate([p[0] for p in parts]),
+                       np.concatenate([p[1] for p in parts]),
+                       np.concatenate([p[2] for p in parts]),
+                       np.concatenate([p[3] for p in parts]),
                        [bench.name] * n)
 
 
 def build_dataset(bench_names: Sequence[str], bcfg: BuildConfig,
                   vocab: Optional[std_mod.Vocab] = None,
-                  verbose: bool = False) -> ClipDataset:
+                  verbose: bool = False,
+                  stats: Optional[BuildStats] = None) -> ClipDataset:
     vocab = vocab or std_mod.build_vocab()
     parts = []
     for name in bench_names:
         t0 = time.time()
-        part = build_bench_clips(progen.build_benchmark(name), bcfg, vocab)
+        part = build_bench_clips(progen.build_benchmark(name), bcfg, vocab,
+                                 stats=stats)
         parts.append(part)
         if verbose:
             print(f"  {name}: {len(part)} clips ({time.time()-t0:.1f}s)")
-    return ClipDataset.concat(parts)
+    return ClipDataset.concat(parts).validate()
 
 
 def build_set_datasets(bcfg: BuildConfig,

@@ -1,7 +1,7 @@
 from repro.distributed.sharding import (  # noqa: F401
-    LOGICAL_RULES_TRAIN,
     LOGICAL_RULES_DECODE,
     LOGICAL_RULES_DECODE_LONG,
+    LOGICAL_RULES_TRAIN,
     axis_rules,
     current_mesh,
     current_rules,

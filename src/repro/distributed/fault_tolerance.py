@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List
 
 import jax
 import numpy as np

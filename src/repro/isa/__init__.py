@@ -1,6 +1,6 @@
-from repro.isa.compiled import (CompileError, CompiledProgram,  # noqa: F401
+from repro.isa.compiled import (CompiledProgram, CompileError,  # noqa: F401
                                 Trace, compile_program)
-from repro.isa.isa import Instruction, OPCODES, REGS  # noqa: F401
+from repro.isa.isa import OPCODES, REGS, Instruction  # noqa: F401
 from repro.isa.multicore import (MulticoreBenchmark,  # noqa: F401
                                  MulticoreTrace, build_multicore_benchmark,
                                  run_multicore)

@@ -29,13 +29,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.isa.compiled import (CIA_SLOT, CR_SLOT, CTR_SLOT, CompileError,
-                                CompiledProgram, FREG_SLOT, IREG_SLOT,
-                                LR_SLOT, N_IREGS, NIA_SLOT, Trace,
-                                compile_program)
-from repro.isa.isa import CONTEXT_REGS, Instruction
-
 import numpy as np
+
+from repro.isa.compiled import (CIA_SLOT, CR_SLOT, CTR_SLOT, LR_SLOT,
+                                N_IREGS, NIA_SLOT, CompiledProgram,
+                                CompileError, Trace, compile_program)
+from repro.isa.isa import CONTEXT_REGS, Instruction
 
 MASK64 = (1 << 64) - 1
 

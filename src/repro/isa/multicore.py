@@ -38,7 +38,7 @@ import numpy as np
 from repro.isa import funcsim, progen
 from repro.isa.compiled import N_IREGS, NIA_SLOT, CompiledProgram, Trace, \
     compile_program
-from repro.isa.funcsim import CompiledState
+from repro.isa.funcsim import CompiledState, MachineState
 from repro.isa.isa import Instruction
 
 DEFAULT_QUANTUM = 64
@@ -94,6 +94,34 @@ def all_multicore_benchmarks(n_cores: int) -> List[MulticoreBenchmark]:
     return [build_multicore_benchmark(n, n_cores) for n in MULTICORE_NAMES]
 
 
+def single_core_benchmark(name: str, ckp_num: int = 4) -> progen.Benchmark:
+    """An mt.* benchmark as a plain single-core ``progen.Benchmark``:
+    core 0's program over the 1-core shared-memory setup.  This is the
+    bridge to the single-core dataset pipeline — at N=1 the multicore
+    builders must be bitwise identical to ``build_dataset`` over this."""
+    mb = build_multicore_benchmark(name, 1, ckp_num=ckp_num)
+
+    def setup(st: MachineState) -> None:
+        progen.mt_setup_memory(st.mem, 1, mb.seed)
+
+    return progen.Benchmark(name=mb.name, tags="mt", set_no=0,
+                            ckp_num=ckp_num, program=mb.programs[0],
+                            setup=setup)
+
+
+def clone_states(states: Sequence[CompiledState]) -> List[CompiledState]:
+    """Replay anchor for a multicore checkpoint: independent copies of
+    the per-core register files sharing ONE copy of the shared memory
+    (``CompiledState.clone`` would give each core a private memory and
+    break cross-core store visibility on replay)."""
+    mem = dict(states[0].mem)
+    for st in states:
+        assert st.mem is states[0].mem, \
+            "multicore states must share one memory dict"
+    return [CompiledState(iregs=list(st.iregs), fregs=list(st.fregs),
+                          mem=mem) for st in states]
+
+
 @dataclasses.dataclass
 class MulticoreTrace:
     """Per-core columnar traces plus the deterministic commit interleave.
@@ -101,10 +129,19 @@ class MulticoreTrace:
     ``schedule`` lists ``(core, n)`` chunks in global commit order: the
     first ``n`` uncommitted instructions of ``cores[core]`` committed as
     one quantum.  ``sum(n for core==c) == len(cores[c])``.
+
+    ``peer_snapshots`` (``run_multicore(..., peer_snapshots=True)``) has
+    one ``(n_snaps_c, n_cores, N_IREGS) uint64`` matrix per core: for
+    each of core c's snapshot positions, EVERY core's integer file as of
+    the enclosing quantum's start.  Within a quantum only the running
+    core mutates, so peer rows are exact at any position inside it; the
+    own-core row is the stale quantum-start state — consumers must take
+    core c's precise row from ``cores[c].snapshots``.
     """
 
     cores: List[Trace]
     schedule: List[Tuple[int, int]]
+    peer_snapshots: Optional[List[np.ndarray]] = None
 
     @property
     def n_cores(self) -> int:
@@ -135,7 +172,9 @@ def run_multicore(cprogs: Sequence[CompiledProgram],
                   states: Sequence[CompiledState],
                   snapshot_every: Optional[int] = None,
                   quantum: int = DEFAULT_QUANTUM,
-                  core_order: Optional[Sequence[int]] = None
+                  core_order: Optional[Sequence[int]] = None,
+                  snapshot_at: Optional[Sequence[Sequence[int]]] = None,
+                  peer_snapshots: bool = False
                   ) -> MulticoreTrace:
     """Round-robin interleaved execution of N cores over shared memory.
 
@@ -150,6 +189,11 @@ def run_multicore(cprogs: Sequence[CompiledProgram],
     trace positions 0, k, 2k, ... — the same per-trace-position contract
     as ``run_compiled``, computed against the core-local instruction
     count so the emitted rows line up with the per-core clip slicing.
+    ``snapshot_at`` instead takes one sorted position list PER CORE (the
+    training replay pass: snapshots exactly at the surviving clip
+    starts); the two are mutually exclusive.  ``peer_snapshots``
+    additionally captures the whole machine's integer files at each
+    snapshotting quantum's start (see ``MulticoreTrace``).
     """
     n_cores = len(cprogs)
     assert len(states) == n_cores, (len(states), n_cores)
@@ -158,8 +202,17 @@ def run_multicore(cprogs: Sequence[CompiledProgram],
     assert sorted(order) == list(range(n_cores)), \
         f"core_order must permute 0..{n_cores - 1}, got {order}"
     assert quantum >= 1, quantum
+    assert not (snapshot_every and snapshot_at is not None), \
+        "snapshot_every and snapshot_at are mutually exclusive"
+    at_lists: Optional[List[List[int]]] = None
+    at_ptr = [0] * n_cores
+    if snapshot_at is not None:
+        assert len(snapshot_at) == n_cores, (len(snapshot_at), n_cores)
+        at_lists = [sorted(int(k) for k in pos) for pos in snapshot_at]
     chunks: List[List[Trace]] = [[] for _ in range(n_cores)]
     schedule: List[Tuple[int, int]] = []
+    peers: Optional[List[List[np.ndarray]]] = \
+        [[] for _ in range(n_cores)] if peer_snapshots else None
     done = [0] * n_cores                   # instructions retired per core
     pc = [0] * n_cores                     # resume pc per core
     active = [True] * n_cores
@@ -174,9 +227,30 @@ def run_multicore(cprogs: Sequence[CompiledProgram],
             if snapshot_every:
                 at = [k for k in range(q)
                       if (done[c] + k) % snapshot_every == 0]
+            elif at_lists is not None:
+                lo, p = done[c], at_ptr[c]
+                mine = at_lists[c]
+                at = []
+                while p < len(mine) and mine[p] < lo + q:
+                    assert mine[p] >= lo, \
+                        f"snapshot_at position {mine[p]} for core {c} " \
+                        "already passed (positions must be >= 0, sorted)"
+                    at.append(mine[p] - lo)
+                    p += 1
+                at_ptr[c] = p
+            mat = None
+            if peers is not None and at:
+                # other cores cannot commit inside this quantum, so one
+                # quantum-start capture is exact for every peer row of
+                # every snapshot position the quantum serves
+                mat = np.array([st.iregs for st in states], np.uint64)
             tr, _ = funcsim.run_compiled(
                 cprogs[c], q, states[c],
                 snapshot_at=at or None, start_pc=pc[c])
+            if mat is not None:
+                # one peer matrix per snapshot row actually emitted (a
+                # mid-quantum exit can serve fewer positions than asked)
+                peers[c].extend([mat] * tr.snapshots.shape[0])
             k = len(tr)
             if k:
                 chunks[c].append(tr)
@@ -189,4 +263,14 @@ def run_multicore(cprogs: Sequence[CompiledProgram],
         if not progressed:
             break
     cores = [_concat_traces(cprogs[c], chunks[c]) for c in range(n_cores)]
-    return MulticoreTrace(cores=cores, schedule=schedule)
+    peer_out = None
+    if peers is not None:
+        peer_out = [
+            np.stack(peers[c]) if peers[c]
+            else np.zeros((0, n_cores, N_IREGS), np.uint64)
+            for c in range(n_cores)]
+        for c in range(n_cores):
+            assert peer_out[c].shape[0] == cores[c].snapshots.shape[0], \
+                (c, peer_out[c].shape, cores[c].snapshots.shape)
+    return MulticoreTrace(cores=cores, schedule=schedule,
+                          peer_snapshots=peer_out)

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 

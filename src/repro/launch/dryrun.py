@@ -20,23 +20,22 @@ The dry-run never allocates an array: inputs are ShapeDtypeStructs.
 """
 import argparse
 import json
-import math
 import time
 import traceback
 from pathlib import Path
 
 import jax
 
-from repro.configs import ArchConfig, ShapeConfig, ARCH_NAMES, get_config
+from repro.configs import ARCH_NAMES, ArchConfig, ShapeConfig, get_config
 from repro.distributed.sharding import (
-    LOGICAL_RULES_DECODE, LOGICAL_RULES_DECODE_LONG, LOGICAL_RULES_TRAIN,
-    LOGICAL_RULES_PREFILL_SP, LOGICAL_RULES_TRAIN_FSDP,
-    LOGICAL_RULES_TRAIN_ZERO3, use_mesh_and_rules)
+    LOGICAL_RULES_DECODE, LOGICAL_RULES_DECODE_LONG,
+    LOGICAL_RULES_PREFILL_SP, LOGICAL_RULES_TRAIN,
+    LOGICAL_RULES_TRAIN_FSDP, LOGICAL_RULES_TRAIN_ZERO3,
+    use_mesh_and_rules)
 from repro.launch import roofline as rf
 from repro.launch.mesh import make_production_mesh, mesh_axis_sizes, num_chips
 from repro.launch.specs import batch_shardings, input_specs
 from repro.models import transformer as tfm
-from repro.models.layers import shardings_from_specs
 from repro.training.train_loop import (
     TrainConfig, abstract_train_state, make_train_step)
 

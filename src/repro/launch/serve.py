@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs import ShapeConfig, get_config, get_smoke_config
 from repro.distributed.sharding import (
-    LOGICAL_RULES_DECODE, LOGICAL_RULES_PREDICTOR, use_mesh_and_rules)
+    LOGICAL_RULES_DECODE, use_mesh_and_rules)
 from repro.launch.mesh import make_test_mesh
 
 

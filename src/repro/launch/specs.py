@@ -4,15 +4,14 @@ and examples draw the concrete version.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
 from repro.configs import ArchConfig, ShapeConfig
 from repro.distributed.sharding import axis_rules
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 def _token_len(cfg: ArchConfig, seq_len: int) -> int:

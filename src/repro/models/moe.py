@@ -30,7 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import (axis_rules, compat_shard_map,
                                         current_mesh)
-from repro.models.layers import ParamSpec, dense_spec
+from repro.models.layers import ParamSpec
 
 
 def moe_specs(cfg) -> dict:

@@ -17,7 +17,7 @@ ShapeDtypeStructs without ever allocating 1T-parameter models.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -317,7 +317,6 @@ def loss_fn(params, batch, cfg) -> Tuple[jax.Array, dict]:
     # Fused one-hot label pick: take_along_axis would gather over the
     # vocab-sharded logits (forcing an all-gather of the full logits);
     # compare+select+reduce stays local per vocab shard and fuses.
-    V = logits.shape[-1]
     iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
                                     logits.ndim - 1)
     picked = jnp.where(iota == labels[..., None],

@@ -31,6 +31,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.core import context as ctx_mod
 from repro.core import predictor as pred_mod
 from repro.core.engine import BatchedPredictor
 from repro.core.rt_cache import RTCache, RTCacheStats
@@ -40,7 +41,9 @@ from repro.core.rt_cache import RTCache, RTCacheStats
 class Request:
     request_id: int
     clip_tokens: np.ndarray           # (n, l_clip, l_token) int32
-    context_tokens: np.ndarray        # (n, 360) int32
+    # (n, M) int32 — M is one of the context.context_len layouts
+    # (single-core / core-tagged / peer-channel)
+    context_tokens: np.ndarray
     clip_mask: np.ndarray             # (n, l_clip) float32
 
 
@@ -72,6 +75,8 @@ class PredictorEngine:
         return self._cache.stats if self._cache is not None else None
 
     def submit(self, req: Request) -> None:
+        ctx_mod.validate_context_width(req.context_tokens.shape[1],
+                                       f"Request {req.request_id}")
         self._pending.append(req)
 
     def flush(self) -> List[Result]:

@@ -1,2 +1,2 @@
 from repro.training.optimizer import get_optimizer  # noqa: F401
-from repro.training.train_loop import make_train_step, TrainConfig  # noqa: F401
+from repro.training.train_loop import TrainConfig, make_train_step  # noqa: F401

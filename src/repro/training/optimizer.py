@@ -14,7 +14,7 @@ sharding of params automatically ZeRO-shards the states.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

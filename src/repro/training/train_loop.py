@@ -12,8 +12,7 @@ HLO stays small and activation memory is bounded by one microbatch.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core import context as ctx_mod
 from repro.core import predictor
 from repro.core.engine import (BatchedPredictor, SimulationEngine,
                                bucket_sizes, predict_fn)
@@ -75,7 +76,8 @@ def test_batched_predictor_order_and_remainder(params):
     rng = np.random.RandomState(7)
     n = 23                                       # 16 + bucketed remainder
     tok = rng.randint(1, VOCAB.size, (n, 32, 16)).astype(np.int32)
-    ctx = rng.randint(1, VOCAB.size, (n, 360)).astype(np.int32)
+    ctx = rng.randint(1, VOCAB.size,
+                      (n, ctx_mod.CONTEXT_LEN)).astype(np.int32)
     mask = np.ones((n, 32), np.float32)
 
     whole = BatchedPredictor(params, SMALL_CFG, batch_size=16)

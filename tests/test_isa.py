@@ -1,9 +1,7 @@
 """Functional simulator + O3 timing oracle + benchmark generator."""
-import numpy as np
 import pytest
 
 from repro.isa import funcsim, progen, timing
-from repro.isa.funcsim import MachineState
 from repro.isa.isa import Instruction
 
 I = Instruction

@@ -1,7 +1,7 @@
 """Per-kernel correctness sweeps: Pallas (interpret mode) vs pure-jnp refs."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.kernels.flash_attention.ops import flash_attention

@@ -1,0 +1,251 @@
+"""Multicore training subsystem invariants.
+
+The tentpole contracts:
+
+  * ``slice_multicore_columnar`` is per-core Algorithm 1: the default
+    mode is bitwise ``slice_trace_columnar`` per core; tail-inclusive
+    mode covers each core's whole trace, keeps every non-tail clip at
+    ``l_min`` or longer, and its clip times sum to the oracle's per-core
+    total cycles;
+  * the N=1 multicore build is bitwise identical to the single-core
+    ``build_dataset`` pipeline over the same program (tensors AND
+    provenance) — the anchor that keeps the 360-token path unchanged;
+  * builds are deterministic, and the context layouts (core-tagged /
+    peer-channel) derive from ``context.context_len`` with the
+    single-core prefix bitwise intact;
+  * the replay scheduler's ``snapshot_at``/``peer_snapshots`` honor the
+    per-trace-position contract.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # container without the test extras
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import context as ctx_mod
+from repro.core import slicer as slicer_mod
+from repro.core.standardize import build_vocab
+from repro.data.dataset import BuildConfig, BuildStats, build_bench_clips
+from repro.data.multicore_dataset import (MulticoreBuildConfig,
+                                          build_multicore_bench_clips,
+                                          build_multicore_dataset)
+from repro.isa import multicore, timing
+
+VOCAB = build_vocab()
+KW = dict(interval_size=1_200, warmup=150, max_checkpoints=2, l_min=32,
+          l_clip=40, l_token=16, threshold=20, coef=0.2)
+
+
+def _commit_column(seed: int, n: int) -> np.ndarray:
+    """Random monotone commit-cycle column (width-8 commit groups)."""
+    rng = np.random.RandomState(seed)
+    return np.cumsum(rng.randint(0, 3, size=n)) + rng.randint(0, 5)
+
+
+# --------------------------------------------------------------------------- #
+# slice_multicore_columnar
+# --------------------------------------------------------------------------- #
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(0, 400), st.integers(4, 64))
+def test_slice_default_matches_single_core_slicer(seed, n, l_min):
+    cols = [_commit_column(seed, n), _commit_column(seed + 1, n // 2)]
+    got = slicer_mod.slice_multicore_columnar(cols, l_min)
+    for c, (bounds, times) in enumerate(got):
+        ref_b, ref_t = slicer_mod.slice_trace_columnar(cols[c], l_min)
+        np.testing.assert_array_equal(bounds, ref_b)
+        np.testing.assert_array_equal(times, ref_t)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 400), st.integers(4, 64))
+def test_slice_tail_mode_covers_and_sums(seed, n, l_min):
+    """Tail-inclusive slicing: bounds partition [0, n), all non-tail
+    clips respect l_min, and clip times telescope to commit[-1] — the
+    oracle's total cycles for the core."""
+    cols = [_commit_column(seed, n)]
+    (bounds, times), = slicer_mod.slice_multicore_columnar(
+        cols, l_min, include_tail=True)
+    assert bounds.shape[0] >= 1
+    assert bounds[0, 0] == 0 and bounds[-1, 1] == n
+    np.testing.assert_array_equal(bounds[1:, 0], bounds[:-1, 1])
+    lens = slicer_mod.clip_lengths(bounds)     # clip 0 counts its dup lead
+    assert (lens[:-1] >= l_min).all()          # only the tail may be short
+    assert times.sum() == pytest.approx(float(cols[0][-1]))
+    # the tail clip is the default slicing plus at most one extra close
+    ref_b, _ = slicer_mod.slice_trace_columnar(cols[0], l_min)
+    assert bounds.shape[0] - ref_b.shape[0] in (0, 1)
+
+
+def test_slice_tail_sums_to_multicore_oracle_totals():
+    """On a real contended run: per-core clip time deltas sum to the
+    shared-resource oracle's per-core total cycles."""
+    mb = multicore.build_multicore_benchmark("mt.mix", 2)
+    mt = multicore.run_multicore(mb.compiled(), 1_500, mb.fresh_states())
+    commits = timing.simulate_multicore(mt.cores, mt.schedule)
+    totals = timing.total_cycles_multicore(mt.cores, mt.schedule)
+    sliced = slicer_mod.slice_multicore_columnar(commits, 32,
+                                                 include_tail=True)
+    for c, (bounds, times) in enumerate(sliced):
+        assert bounds[-1, 1] == len(mt.cores[c])
+        assert times.sum() == pytest.approx(float(totals[c]))
+
+
+def test_slice_empty_columns():
+    out = slicer_mod.slice_multicore_columnar(
+        [np.zeros(0), np.zeros(0)], 8, include_tail=True)
+    for bounds, times in out:
+        assert bounds.shape == (0, 2) and times.shape == (0,)
+
+
+# --------------------------------------------------------------------------- #
+# N=1 bitwise anchor + determinism
+# --------------------------------------------------------------------------- #
+
+def _datasets_equal(a, b) -> bool:
+    return (np.array_equal(a.clip_tokens, b.clip_tokens)
+            and np.array_equal(a.context_tokens, b.context_tokens)
+            and np.array_equal(a.clip_mask, b.clip_mask)
+            and np.array_equal(a.time, b.time)
+            and a.bench_names == b.bench_names)
+
+
+def test_n1_build_bitwise_identical_to_single_core():
+    """peer_channels off + N=1: the multicore build must reproduce the
+    existing single-core ``build_dataset`` pipeline bit for bit — same
+    Algorithm-1 bounds, same sampler keys, same 360-token contexts."""
+    for kind in ("mt.stream", "mt.counter"):
+        mb = multicore.build_multicore_benchmark(kind, 1)
+        got = build_multicore_bench_clips(
+            mb, MulticoreBuildConfig(n_cores=1, **KW), VOCAB)
+        ref = build_bench_clips(multicore.single_core_benchmark(kind),
+                                BuildConfig(**KW), VOCAB)
+        assert len(got) > 0, kind
+        assert got.context_len == ctx_mod.CONTEXT_LEN
+        assert _datasets_equal(got, ref), kind
+    # peer_channels at N=1 is a no-op (no peers), not a width change
+    peer = build_multicore_dataset(
+        ["mt.stream"],
+        MulticoreBuildConfig(n_cores=1, peer_channels=True, **KW), VOCAB)
+    assert peer.context_len == ctx_mod.CONTEXT_LEN
+
+
+def test_build_deterministic_across_runs():
+    bcfg = MulticoreBuildConfig(n_cores=2, **KW)
+    a = build_multicore_dataset(["mt.counter"], bcfg, VOCAB)
+    b = build_multicore_dataset(["mt.counter"], bcfg, VOCAB)
+    assert len(a) > 0
+    assert _datasets_equal(a, b)
+
+
+def test_build_stats_accounting():
+    stats = BuildStats()
+    ds = build_multicore_dataset(["mt.stream"],
+                                 MulticoreBuildConfig(n_cores=2, **KW),
+                                 VOCAB, stats=stats)
+    assert stats.n_clips == len(ds)
+    assert stats.n_sliced >= stats.n_clips
+    assert stats.n_instructions == 2 * KW["interval_size"] \
+        * KW["max_checkpoints"]
+    assert stats.build_seconds > 0
+
+
+# --------------------------------------------------------------------------- #
+# Context layouts
+# --------------------------------------------------------------------------- #
+
+def test_context_len_derivation_and_validation():
+    assert ctx_mod.context_len() == ctx_mod.CONTEXT_LEN
+    assert ctx_mod.context_len(4) == ctx_mod.MULTICORE_CONTEXT_LEN
+    assert ctx_mod.context_len(3, peer_channels=True) \
+        == 3 * ctx_mod.MULTICORE_CONTEXT_LEN
+    # no peers to mix at N=1: the flag must not change the layout
+    assert ctx_mod.context_len(1, peer_channels=True) \
+        == ctx_mod.CONTEXT_LEN
+    ctx_mod.validate_context_width(ctx_mod.CONTEXT_LEN, "t")
+    ctx_mod.validate_context_width(ctx_mod.MULTICORE_CONTEXT_LEN, "t")
+    ctx_mod.validate_context_width(4 * ctx_mod.MULTICORE_CONTEXT_LEN, "t")
+    for bad in (0, 1, ctx_mod.CONTEXT_LEN - 1, ctx_mod.CONTEXT_LEN + 1,
+                2 * ctx_mod.CONTEXT_LEN):
+        with pytest.raises(ValueError):
+            ctx_mod.validate_context_width(bad, "t")
+
+
+def test_peer_context_layout():
+    """Peer-channel context = own core-tagged block first (bitwise), then
+    one <CORE>-tagged block per peer in ascending core order."""
+    rng = np.random.RandomState(0)
+    n_cores, b = 3, 5
+    own = rng.randint(0, 1 << 40, (b, 40)).astype(np.uint64)
+    peers = rng.randint(0, 1 << 40, (b, n_cores, 40)).astype(np.uint64)
+    out = ctx_mod.peer_context_tokens(own, peers, core_id=1, vocab=VOCAB)
+    m = ctx_mod.MULTICORE_CONTEXT_LEN
+    assert out.shape == (b, n_cores * m)
+    np.testing.assert_array_equal(
+        out[:, :m],
+        ctx_mod.context_tokens_from_matrix(own, VOCAB, core_id=1))
+    for slot, peer in enumerate([0, 2]):
+        blk = out[:, (1 + slot) * m: (2 + slot) * m]
+        np.testing.assert_array_equal(
+            blk, ctx_mod.context_tokens_from_matrix(
+                peers[:, peer], VOCAB, core_id=peer))
+
+
+def test_peer_channel_build_prefix_bitwise():
+    """Turning peer mixing on must not change the clips, times, or the
+    own-core context prefix — it only appends peer blocks."""
+    base = build_multicore_bench_clips(
+        multicore.build_multicore_benchmark("mt.mix", 2),
+        MulticoreBuildConfig(n_cores=2, **KW), VOCAB)
+    peer = build_multicore_bench_clips(
+        multicore.build_multicore_benchmark("mt.mix", 2),
+        MulticoreBuildConfig(n_cores=2, peer_channels=True, **KW), VOCAB)
+    m = ctx_mod.MULTICORE_CONTEXT_LEN
+    assert base.context_len == m
+    assert peer.context_len == 2 * m
+    np.testing.assert_array_equal(peer.clip_tokens, base.clip_tokens)
+    np.testing.assert_array_equal(peer.time, base.time)
+    np.testing.assert_array_equal(peer.context_tokens[:, :m],
+                                  base.context_tokens)
+    assert peer.bench_names == base.bench_names
+
+
+# --------------------------------------------------------------------------- #
+# Replay scheduler: snapshot_at + peer_snapshots
+# --------------------------------------------------------------------------- #
+
+def test_run_multicore_snapshot_at_matches_snapshot_every():
+    mb = multicore.build_multicore_benchmark("mt.counter", 2)
+    every = multicore.run_multicore(mb.compiled(), 1_000,
+                                    mb.fresh_states(), snapshot_every=64)
+    at = multicore.run_multicore(
+        mb.compiled(), 1_000, mb.fresh_states(),
+        snapshot_at=[list(range(0, len(t), 64)) for t in every.cores])
+    for c in range(2):
+        np.testing.assert_array_equal(at.cores[c].snapshots,
+                                      every.cores[c].snapshots)
+
+
+def test_peer_snapshots_n1_quantum_aligned():
+    """At N=1 with snapshot positions on quantum starts, the quantum-
+    start peer capture IS the core's own precise snapshot."""
+    mb = multicore.build_multicore_benchmark("mt.stream", 1)
+    q = 64
+    mt = multicore.run_multicore(
+        mb.compiled(), 1_000, mb.fresh_states(), quantum=q,
+        snapshot_at=[list(range(0, 1_000, q))], peer_snapshots=True)
+    ps = mt.peer_snapshots[0]
+    assert ps.shape == (mt.cores[0].snapshots.shape[0], 1, 40)
+    np.testing.assert_array_equal(ps[:, 0], mt.cores[0].snapshots)
+
+
+def test_clone_states_shares_one_memory():
+    mb = multicore.build_multicore_benchmark("mt.counter", 3)
+    states = mb.fresh_states()
+    clones = multicore.clone_states(states)
+    assert all(c.mem is clones[0].mem for c in clones)
+    assert clones[0].mem is not states[0].mem
+    clones[0].mem[0xDEAD] = 1
+    assert 0xDEAD not in states[0].mem

@@ -1,9 +1,10 @@
 """Dataset pipeline, intervals, serving engine, end-to-end CAPSim."""
-import numpy as np
 import jax
+import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core import context as ctx_mod
 from repro.core import predictor
 from repro.core.intervals import basic_block_leaders, pick_intervals
 from repro.core.simulate import capsim_simulate
@@ -31,7 +32,7 @@ def test_build_dataset_shapes(tiny_ds):
     ds = tiny_ds
     assert len(ds) > 10
     assert ds.clip_tokens.shape[1:] == (32, 16)
-    assert ds.context_tokens.shape[1:] == (360,)
+    assert ds.context_tokens.shape[1:] == (ctx_mod.CONTEXT_LEN,)
     assert (ds.time > 0).all()
     assert (ds.clip_mask.sum(-1) >= TINY_BCFG.l_min).all()
     assert set(ds.bench_names) == {"503.bwaves", "541.leela"}

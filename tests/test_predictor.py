@@ -1,8 +1,7 @@
 """CAPSim predictor + LSTM baseline model invariants."""
-import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
+import numpy as np
 
 from repro.configs import get_config
 from repro.core import lstm_baseline, predictor

@@ -1,9 +1,8 @@
 """Roofline machinery: HLO collective parsing, wire models, extrapolation."""
-import numpy as np
 
-from repro.launch.roofline import (parse_collectives, roofline_terms,
-                                   model_flops, param_counts)
 from repro.launch.dryrun import extrapolate_costs
+from repro.launch.roofline import (model_flops, param_counts,
+                                   parse_collectives, roofline_terms)
 
 HLO = """
 ENTRY %main {
@@ -54,7 +53,7 @@ def test_extrapolate_costs_linear():
 
 
 def test_model_flops_yardsticks():
-    from repro.configs import get_config, LM_SHAPES, CAPSIM_SHAPES
+    from repro.configs import CAPSIM_SHAPES, LM_SHAPES, get_config
     cfg = get_config("olmo-1b")
     total, active = param_counts(cfg)
     assert total == active                       # dense: no expert discount

@@ -10,7 +10,7 @@ from repro.core import standardize as std_mod
 from repro.core.standardize import ClipEncoder, build_vocab
 from repro.data.dataset import BuildConfig, build_bench_clips
 from repro.isa import funcsim, progen, timing
-from repro.isa.compiled import (CompileError, OP_IS_MEM, compile_program)
+from repro.isa.compiled import OP_IS_MEM, CompileError, compile_program
 from repro.isa.isa import Instruction
 
 I = Instruction

@@ -1,8 +1,8 @@
 """Train-step factory: microbatching, clipping, compression, schedules,
 checkpoint roundtrip + crash-restart."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint.ckpt import CheckpointManager, latest_step, restore, \
     save
