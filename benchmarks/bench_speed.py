@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 from pathlib import Path
@@ -30,17 +31,42 @@ import numpy as np
 if __package__ in (None, ""):     # direct `python benchmarks/bench_speed.py`
     sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
-from benchmarks.common import BENCH_SCHEMA_VERSION, bench_cfg, full_cfg
+from benchmarks.common import (BENCH_SCHEMA_VERSION,
+                               MESH_BENCH_SCHEMA_VERSION, bench_cfg,
+                               full_cfg)
 from repro.core import context as ctx_mod
 from repro.core import predictor
 from repro.core import slicer as slicer_mod
 from repro.core import standardize as std_mod
 from repro.core.engine import SimulationEngine
+from repro.core.engine_config import EngineConfig
 from repro.core.simulate import capsim_simulate
 from repro.core.standardize import build_vocab
 from repro.isa import funcsim, multicore, progen, timing
 
 BENCHES = ["503.bwaves", "505.mcf", "548.exchange2"]
+
+
+def bench_scale_config(quick: bool) -> EngineConfig:
+    """The one scale declaration shared by every engine-based pass
+    (--multi / --multicore / --mesh) — previously each pass re-declared
+    this as its own kwarg dict."""
+    return EngineConfig(interval_size=2_000 if quick else 10_000,
+                        max_checkpoints=1 if quick else 2,
+                        l_min=100, l_clip=128, l_token=16,
+                        batch_size=32 if quick else 64)
+
+
+def resolve_engine_config(arg, quick: bool) -> EngineConfig:
+    """--engine-config as a JSON object (inline or a file path) layered
+    over the quick/full scale defaults."""
+    config = bench_scale_config(quick)
+    if arg:
+        text = arg
+        if not text.lstrip().startswith("{"):
+            text = Path(text).read_text()
+        config = config.replace(**json.loads(text))
+    return config
 
 
 def run(emit) -> None:
@@ -91,8 +117,9 @@ def run(emit) -> None:
     for name in BENCHES:
         bench = progen.build_benchmark(name)
         r = capsim_simulate(bench, params, cfg, vocab,
-                            interval_size=10_000, max_checkpoints=1,
-                            batch_size=32)
+                            EngineConfig(interval_size=10_000,
+                                         max_checkpoints=1,
+                                         batch_size=32))
         emit.emit(f"speed.{name}",
                   r.capsim_seconds * 1e6 / max(r.n_instructions, 1),
                   f"oracle {r.oracle_seconds:.2f}s vs capsim "
@@ -122,15 +149,16 @@ def run(emit) -> None:
 # Multi-benchmark throughput: sequential per-benchmark loop vs the engine
 # --------------------------------------------------------------------------- #
 
-def _sequential_simulate(bench, params, cfg, vocab, *, interval_size,
-                         max_checkpoints, l_min, l_clip, l_token,
-                         batch_size, with_oracle=False):
+def _sequential_simulate(bench, params, cfg, vocab, ec: EngineConfig, *,
+                         with_oracle=False):
     """The pre-engine, pre-IR ``capsim_simulate`` inference path, kept
     verbatim as the baseline: the *object* interpreter
     (``funcsim.run_reference``), per-clip Python tokenization and context
     loops, fresh ``jax.jit`` per benchmark (re-trace + re-compile),
     per-benchmark remainder padded to a full batch, and a synchronous
-    host round-trip after every device batch.
+    host round-trip after every device batch.  ``ec`` only supplies the
+    scale knobs (interval/clip/batch sizes) — the path itself stays the
+    seed loop.
 
     Returns ``(predicted_cycles, oracle_cycles, n_clips,
     frontend_seconds, oracle_seconds, predict_seconds)`` — front-end =
@@ -138,6 +166,9 @@ def _sequential_simulate(bench, params, cfg, vocab, *, interval_size,
     replaces); predict = the synchronous device loop incl. the fresh
     compile (the part the RT cache + pooled engine replace).
     """
+    interval_size, max_checkpoints = ec.interval_size, ec.max_checkpoints
+    l_min, l_clip, l_token = ec.l_min, ec.l_clip, ec.l_token
+    batch_size = ec.batch_size
     predict = jax.jit(lambda p, b: predictor.predict_step(p, b, cfg))
     st = progen.fresh_state(bench)
     tok_l, ctx_l, mask_l = [], [], []
@@ -184,7 +215,8 @@ def _sequential_simulate(bench, params, cfg, vocab, *, interval_size,
             n_real, fe_seconds, oracle_seconds, predict_seconds)
 
 
-def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
+def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False,
+              config: "EngineConfig | None" = None) -> dict:
     """Sequential-vs-engine clips/sec on an n-benchmark mix.
 
     Sequential = one benchmark at a time through the seed inference loop
@@ -205,10 +237,8 @@ def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
     cfg = predictor.inference_config(cfg)
     params = predictor.init_params(cfg, jax.random.PRNGKey(0))
     names = list(progen.TABLE_II)[:n_benchmarks]
-    kw = dict(interval_size=2_000 if quick else 10_000,
-              max_checkpoints=1 if quick else 2,
-              l_min=100, l_clip=128, l_token=16,
-              batch_size=32 if quick else 64)
+    ec = (config or bench_scale_config(quick)).replace(
+        warmup=0, with_oracle=False)
 
     benches = [progen.build_benchmark(name) for name in names]
     t0 = time.time()
@@ -220,7 +250,7 @@ def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
     seq_predict_seconds = 0.0
     for bench in benches:
         cycles, ocycles, k, fe_s, o_s, p_s = _sequential_simulate(
-            bench, params, cfg, vocab, with_oracle=True, **kw)
+            bench, params, cfg, vocab, ec, with_oracle=True)
         seq[bench.name] = cycles
         seq_oracle[bench.name] = ocycles
         n_clips += k
@@ -237,9 +267,9 @@ def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
     # table build), the warm pass is the steady-state device cost the
     # predict gate compares.
     def engine_pass(rt_cache, precision=None, n_runs=2):
-        engine = SimulationEngine(params, cfg, vocab, warmup=0,
-                                  with_oracle=False, rt_cache=rt_cache,
-                                  precision=precision, **kw)
+        engine = SimulationEngine.from_config(
+            params, cfg, vocab,
+            ec.replace(rt_cache=rt_cache, precision=precision))
         passes, results = [], None
         prev = {}
         for _ in range(n_runs):
@@ -301,8 +331,8 @@ def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False) -> dict:
         cprog = bench.compiled()
         cst = progen.fresh_compiled_state(bench)
         cycles = 0.0
-        for _ in range(min(bench.ckp_num, kw["max_checkpoints"])):
-            tr, cst = funcsim.run_compiled(cprog, kw["interval_size"], cst)
+        for _ in range(min(bench.ckp_num, ec.max_checkpoints)):
+            tr, cst = funcsim.run_compiled(cprog, ec.interval_size, cst)
             if not len(tr):
                 break
             cycles += timing.total_cycles_columnar(tr)
@@ -468,9 +498,8 @@ def run_dataset_build(emit, *, quick: bool = False,
 # Multicore: engine (benchmark, core) shards vs sequential per-core path
 # --------------------------------------------------------------------------- #
 
-def _sequential_multicore(mb, params, cfg, vocab, *, interval_size,
-                          max_checkpoints, l_min, l_clip, l_token,
-                          batch_size, quantum, timing_params):
+def _sequential_multicore(mb, params, cfg, vocab, ec: EngineConfig, *,
+                          quantum, timing_params):
     """The no-engine multicore reference: the SAME interleaved front-end
     (``run_multicore``), but each (core, checkpoint) clip batch predicts
     through its own synchronous monolithic loop with full-batch padding —
@@ -481,6 +510,9 @@ def _sequential_multicore(mb, params, cfg, vocab, *, interval_size,
     (``simulate_multicore`` over the recorded interleave), clip counts,
     and the predict wall time.
     """
+    interval_size, max_checkpoints = ec.interval_size, ec.max_checkpoints
+    l_min, l_clip, l_token = ec.l_min, ec.l_clip, ec.l_token
+    batch_size = ec.batch_size
     predict = jax.jit(lambda p, b: predictor.predict_step(p, b, cfg))
     cprogs = mb.compiled()
     tables = [cp.token_table(vocab, l_token) for cp in cprogs]
@@ -555,7 +587,8 @@ def _columnar_oracle_n1(mb, *, interval_size, max_checkpoints, l_min,
 
 
 def run_multicore_bench(emit, *, core_counts=(1, 2, 4),
-                        quick: bool = False) -> dict:
+                        quick: bool = False,
+                        config: "EngineConfig | None" = None) -> dict:
     """Engine-vs-sequential equality and throughput at 1/2/4 cores.
 
     Engine = ``SimulationEngine.run_multicore``: interleaved per-core
@@ -572,10 +605,8 @@ def run_multicore_bench(emit, *, core_counts=(1, 2, 4),
     params = predictor.init_params(cfg, jax.random.PRNGKey(0))
     names = list(multicore.MULTICORE_NAMES)
     tp = timing.TimingParams()
-    kw = dict(interval_size=2_000 if quick else 10_000,
-              max_checkpoints=1 if quick else 2,
-              l_min=100, l_clip=128, l_token=16,
-              batch_size=32 if quick else 64)
+    ec = (config or bench_scale_config(quick)).replace(
+        warmup=0, with_oracle=False, rt_cache=True)
     quantum = multicore.DEFAULT_QUANTUM
 
     per_count = {}
@@ -583,8 +614,7 @@ def run_multicore_bench(emit, *, core_counts=(1, 2, 4),
     for n_cores in core_counts:
         mbenches = [multicore.build_multicore_benchmark(n, n_cores)
                     for n in names]
-        engine = SimulationEngine(params, cfg, vocab, warmup=0,
-                                  with_oracle=False, rt_cache=True, **kw)
+        engine = SimulationEngine.from_config(params, cfg, vocab, ec)
         t0 = time.time()
         results = engine.run_multicore(mbenches, quantum=quantum)
         eng_seconds = time.time() - t0
@@ -599,9 +629,8 @@ def run_multicore_bench(emit, *, core_counts=(1, 2, 4),
         prior_mismatches = len(mismatches)
         for mb, r in zip(mbenches, results):
             seq_pred, seq_oracle, seq_clips, p_s, o_s = \
-                _sequential_multicore(mb, params, cfg, vocab,
-                                      quantum=quantum, timing_params=tp,
-                                      **kw)
+                _sequential_multicore(mb, params, cfg, vocab, ec,
+                                      quantum=quantum, timing_params=tp)
             seq_predict_seconds += p_s
             seq_oracle_seconds += o_s
             cores = []
@@ -637,9 +666,9 @@ def run_multicore_bench(emit, *, core_counts=(1, 2, 4),
             for mb in mbenches:
                 entry = per_bench[mb.name]
                 ref = _columnar_oracle_n1(
-                    mb, interval_size=kw["interval_size"],
-                    max_checkpoints=kw["max_checkpoints"],
-                    l_min=kw["l_min"], timing_params=tp)
+                    mb, interval_size=ec.interval_size,
+                    max_checkpoints=ec.max_checkpoints,
+                    l_min=ec.l_min, timing_params=tp)
                 entry["n1_oracle_columnar_cycles"] = ref
                 entry["n1_oracle_bitwise_equal"] = \
                     ref == entry["oracle_cycles_total"]
@@ -677,6 +706,110 @@ def run_multicore_bench(emit, *, core_counts=(1, 2, 4),
             "per_core_count": per_count}
 
 
+# --------------------------------------------------------------------------- #
+# Mesh scaling: sharded engine vs the unsharded reference at 1/2/N devices
+# --------------------------------------------------------------------------- #
+
+def run_mesh(emit, *, max_mesh: int = 8, quick: bool = False,
+             n_benchmarks: int = 4,
+             config: "EngineConfig | None" = None) -> dict:
+    """Data-mesh scaling of the sharded inference engine.
+
+    For each mesh size in {1, 2, max_mesh} (capped at the visible device
+    count): a fresh engine with ``mesh_shape=(n,)`` runs the single-core
+    suite twice (cold pass pays jit + the sharded RT-table build, warm
+    pass is steady state) plus the 2-core multicore suite, and every
+    predicted AND oracle cycle count — per benchmark, per core, and
+    summed — must be bitwise equal to the unsharded (``mesh_shape=()``)
+    reference engine.  The JSON (schema v3) reports clips/sec per mesh
+    size and the cold RT-build scaling ratio vs the 1-device mesh; on a
+    single physical core the forced host devices timeshare, so the
+    ratios are reported, not gated — the gate is bitwise equality.
+    """
+    vocab = build_vocab()
+    cfg = predictor.inference_config(bench_cfg() if quick else full_cfg())
+    params = predictor.init_params(cfg, jax.random.PRNGKey(0))
+    ec = (config or bench_scale_config(quick)).replace(
+        warmup=0, with_oracle=True, rt_cache=True, mesh_shape=())
+    names = list(progen.TABLE_II)[:n_benchmarks]
+    benches = [progen.build_benchmark(name) for name in names]
+    mbenches = [multicore.build_multicore_benchmark(n, 2)
+                for n in multicore.MULTICORE_NAMES]
+
+    n_devices = len(jax.devices())
+    sizes = [s for s in sorted({1, 2, max_mesh}) if 0 < s <= min(
+        max_mesh, n_devices)]
+
+    def one(engine_config):
+        engine = SimulationEngine.from_config(params, cfg, vocab,
+                                              engine_config)
+        t0 = time.time()
+        engine.run(benches)               # cold: jit + RT-table build
+        cold = time.time() - t0
+        build = (engine.last_rt_stats.build_seconds
+                 if engine.last_rt_stats else 0.0)
+        t0 = time.time()
+        results = engine.run(benches)     # warm: steady-state throughput
+        warm = time.time() - t0
+        n_clips = engine.last_stats.n_clips
+        mresults = engine.run_multicore(mbenches)
+        return results, mresults, cold, warm, build, n_clips
+
+    ref, ref_mc, ref_cold, ref_warm, ref_build, n_clips = one(ec)
+
+    per_mesh = {}
+    mismatches = []
+    for n in sizes:
+        results, mresults, cold, warm, build, _ = one(
+            ec.replace(mesh_shape=(n,)))
+        equal = all(r.predicted_cycles == s.predicted_cycles
+                    and r.oracle_cycles == s.oracle_cycles
+                    for r, s in zip(ref, results))
+        mc_equal = all(
+            mr.predicted_cycles == ms.predicted_cycles
+            and mr.oracle_cycles == ms.oracle_cycles
+            and all(a.predicted_cycles == b.predicted_cycles
+                    for a, b in zip(mr.cores, ms.cores))
+            for mr, ms in zip(ref_mc, mresults))
+        if not equal:
+            mismatches.append(f"mesh{n}:single-core")
+        if not mc_equal:
+            mismatches.append(f"mesh{n}:multicore")
+        cps = n_clips / max(warm, 1e-9)
+        per_mesh[str(n)] = {
+            "cold_seconds": cold,
+            "warm_seconds": warm,
+            "clips_per_s": cps,
+            "rt_build_seconds": build,
+            "bitwise_equal": equal,
+            "multicore_bitwise_equal": mc_equal}
+        emit.emit(f"speed.mesh_{n}", warm * 1e6 / max(n_clips, 1),
+                  f"{n}-device mesh: {n_clips} clips in {warm:.2f}s warm "
+                  f"= {cps:.0f} clips/s, cold RT build {build:.2f}s; "
+                  f"cycles vs unsharded "
+                  f"{'bitwise equal' if equal and mc_equal else 'MISMATCH'}")
+
+    build_1 = per_mesh.get("1", {}).get("rt_build_seconds", ref_build)
+    scaling = {k: build_1 / max(v["rt_build_seconds"], 1e-9)
+               for k, v in per_mesh.items()}
+    return {"schema_version": MESH_BENCH_SCHEMA_VERSION,
+            "quick": quick,
+            "n_devices": n_devices,
+            "requested_max_mesh": max_mesh,
+            "mesh_sizes": sizes,
+            "n_benchmarks": n_benchmarks,
+            "multicore_n_cores": 2,
+            "n_clips": n_clips,
+            "unsharded": {"cold_seconds": ref_cold,
+                          "warm_seconds": ref_warm,
+                          "rt_build_seconds": ref_build,
+                          "clips_per_s": n_clips / max(ref_warm, 1e-9)},
+            "per_mesh": per_mesh,
+            "rt_build_scaling": scaling,
+            "all_bitwise_equal": not mismatches,
+            "mismatches": mismatches}
+
+
 if __name__ == "__main__":
     from benchmarks.common import CsvEmitter
     ap = argparse.ArgumentParser()
@@ -692,9 +825,19 @@ if __name__ == "__main__":
                     help="dataset-build throughput breakdown (build "
                          "seconds per stage, clips/sec) for the single- "
                          "and multicore training builds")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="mesh-scaling pass: sharded engine at 1/2/N "
+                         "devices, bitwise-gated against the unsharded "
+                         "reference.  Sets XLA_FLAGS to force N host "
+                         "devices if too few are visible")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke scale (small model, short intervals)")
     ap.add_argument("--n-benchmarks", type=int, default=8)
+    ap.add_argument("--engine-config", default=None, metavar="JSON",
+                    help="EngineConfig overrides as a JSON object (inline "
+                         "or a file path) layered over the --quick/full "
+                         "scale defaults; shared by --multi, --multicore "
+                         "and --mesh")
     ap.add_argument("--min-speedup", type=float, default=1.5,
                     help="fail if engine/sequential clips/s falls below "
                          "this (the CI gate; pass 0 for measurement runs)")
@@ -714,14 +857,38 @@ if __name__ == "__main__":
                          "seconds) to this path — the CI artifact that "
                          "tracks where host time goes across PRs")
     args = ap.parse_args()
+    if args.mesh > 1:
+        # must happen before jax's first backend init (importing jax does
+        # not lock the device count; the first device query/op does)
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.mesh}").strip()
     emitter = CsvEmitter()
+    engine_config = resolve_engine_config(args.engine_config, args.quick)
     if args.dataset_build:
         res = run_dataset_build(emitter, quick=args.quick)
         if args.json:
             Path(args.json).write_text(json.dumps(res, indent=2))
+    elif args.mesh:
+        res = run_mesh(emitter, max_mesh=args.mesh, quick=args.quick,
+                       n_benchmarks=min(args.n_benchmarks, 4),
+                       config=engine_config)
+        if args.json:
+            Path(args.json).write_text(json.dumps(res, indent=2))
+        if args.mesh not in res["mesh_sizes"]:
+            raise SystemExit(
+                f"requested --mesh {args.mesh} but only "
+                f"{res['n_devices']} devices are visible — XLA_FLAGS "
+                "was set too late (jax backend already initialized?)")
+        if not res["all_bitwise_equal"]:
+            raise SystemExit(
+                "sharded engine cycles diverged from the unsharded "
+                f"reference: {res['mismatches']}")
     elif args.multicore:
         res = run_multicore_bench(emitter, core_counts=args.core_counts,
-                                  quick=args.quick)
+                                  quick=args.quick, config=engine_config)
         if args.json:
             Path(args.json).write_text(json.dumps(res, indent=2))
         if not res["all_bitwise_equal"]:
@@ -730,7 +897,7 @@ if __name__ == "__main__":
                 f"{res['mismatches']}")
     elif args.multi:
         res = run_multi(emitter, n_benchmarks=args.n_benchmarks,
-                        quick=args.quick)
+                        quick=args.quick, config=engine_config)
         if args.json:
             Path(args.json).write_text(json.dumps(res, indent=2))
         if args.breakdown_json:

@@ -34,6 +34,12 @@ VOCAB = build_vocab()
 # pre-stamp schema; v2 adds the stamp itself + the multicore breakdown.
 BENCH_SCHEMA_VERSION = 2
 
+# The mesh-scaling JSON (bench_speed --mesh) is a NEW artifact with its
+# own reader, so it gets its own stamp: v3 = v2 fields + the per-mesh
+# clips/sec + RT-build scaling block.  Existing v2 artifacts and their
+# gate readers are untouched.
+MESH_BENCH_SCHEMA_VERSION = 3
+
 BENCH_BCFG = BuildConfig(interval_size=6_000, warmup=600,
                          max_checkpoints=2, l_min=50, l_clip=64,
                          l_token=16, threshold=50, coef=0.1)

@@ -16,6 +16,7 @@ and the prediction error.  With an untrained predictor the error column is
 meaningless — pass --ckpt to use weights from examples/train_capsim.py.
 """
 import argparse
+import os
 
 import jax
 
@@ -23,6 +24,7 @@ from repro.checkpoint.ckpt import CheckpointManager
 from repro.configs import get_config
 from repro.core import predictor
 from repro.core.engine import SimulationEngine
+from repro.core.engine_config import EngineConfig
 from repro.core.standardize import build_vocab
 
 
@@ -36,7 +38,16 @@ def main() -> None:
     ap.add_argument("--no-rt-cache", action="store_true",
                     help="monolithic predict path (bitwise reference)")
     ap.add_argument("--precision", default=None, choices=("fp32", "bf16"))
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="shard inference over an N-device data mesh")
     args = ap.parse_args()
+    if args.mesh > 1 and "--xla_force_host_platform_device_count" \
+            not in os.environ.get("XLA_FLAGS", ""):
+        # must land before jax's first backend init (imports don't lock
+        # the device count; the first device op does)
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.mesh}")
 
     vocab = build_vocab()
     cfg = get_config("capsim").replace(dtype="float32")
@@ -50,11 +61,12 @@ def main() -> None:
             params = restored["params"]
             print(f"restored predictor from step {step}")
 
-    engine = SimulationEngine(params, cfg, vocab,
-                              interval_size=args.interval_size,
-                              max_checkpoints=args.max_checkpoints,
-                              rt_cache=not args.no_rt_cache,
-                              precision=args.precision)
+    config = EngineConfig(interval_size=args.interval_size,
+                          max_checkpoints=args.max_checkpoints,
+                          rt_cache=not args.no_rt_cache,
+                          precision=args.precision,
+                          mesh_shape=(args.mesh,) if args.mesh else ())
+    engine = SimulationEngine.from_config(params, cfg, vocab, config)
     engine.submit_names(args.benchmarks)
     results = engine.run()
 

@@ -58,6 +58,7 @@ import numpy as np
 from repro.core import context as ctx_mod
 from repro.core import predictor as pred_mod
 from repro.core import standardize as std_mod
+from repro.core.engine_config import EngineConfig, legacy_engine_config
 from repro.core.rt_cache import RTCache, RTCacheStats
 from repro.isa import funcsim, multicore, progen, timing
 
@@ -110,14 +111,36 @@ def predict_cached_fn(cfg, use_context: bool = True):
         p, table, b, cfg, use_context))
 
 
-def bucket_sizes(batch_size: int) -> Tuple[int, ...]:
+@lru_cache(maxsize=64)
+def predict_mesh_fn(cfg, use_context: bool, n_shards: int):
+    """Sharded twin of ``predict_fn``: the batch axis splits over an
+    n-device data mesh (params replicated) — bitwise equal to the
+    single-device dispatch because clips are row-independent."""
+    from repro.launch.mesh import make_data_mesh
+    return jax.jit(pred_mod.sharded_predict_step(
+        cfg, use_context, make_data_mesh(n_shards)))
+
+
+@lru_cache(maxsize=64)
+def predict_cached_mesh_fn(cfg, use_context: bool, n_shards: int):
+    """Sharded twin of ``predict_cached_fn``: rt_idx/context/mask shard
+    over the data mesh, the RT table replicates to every device."""
+    from repro.launch.mesh import make_data_mesh
+    return jax.jit(pred_mod.sharded_forward_cached(
+        cfg, use_context, make_data_mesh(n_shards)))
+
+
+def bucket_sizes(batch_size: int, align: int = 1) -> Tuple[int, ...]:
     """Descending pad targets for the final partial batch: the full batch
     plus halvings down to 8.  Bounds distinct compiled shapes while keeping
-    remainder padding < 2x."""
+    remainder padding < 2x.  ``align`` (the mesh shard count) keeps every
+    bucket a multiple of the mesh size — and at least one row per device —
+    so a sharded dispatch never hands a device an empty or ragged shard."""
+    floor = max(8, align)
     sizes = [batch_size]
     b = batch_size
-    while b > 8:
-        b = max(b // 2, 8)
+    while b > floor:
+        b = max((b // 2 + align - 1) // align * align, floor)
         sizes.append(b)
     return tuple(sizes)
 
@@ -178,20 +201,34 @@ class BatchedPredictor:
     indices instead of token tensors and dispatch through the
     block-encoder-only ``forward_cached`` step — feed them via
     ``add_indexed`` (trace engine) or plain ``add`` (tokenized requests
-    are deduped through the cache first).  ``precision`` selects the
-    inference numerics ("fp32" | "bf16", see
-    ``predictor.inference_config``); None keeps cfg.dtype.
+    are deduped through the cache first).
+
+    Construction is config-first: ``config`` (an ``EngineConfig``)
+    supplies batch size, precision, mesh shape, context ablation and
+    in-flight depth; ``rt_cache`` stays a direct object parameter (the
+    cache is shared state owned by the caller, not a setting).  With a
+    non-empty ``config.mesh_shape`` every device batch shard_maps over
+    the data mesh: buckets stay multiples of the mesh size, so no shard
+    is ever empty, and demuxed rows are bitwise the single-device rows.
+    The old loose keyword arguments (``batch_size=``, ``precision=``,
+    ...) still work but raise a ``DeprecationWarning``.
     """
 
-    def __init__(self, params, cfg, *, batch_size: int = 256,
-                 use_context: bool = True, max_in_flight: int = 2,
-                 rt_cache: Optional[RTCache] = None,
-                 precision: Optional[str] = None):
+    def __init__(self, params, cfg, *, config: Optional[EngineConfig] = None,
+                 rt_cache: Optional[RTCache] = None, **legacy):
+        if legacy:
+            config = legacy_engine_config(config, legacy,
+                                          "BatchedPredictor")
+        config = config or EngineConfig()
+        self.config = config
         self.params = params
-        self.cfg = pred_mod.inference_config(cfg, precision)
-        self.batch_size = batch_size
-        self.buckets = bucket_sizes(batch_size)
-        self.max_in_flight = max_in_flight
+        self.cfg = pred_mod.inference_config(cfg, config.precision)
+        self.batch_size = config.batch_size
+        self._shards = config.n_shards         # 0 = unsharded path
+        self.buckets = bucket_sizes(config.batch_size,
+                                    max(self._shards, 1))
+        self.max_in_flight = config.max_in_flight
+        use_context = config.use_context
         self._cache = rt_cache
         if rt_cache is not None:
             # the table is a pure function of (params, cfg numerics +
@@ -199,9 +236,15 @@ class BatchedPredictor:
             assert rt_cache.params is params and rt_cache.cfg == self.cfg, \
                 "RT cache must be built with the same params and " \
                 "resolved config as the predict step"
-            self._predict = predict_cached_fn(self.cfg, use_context)
+            self._predict = (
+                predict_cached_mesh_fn(self.cfg, use_context, self._shards)
+                if self._shards
+                else predict_cached_fn(self.cfg, use_context))
         else:
-            self._predict = predict_fn(self.cfg, use_context)
+            self._predict = (
+                predict_mesh_fn(self.cfg, use_context, self._shards)
+                if self._shards
+                else predict_fn(self.cfg, use_context))
         self._tok: List[np.ndarray] = []      # token tensors OR rt_idx rows
         self._ctx: List[np.ndarray] = []
         self._mask: List[np.ndarray] = []
@@ -278,6 +321,13 @@ class BatchedPredictor:
 
     def _dispatch(self, tok, ctx, mask, n_real: int) -> None:
         t0 = time.time()
+        if self._shards:
+            # sharded dispatch contract: every device gets a non-empty,
+            # equal shard (bucket_sizes keeps buckets aligned; a pool
+            # smaller than the mesh was padded with masked zero rows)
+            assert tok.shape[0] >= self._shards \
+                and tok.shape[0] % self._shards == 0, \
+                (tok.shape[0], self._shards)
         if self._cache is not None:
             batch = {"rt_idx": jnp.asarray(tok),
                      "context_tokens": jnp.asarray(ctx),
@@ -317,6 +367,10 @@ class BatchedPredictor:
                 # real rows burn block-encoder FLOPs on phantom work.  A
                 # zero token row is all-<PAD>; a zero rt_idx row is the
                 # cache's pad slot; a zero mask excludes the row entirely.
+                # On a mesh the bucket floor is max(8, n_shards), so a
+                # pool smaller than the device count pads up to a full
+                # (aligned) shard set instead of dispatching an empty
+                # shard; the [:n_real] demux in _retire drops the pads.
                 tok = np.concatenate(
                     [tok, np.zeros((pad,) + tok.shape[1:], tok.dtype)])
                 ctx = np.concatenate(
@@ -330,6 +384,8 @@ class BatchedPredictor:
             self._retire()
         preds = (np.concatenate(self._retired) if self._retired
                  else np.zeros(0, np.float32))
+        assert preds.shape[0] == self.stats.n_predicted, \
+            "demux must return exactly the real (non-pad) clips"
         self._retired = []
         self.stats.drain_seconds += time.time() - t0
         return preds
@@ -388,41 +444,63 @@ class SimulationEngine:
     """Queue of benchmarks -> functional sims -> one shared clip pool ->
     cached-jit bucketed inference -> demultiplexed ``SimResult``s.
 
-    Simulation parameters mirror ``capsim_simulate``; a single-benchmark
-    run through the engine produces bitwise-identical predicted cycles.
+    Construction is config-first: ``SimulationEngine.from_config(params,
+    cfg, vocab, EngineConfig(...))`` (or the equivalent ``config=``
+    keyword) is the single way every knob — trace scale, batching,
+    precision, RT cache, multicore N and the device mesh — reaches the
+    engine; ``capsim_simulate``/``capsim_simulate_multicore``, serving
+    ``PredictorEngine`` and ``launch/serve.py`` are all thin wrappers
+    over it.  A non-empty ``mesh_shape`` shards every predict dispatch
+    AND every RT-cache encode pass across the data mesh, bitwise equal
+    to the unsharded engine.  The old loose keyword signature still
+    works but raises a ``DeprecationWarning``.
     """
 
-    def __init__(self, params, cfg, vocab: std_mod.Vocab, *,
-                 interval_size: int = 20_000, warmup: int = 2_000,
-                 max_checkpoints: int = 4, l_min: int = 100,
-                 l_clip: int = 128, l_token: int = 16,
-                 batch_size: int = 256, use_context: bool = True,
-                 with_oracle: bool = True,
-                 timing_params: timing.TimingParams = timing.TimingParams(),
-                 max_in_flight: int = 2, rt_cache: bool = True,
-                 precision: Optional[str] = None):
+    def __init__(self, params, cfg, vocab: std_mod.Vocab,
+                 config: Optional[EngineConfig] = None, *,
+                 timing_params: Optional[timing.TimingParams] = None,
+                 **legacy):
+        if legacy:
+            config = legacy_engine_config(config, legacy,
+                                          "SimulationEngine")
+        config = config or EngineConfig()
+        self.config = config
         self.params = params
-        self.cfg = pred_mod.inference_config(cfg, precision)
+        self.cfg = pred_mod.inference_config(cfg, config.precision)
         self.vocab = vocab
-        self.interval_size = interval_size
-        self.warmup = warmup
-        self.max_checkpoints = max_checkpoints
-        self.l_min = l_min
-        self.l_clip = l_clip
-        self.l_token = l_token
-        self.batch_size = batch_size
-        self.use_context = use_context
-        self.with_oracle = with_oracle
-        self.timing_params = timing_params
-        self.max_in_flight = max_in_flight
+        # mirror the config's trace-scale fields as attributes (the
+        # pre-EngineConfig public surface; internal code reads these too)
+        self.interval_size = config.interval_size
+        self.warmup = config.warmup
+        self.max_checkpoints = config.max_checkpoints
+        self.l_min = config.l_min
+        self.l_clip = config.l_clip
+        self.l_token = config.l_token
+        self.batch_size = config.batch_size
+        self.use_context = config.use_context
+        self.with_oracle = config.with_oracle
+        self.timing_params = (timing_params if timing_params is not None
+                              else timing.TimingParams())
+        self.max_in_flight = config.max_in_flight
         # one cache per engine: params are pinned at construction, so the
-        # table never goes stale; new programs just append unseen rows
-        self._rt_cache = (RTCache(self.params, self.cfg, l_token)
-                          if rt_cache else None)
+        # table never goes stale; new programs just append unseen rows.
+        # The cache shares the engine's mesh: encode passes shard too.
+        self._rt_cache = (RTCache(self.params, self.cfg, config.l_token,
+                                  n_shards=config.n_shards)
+                          if config.rt_cache else None)
         self._queue: List[progen.Benchmark] = []
         self.last_stats: Optional[PredictorStats] = None
         self.last_rt_stats: Optional[RTCacheStats] = None
         self.frontend_stats = FrontendStats()
+
+    @classmethod
+    def from_config(cls, params, cfg, vocab: std_mod.Vocab,
+                    config: Optional[EngineConfig] = None, *,
+                    timing_params: Optional[timing.TimingParams] = None
+                    ) -> "SimulationEngine":
+        """Canonical constructor: every public entry point routes here."""
+        return cls(params, cfg, vocab, config,
+                   timing_params=timing_params)
 
     def submit(self, bench: progen.Benchmark) -> None:
         self._queue.append(bench)
@@ -513,10 +591,8 @@ class SimulationEngine:
         if benches is not None:
             jobs.extend(_Job(b) for b in benches)
         self.frontend_stats = FrontendStats()
-        pred = BatchedPredictor(
-            self.params, self.cfg, batch_size=self.batch_size,
-            use_context=self.use_context, max_in_flight=self.max_in_flight,
-            rt_cache=self._rt_cache)
+        pred = BatchedPredictor(self.params, self.cfg, config=self.config,
+                                rt_cache=self._rt_cache)
         rt_stats = (self._rt_cache.stats if self._rt_cache is not None
                     else RTCacheStats())
         offset = 0
@@ -567,7 +643,7 @@ class SimulationEngine:
 
     def run_multicore(self,
                       mbenches: Sequence[multicore.MulticoreBenchmark], *,
-                      quantum: int = multicore.DEFAULT_QUANTUM
+                      quantum: Optional[int] = None
                       ) -> List[MulticoreSimResult]:
         """Multicore path: interleaved per-core functional sims ->
         (benchmark, core) clip shards through the SAME pooled
@@ -585,12 +661,19 @@ class SimulationEngine:
         ``timing.simulate_multicore`` over the recorded commit
         interleave.
         """
+        if self.config.peer_channels:
+            raise NotImplementedError(
+                "peer_channels serving is reserved (ROADMAP item 8): the "
+                "peer-context training channels are not wired into the "
+                "trace engine's context layout yet")
+        if quantum is None:
+            quantum = (self.config.quantum
+                       if self.config.quantum is not None
+                       else multicore.DEFAULT_QUANTUM)
         self.frontend_stats = FrontendStats()
         fe = self.frontend_stats
-        pred = BatchedPredictor(
-            self.params, self.cfg, batch_size=self.batch_size,
-            use_context=self.use_context, max_in_flight=self.max_in_flight,
-            rt_cache=self._rt_cache)
+        pred = BatchedPredictor(self.params, self.cfg, config=self.config,
+                                rt_cache=self._rt_cache)
         rt_stats = (self._rt_cache.stats if self._rt_cache is not None
                     else RTCacheStats())
         all_jobs: List[List[_Job]] = []

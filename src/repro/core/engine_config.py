@@ -1,0 +1,164 @@
+"""EngineConfig: the one construction surface for the inference engines.
+
+Every serving entry point — ``SimulationEngine`` / ``BatchedPredictor``
+(core), ``PredictorEngine`` (serving), ``capsim_simulate`` /
+``capsim_simulate_multicore`` (wrappers), and ``launch/serve.py`` — used
+to re-declare the same knob set as loose keyword arguments, so adding an
+axis (precision, RT cache, multicore N, and now the device mesh) meant
+threading one more kwarg through five signatures.  ``EngineConfig``
+collapses them into a single frozen dataclass: sharding is a config
+*axis*, not another kwarg.
+
+Field groups:
+
+  mesh          ``mesh_shape`` — data-parallel device mesh for predict
+                AND RT-cache encode dispatch.  ``()`` (default) is the
+                unsharded single-device path; ``(n,)`` (or any shape
+                whose product is n) shards clip batches n ways via
+                ``shard_map`` over a 1-D "data" mesh — bitwise equal to
+                unsharded because clips are row-independent.
+  numerics      ``precision`` (None keeps cfg.dtype; "fp32"/"bf16"),
+                ``rt_cache``, ``use_context``.
+  batching      ``batch_size`` (must divide by the mesh size so no
+                shard is ever empty), ``max_in_flight``.
+  trace scale   ``interval_size``, ``warmup``, ``max_checkpoints``,
+                ``l_min``, ``l_clip``, ``l_token``, ``with_oracle``.
+  multicore     ``multicore`` (N cores; 0 = single-core suite),
+                ``quantum`` (None = scheduler default),
+                ``peer_channels`` (peer-context serving — reserved,
+                ROADMAP item 8).
+
+The config is JSON round-trippable (``to_json``/``from_json``) so one
+``--engine-config`` flag can drive every bench pass and CI leg.  Legacy
+keyword signatures on the entry points forward here through
+``legacy_engine_config`` and raise a ``DeprecationWarning``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+PRECISIONS = (None, "fp32", "bf16")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    # --- mesh ---
+    mesh_shape: Tuple[int, ...] = ()
+    # --- numerics / caching ---
+    precision: Optional[str] = None
+    rt_cache: bool = True
+    use_context: bool = True
+    # --- batching ---
+    batch_size: int = 256
+    max_in_flight: int = 2
+    # --- trace scale ---
+    interval_size: int = 20_000
+    warmup: int = 2_000
+    max_checkpoints: int = 4
+    l_min: int = 100
+    l_clip: int = 128
+    l_token: int = 16
+    with_oracle: bool = True
+    # --- multicore ---
+    multicore: int = 0
+    quantum: Optional[int] = None
+    peer_channels: bool = False
+
+    def __post_init__(self):
+        # normalize mesh_shape so (config equality == behavior equality)
+        # survives JSON round trips (lists) and scalar convenience input
+        shape = self.mesh_shape
+        if isinstance(shape, int):
+            shape = (shape,)
+        object.__setattr__(self, "mesh_shape", tuple(int(s) for s in shape))
+        self.validate()
+
+    @property
+    def n_shards(self) -> int:
+        """Data-parallel shard count: 0 = no mesh (unsharded path); a
+        1-device mesh (``(1,)``) still dispatches through shard_map."""
+        if not self.mesh_shape:
+            return 0
+        n = 1
+        for s in self.mesh_shape:
+            n *= s
+        return n
+
+    def validate(self) -> None:
+        if any(s < 1 for s in self.mesh_shape):
+            raise ValueError(
+                f"mesh_shape must be positive, got {self.mesh_shape}")
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS}, "
+                f"got {self.precision!r}")
+        if self.batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, "
+                             f"got {self.batch_size}")
+        n = self.n_shards
+        if n and self.batch_size % n:
+            raise ValueError(
+                f"batch_size {self.batch_size} must divide by the mesh "
+                f"size {n} so no device ever receives an empty shard")
+        if self.multicore < 0:
+            raise ValueError(f"multicore must be >= 0, "
+                             f"got {self.multicore}")
+        if self.peer_channels and self.multicore < 1:
+            raise ValueError("peer_channels requires multicore >= 1")
+        if self.quantum is not None and self.quantum < 1:
+            raise ValueError(f"quantum must be >= 1, got {self.quantum}")
+
+    def replace(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------ JSON ------------------------------ #
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["mesh_shape"] = list(self.mesh_shape)
+        return d
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, data: Mapping[str, Any]) -> "EngineConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(data) - fields
+        if unknown:
+            raise ValueError(
+                f"unknown EngineConfig fields {sorted(unknown)} "
+                f"(known: {sorted(fields)})")
+        return cls(**dict(data))
+
+    @classmethod
+    def from_json(cls, text: str) -> "EngineConfig":
+        return cls.from_dict(json.loads(text))
+
+
+# field names the deprecated kwarg shims accept (== the config fields)
+LEGACY_FIELDS = frozenset(f.name for f in dataclasses.fields(EngineConfig))
+
+
+def legacy_engine_config(config: Optional[EngineConfig],
+                         kwargs: Dict[str, Any], where: str, *,
+                         stacklevel: int = 3) -> EngineConfig:
+    """Fold a deprecated loose-kwarg call into an ``EngineConfig``.
+
+    Unknown names raise ``TypeError`` (exactly like a real signature
+    would); known names warn once per call site and override ``config``
+    (or the defaults)."""
+    unknown = set(kwargs) - LEGACY_FIELDS
+    if unknown:
+        raise TypeError(
+            f"{where}() got unexpected keyword arguments "
+            f"{sorted(unknown)}")
+    warnings.warn(
+        f"{where}: passing {sorted(kwargs)} as keyword arguments is "
+        f"deprecated — construct an EngineConfig and pass config=, e.g. "
+        f"config=EngineConfig({', '.join(f'{k}=...' for k in sorted(kwargs))})",
+        DeprecationWarning, stacklevel=stacklevel)
+    return (config or EngineConfig()).replace(**kwargs)

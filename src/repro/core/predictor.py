@@ -332,6 +332,63 @@ def forward_cached(params, rt_table, batch, cfg, use_context: bool = True):
     return block_forward(params, rt, batch, cfg, use_context)
 
 
+# --------------------------------------------------------------------------- #
+# Multi-device sharded inference (EngineConfig.mesh_shape)
+# --------------------------------------------------------------------------- #
+#
+# Clips (and static RT rows) are row-independent, so data-parallel
+# sharding over a 1-D "data" mesh is bitwise equal to the single-device
+# dispatch of the same batch: each shard computes exactly the rows it
+# would compute inside the full batch, and the demux concatenates
+# per-shard outputs in row order.  Params and the RT table replicate
+# (P() specs) — the model is ~2M params, so replication is free and the
+# only cross-device traffic is the batch scatter / result gather.
+
+def _batch_shard_specs(mesh, token_key: str):
+    from jax.sharding import PartitionSpec as P
+    data = P(mesh.axis_names[0])
+    return {token_key: data, "context_tokens": data, "clip_mask": data}
+
+
+def sharded_predict_step(cfg, use_context: bool, mesh):
+    """``predict_step`` shard_mapped over the batch axis of ``mesh``
+    (monolithic path: batch carries clip_tokens)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import compat_shard_map
+    return compat_shard_map(
+        lambda p, b: predict_step(p, b, cfg, use_context),
+        mesh=mesh,
+        in_specs=(P(), _batch_shard_specs(mesh, "clip_tokens")),
+        out_specs=P(mesh.axis_names[0]))
+
+
+def sharded_forward_cached(cfg, use_context: bool, mesh):
+    """``forward_cached`` shard_mapped over the batch axis of ``mesh``;
+    the RT table replicates so every shard gathers locally."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import compat_shard_map
+    return compat_shard_map(
+        lambda p, table, b: forward_cached(p, table, b, cfg, use_context),
+        mesh=mesh,
+        in_specs=(P(), P(), _batch_shard_specs(mesh, "rt_idx")),
+        out_specs=P(mesh.axis_names[0]))
+
+
+def sharded_encode_instructions(cfg, mesh):
+    """``encode_instructions`` shard_mapped over the static-row axis:
+    the RT-cache *build* divides by mesh size while the resulting table
+    stays byte-identical (rows encode independently)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import compat_shard_map
+    data = P(mesh.axis_names[0])
+    return compat_shard_map(
+        lambda p, rows: encode_instructions(p, rows, cfg),
+        mesh=mesh, in_specs=(P(), data), out_specs=data)
+
+
 # Inference precision knob: fp32 is the bitwise-reference mode; bf16 keeps
 # fp32 master params and casts at dispatch (``_w``) with fp32 softmax and
 # fp32 score/output accumulation (``preferred_element_type`` above), so it

@@ -50,12 +50,39 @@ def rt_encode_fn(cfg):
                                                                 cfg))
 
 
-def encode_bucket(n: int) -> int:
-    """Pad target for an encode pass: next power of two >= max(n, 8),
-    bounding compiled shapes to ~log2(n_static) variants."""
-    b = 8
+@lru_cache(maxsize=64)
+def rt_encode_mesh_fn(cfg, n_shards: int):
+    """Sharded twin of ``rt_encode_fn``: the encode pass splits its row
+    axis over an ``n_shards``-device data mesh, so a cold table build
+    divides by mesh size.  Rows encode independently, so the assembled
+    table is byte-identical to the single-device build."""
+    from repro.launch.mesh import make_data_mesh
+    return jax.jit(pred_mod.sharded_encode_instructions(
+        cfg, make_data_mesh(n_shards)))
+
+
+# XLA CPU matmul results are row-independent of the batch dimension only
+# above ~32 rows — below that the backend may pick a different reduction
+# order (measured: a d_model=64 encode at 8 or 16 rows differs ~2.6e-6
+# from the same rows inside a >=32-row pass).  Keeping every encode pass
+# AND every per-device shard of one at >= 32 rows keeps the whole build
+# in one numerical equivalence class, so tables are bitwise reproducible
+# across flush patterns and mesh sizes.
+ENCODE_STABLE_MIN = 32
+
+
+def encode_bucket(n: int, align: int = 1) -> int:
+    """Pad target for an encode pass: next power of two >=
+    max(n, ENCODE_STABLE_MIN), bounding compiled shapes to
+    ~log2(n_static) variants while staying in the shape-stable kernel
+    class.  ``align`` (the mesh shard count x ENCODE_STABLE_MIN) rounds
+    the bucket up to a multiple so every device receives an equal-size,
+    stable-class row shard."""
+    b = ENCODE_STABLE_MIN
     while b < n:
         b *= 2
+    if align > 1:
+        b = (b + align - 1) // align * align
     return b
 
 
@@ -93,11 +120,17 @@ class RTCache:
     """
 
     def __init__(self, params, cfg, l_token: Optional[int] = None, *,
-                 capacity: int = 4096):
+                 capacity: int = 4096, n_shards: int = 0):
         self.params = params
         self.cfg = cfg
         self.l_token = l_token
-        self._encode = rt_encode_fn(cfg)
+        # n_shards = 0: single-device encode passes (the default);
+        # n_shards >= 1: encode passes shard their row axis over an
+        # n-device data mesh (EngineConfig.mesh_shape) — byte-identical
+        # table, build time divided by mesh size
+        self.n_shards = n_shards
+        self._encode = (rt_encode_mesh_fn(cfg, n_shards) if n_shards
+                        else rt_encode_fn(cfg))
         self._index: Dict[bytes, int] = {}
         self._table: Optional[jax.Array] = None
         self._capacity = capacity
@@ -162,7 +195,11 @@ class RTCache:
 
     def _flush(self, rows: np.ndarray, pending: Dict[bytes, int]) -> None:
         k = rows.shape[0]
-        bucket = encode_bucket(k)
+        # sharded: every device must get >= ENCODE_STABLE_MIN rows so its
+        # local pass stays in the same kernel class as the unsharded one
+        align = (self.n_shards * ENCODE_STABLE_MIN if self.n_shards
+                 else 1)
+        bucket = encode_bucket(k, align)
         if bucket != k:
             rows = np.concatenate(
                 [rows, np.zeros((bucket - k, self.l_token), np.int32)])

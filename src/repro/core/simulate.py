@@ -10,67 +10,61 @@ the accuracy comparison.
 ``capsim_simulate`` is the single-benchmark convenience wrapper over
 ``repro.core.engine.SimulationEngine`` — the multi-benchmark batch engine
 that shares one clip pool and one cached-jit predict step across programs.
-Use the engine directly when simulating more than one benchmark.
+Both wrappers are thin shells over ``SimulationEngine.from_config``: all
+knobs (trace scale, batching, precision, RT cache, device mesh) travel in
+one ``EngineConfig``.  The old loose keyword arguments still work but
+raise a ``DeprecationWarning``.  Use the engine directly when simulating
+more than one benchmark.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 from repro.core import standardize as std_mod
 from repro.core.engine import (MulticoreSimResult, SimResult,
                                SimulationEngine)
+from repro.core.engine_config import EngineConfig, legacy_engine_config
 from repro.isa import multicore as mc_mod
 from repro.isa import progen, timing
 
-__all__ = ["MulticoreSimResult", "SimResult", "capsim_simulate",
-           "capsim_simulate_multicore"]
+__all__ = ["EngineConfig", "MulticoreSimResult", "SimResult",
+           "capsim_simulate", "capsim_simulate_multicore"]
 
 
 def capsim_simulate(bench: progen.Benchmark, params, cfg,
-                    vocab: std_mod.Vocab, *,
-                    interval_size: int = 20_000, warmup: int = 2_000,
-                    max_checkpoints: int = 4, l_min: int = 100,
-                    l_clip: int = 128, l_token: int = 16,
-                    batch_size: int = 256, use_context: bool = True,
-                    with_oracle: bool = True,
-                    timing_params: timing.TimingParams =
-                    timing.TimingParams(),
-                    rt_cache: bool = True,
-                    precision: "str | None" = None) -> SimResult:
-    """``rt_cache`` (default on) serves clips from the static-instruction
-    RT table (bitwise-equal in fp32); ``precision`` None keeps cfg.dtype,
-    "fp32"/"bf16" select the inference numerics (bf16 is relative-error
-    bounded, not bitwise)."""
-    engine = SimulationEngine(
-        params, cfg, vocab, interval_size=interval_size, warmup=warmup,
-        max_checkpoints=max_checkpoints, l_min=l_min, l_clip=l_clip,
-        l_token=l_token, batch_size=batch_size, use_context=use_context,
-        with_oracle=with_oracle, timing_params=timing_params,
-        rt_cache=rt_cache, precision=precision)
+                    vocab: std_mod.Vocab,
+                    config: Optional[EngineConfig] = None, *,
+                    timing_params: Optional[timing.TimingParams] = None,
+                    **legacy) -> SimResult:
+    """One benchmark through ``SimulationEngine.from_config``.
+
+    ``config.rt_cache`` (default on) serves clips from the
+    static-instruction RT table (bitwise-equal in fp32);
+    ``config.precision`` None keeps cfg.dtype, "fp32"/"bf16" select the
+    inference numerics (bf16 is relative-error bounded, not bitwise); a
+    non-empty ``config.mesh_shape`` shards clip batches and RT-cache
+    encode passes over the data mesh (bitwise-equal to unsharded)."""
+    if legacy:
+        config = legacy_engine_config(config, legacy, "capsim_simulate")
+    engine = SimulationEngine.from_config(params, cfg, vocab, config,
+                                          timing_params=timing_params)
     return engine.simulate(bench)
 
 
 def capsim_simulate_multicore(mbench: mc_mod.MulticoreBenchmark, params,
-                              cfg, vocab: std_mod.Vocab, *,
-                              interval_size: int = 20_000,
-                              warmup: int = 2_000,
-                              max_checkpoints: int = 4, l_min: int = 100,
-                              l_clip: int = 128, l_token: int = 16,
-                              batch_size: int = 256,
-                              use_context: bool = True,
-                              with_oracle: bool = True,
-                              timing_params: timing.TimingParams =
-                              timing.TimingParams(),
-                              rt_cache: bool = True,
-                              precision: "str | None" = None,
-                              quantum: int = mc_mod.DEFAULT_QUANTUM
-                              ) -> MulticoreSimResult:
+                              cfg, vocab: std_mod.Vocab,
+                              config: Optional[EngineConfig] = None, *,
+                              timing_params:
+                              Optional[timing.TimingParams] = None,
+                              **legacy) -> MulticoreSimResult:
     """Single multicore-benchmark convenience wrapper over
     ``SimulationEngine.run_multicore``: N interleaved per-core functional
     sims feeding one pooled predictor (shared RT cache, core-id context
-    channel), demuxed per core and summed per benchmark."""
-    engine = SimulationEngine(
-        params, cfg, vocab, interval_size=interval_size, warmup=warmup,
-        max_checkpoints=max_checkpoints, l_min=l_min, l_clip=l_clip,
-        l_token=l_token, batch_size=batch_size, use_context=use_context,
-        with_oracle=with_oracle, timing_params=timing_params,
-        rt_cache=rt_cache, precision=precision)
-    return engine.run_multicore([mbench], quantum=quantum)[0]
+    channel), demuxed per core and summed per benchmark.  The scheduler
+    quantum travels as ``config.quantum`` (None = scheduler default)."""
+    if legacy:
+        config = legacy_engine_config(config, legacy,
+                                      "capsim_simulate_multicore")
+    engine = SimulationEngine.from_config(params, cfg, vocab, config,
+                                          timing_params=timing_params)
+    return engine.run_multicore([mbench])[0]

@@ -30,6 +30,25 @@ def make_test_mesh():
     return make_mesh_compat((1, 1), ("data", "model"))
 
 
+def make_data_mesh(n_shards: int):
+    """1-D pure data-parallel mesh over ``n_shards`` devices — the
+    inference-engine mesh (``EngineConfig.mesh_shape``): the predictor's
+    ~2M params replicate, clip batches shard over the single "data"
+    axis.  CI reaches 8 CPU shards via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set before
+    jax's first backend init)."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    have = len(jax.devices())
+    if n_shards > have:
+        raise ValueError(
+            f"mesh of {n_shards} devices requested but only {have} "
+            f"visible — on CPU, set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_shards} before "
+            "jax initializes its backend")
+    return make_mesh_compat((n_shards,), ("data",))
+
+
 def mesh_axis_sizes(mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 

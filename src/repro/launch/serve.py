@@ -3,35 +3,58 @@
 Runs the clip-parallel PredictorEngine over functional-sim requests from
 the synthetic suite (the CAPSim deployment), or a KV-cache decode loop for
 an LM-zoo arch (prefill + N decode steps on the smoke config).
+
+The capsim path is a thin wrapper over ``SimulationEngine.from_config``:
+flags assemble one ``EngineConfig`` (``--engine-config`` takes a JSON
+object or a path to one; individual flags override it).  ``--mesh N``
+shards inference over an N-device data mesh — on CPU the launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax's
+first backend init so N host devices exist.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
-import jax
-import jax.numpy as jnp
 
-from repro.configs import ShapeConfig, get_config, get_smoke_config
-from repro.distributed.sharding import (
-    LOGICAL_RULES_DECODE, use_mesh_and_rules)
-from repro.launch.mesh import make_test_mesh
+def _build_engine_config(args):
+    """Resolve --engine-config JSON (inline or @file) + flag overrides
+    into one EngineConfig.  Import is deferred: callers must be able to
+    set XLA_FLAGS before anything touches jax."""
+    from repro.core.engine_config import EngineConfig
+    if args.engine_config:
+        text = args.engine_config
+        if not text.lstrip().startswith("{"):
+            with open(text) as fh:
+                text = fh.read()
+        config = EngineConfig.from_json(text)
+    else:
+        config = EngineConfig()
+    overrides = dict(
+        interval_size=args.interval_size, warmup=0, max_checkpoints=1,
+        l_min=100, batch_size=args.batch_size, with_oracle=False,
+        rt_cache=not args.no_rt_cache, precision=args.precision,
+        multicore=args.multicore)
+    if args.mesh:
+        overrides["mesh_shape"] = (args.mesh,)
+    return config.replace(**overrides)
 
 
 def serve_capsim(args) -> None:
+    import jax
+
+    from repro.configs import get_config
     from repro.core import predictor
     from repro.core import standardize as std_mod
     from repro.core.engine import SimulationEngine
     from repro.isa import multicore, progen
 
+    config = _build_engine_config(args)
     vocab = std_mod.build_vocab()
     cfg = get_config("capsim").replace(dtype="float32")
     params = predictor.init_params(cfg, jax.random.PRNGKey(0))
-    engine = SimulationEngine(
-        params, cfg, vocab, interval_size=args.interval_size, warmup=0,
-        max_checkpoints=1, l_min=100, batch_size=args.batch_size,
-        with_oracle=False, rt_cache=not args.no_rt_cache,
-        precision=args.precision)
+    engine = SimulationEngine.from_config(params, cfg, vocab, config)
 
     if args.multicore > 0:
         # multicore serving: (benchmark, core) shards through the same
@@ -73,6 +96,13 @@ def serve_capsim(args) -> None:
 
 
 def serve_lm(args) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import ShapeConfig, get_smoke_config
+    from repro.distributed.sharding import (
+        LOGICAL_RULES_DECODE, use_mesh_and_rules)
+    from repro.launch.mesh import make_test_mesh
     from repro.launch.specs import random_batch
     from repro.models import transformer as tfm
 
@@ -130,7 +160,23 @@ def main() -> None:
                     help="inference numerics; default keeps the config "
                          "dtype (fp32 here).  bf16 casts fp32 params at "
                          "dispatch, keeps fp32 softmax/accumulation")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="shard inference over an N-device data mesh "
+                         "(predict dispatch + RT-cache encode passes; "
+                         "bitwise-equal to unsharded).  0 = no mesh")
+    ap.add_argument("--engine-config", default=None, metavar="JSON",
+                    help="EngineConfig as a JSON object or a path to a "
+                         "JSON file; individual flags override its "
+                         "fields")
     args = ap.parse_args()
+    if args.mesh:
+        # must land before jax's first backend init: jax locks the host
+        # device count the moment a backend spins up
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.mesh}").strip()
     if args.arch == "capsim":
         serve_capsim(args)
     else:

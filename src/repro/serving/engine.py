@@ -34,6 +34,7 @@ import numpy as np
 from repro.core import context as ctx_mod
 from repro.core import predictor as pred_mod
 from repro.core.engine import BatchedPredictor
+from repro.core.engine_config import EngineConfig, legacy_engine_config
 from repro.core.rt_cache import RTCache, RTCacheStats
 
 
@@ -56,19 +57,39 @@ class Result:
 
 
 class PredictorEngine:
-    def __init__(self, params, cfg, *, batch_size: int = 256,
-                 use_context: bool = True, max_in_flight: int = 2,
-                 rt_cache: bool = True,
-                 precision: Optional[str] = None):
+    """Construction is config-first: batching, precision, RT cache and
+    the device mesh all travel in one ``EngineConfig`` (a non-empty
+    ``mesh_shape`` shards every flush's device batches AND the RT-cache
+    encode passes over the data mesh, bitwise equal to unsharded).  The
+    old loose keyword arguments (``batch_size=``, ``precision=``, ...)
+    still work but raise a ``DeprecationWarning``."""
+
+    def __init__(self, params, cfg,
+                 config: Optional[EngineConfig] = None, **legacy):
+        if legacy:
+            config = legacy_engine_config(config, legacy,
+                                          "PredictorEngine")
+        config = config or EngineConfig()
+        self.config = config
         self.params = params
-        self.cfg = pred_mod.inference_config(cfg, precision)
-        self.batch_size = batch_size
-        self.use_context = use_context
-        self.max_in_flight = max_in_flight
+        self.cfg = pred_mod.inference_config(cfg, config.precision)
+        self.batch_size = config.batch_size
+        self.use_context = config.use_context
+        self.max_in_flight = config.max_in_flight
         # params are pinned for the engine's lifetime, so the RT table
-        # survives across flushes: only unseen static rows ever encode
-        self._cache = (RTCache(params, self.cfg) if rt_cache else None)
+        # survives across flushes: only unseen static rows ever encode.
+        # The cache shares the engine's mesh: encode passes shard too.
+        self._cache = (RTCache(params, self.cfg,
+                               n_shards=config.n_shards)
+                       if config.rt_cache else None)
         self._pending: List[Request] = []
+
+    @classmethod
+    def from_config(cls, params, cfg,
+                    config: Optional[EngineConfig] = None
+                    ) -> "PredictorEngine":
+        """Canonical constructor (mirrors ``SimulationEngine``)."""
+        return cls(params, cfg, config)
 
     @property
     def rt_stats(self) -> Optional[RTCacheStats]:
@@ -88,10 +109,9 @@ class PredictorEngine:
         self._pending = []
         t0 = time.time()
 
-        backend = BatchedPredictor(
-            self.params, self.cfg, batch_size=self.batch_size,
-            use_context=self.use_context, max_in_flight=self.max_in_flight,
-            rt_cache=self._cache)
+        backend = BatchedPredictor(self.params, self.cfg,
+                                   config=self.config,
+                                   rt_cache=self._cache)
         for r in reqs:
             backend.add(r.clip_tokens, r.context_tokens, r.clip_mask)
         times = backend.drain()

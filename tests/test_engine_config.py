@@ -1,0 +1,199 @@
+"""EngineConfig: the unified construction surface (PR 6 satellite).
+
+Covers: validation + JSON round trip, the deprecated kwarg shims on all
+four entry points (warn AND produce the same engine behavior as the
+config path), and ``from_config`` equivalence.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import predictor
+from repro.core import standardize as std_mod
+from repro.core.engine import BatchedPredictor, SimulationEngine
+from repro.core.engine_config import EngineConfig, legacy_engine_config
+from repro.core.simulate import capsim_simulate, capsim_simulate_multicore
+from repro.isa import multicore, progen
+from repro.serving.engine import PredictorEngine, Request
+
+SMALL_CFG = get_config("capsim").replace(d_model=32, head_dim=8, d_ff=64,
+                                         dtype="float32")
+EC = EngineConfig(interval_size=1_000, warmup=100, max_checkpoints=1,
+                  batch_size=16)
+
+
+@pytest.fixture(scope="module")
+def vocab():
+    return std_mod.build_vocab()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return predictor.init_params(SMALL_CFG, jax.random.PRNGKey(0))
+
+
+# ------------------------------ the dataclass ------------------------------ #
+
+def test_defaults_unsharded():
+    ec = EngineConfig()
+    assert ec.mesh_shape == ()
+    assert ec.n_shards == 0
+    assert ec.rt_cache and ec.use_context and ec.with_oracle
+
+
+def test_mesh_shape_normalization():
+    assert EngineConfig(mesh_shape=4).mesh_shape == (4,)
+    assert EngineConfig(mesh_shape=[2, 2]).mesh_shape == (2, 2)
+    assert EngineConfig(mesh_shape=[2, 2]).n_shards == 4
+    assert EngineConfig(mesh_shape=(1,)).n_shards == 1
+
+
+def test_frozen():
+    ec = EngineConfig()
+    with pytest.raises(Exception):
+        ec.batch_size = 8
+
+
+@pytest.mark.parametrize("bad", [
+    dict(mesh_shape=(0,)),
+    dict(mesh_shape=(-2,)),
+    dict(precision="fp16"),
+    dict(batch_size=0),
+    dict(batch_size=10, mesh_shape=(4,)),   # not divisible
+    dict(multicore=-1),
+    dict(peer_channels=True),               # needs multicore >= 1
+    dict(quantum=0),
+])
+def test_validate_rejects(bad):
+    with pytest.raises(ValueError):
+        EngineConfig(**bad)
+
+
+def test_json_round_trip():
+    ec = EngineConfig(mesh_shape=(8,), precision="bf16", batch_size=64,
+                      multicore=2, quantum=32, peer_channels=True)
+    assert EngineConfig.from_json(ec.to_json()) == ec
+    # mesh_shape serializes as a list but round-trips to a tuple
+    assert isinstance(ec.to_dict()["mesh_shape"], list)
+
+
+def test_from_dict_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown EngineConfig fields"):
+        EngineConfig.from_dict({"batch_sized": 4})
+
+
+def test_legacy_helper_unknown_name_is_type_error():
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        legacy_engine_config(None, {"batch_sized": 4}, "X")
+
+
+def test_legacy_helper_folds_and_warns():
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        ec = legacy_engine_config(EngineConfig(l_min=50),
+                                  {"batch_size": 8}, "X")
+    assert ec.batch_size == 8 and ec.l_min == 50
+
+
+# ------------------------------ entry points ------------------------------ #
+
+def test_capsim_simulate_shim_equivalent(params, vocab):
+    bench = progen.build_benchmark("505.mcf")
+    ref = capsim_simulate(bench, params, SMALL_CFG, vocab, EC)
+    with pytest.warns(DeprecationWarning):
+        shim = capsim_simulate(bench, params, SMALL_CFG, vocab,
+                               interval_size=1_000, warmup=100,
+                               max_checkpoints=1, batch_size=16)
+    assert shim.predicted_cycles == ref.predicted_cycles
+    assert shim.oracle_cycles == ref.oracle_cycles
+
+
+def test_capsim_simulate_multicore_shim_equivalent(params, vocab):
+    mb = multicore.build_multicore_benchmark(
+        list(multicore.MULTICORE_NAMES)[0], 2)
+    ref = capsim_simulate_multicore(mb, params, SMALL_CFG, vocab, EC)
+    with pytest.warns(DeprecationWarning):
+        shim = capsim_simulate_multicore(
+            mb, params, SMALL_CFG, vocab, interval_size=1_000,
+            warmup=100, max_checkpoints=1, batch_size=16)
+    assert shim.predicted_cycles == ref.predicted_cycles
+    assert [c.predicted_cycles for c in shim.cores] == \
+        [c.predicted_cycles for c in ref.cores]
+
+
+def test_simulation_engine_shim_and_from_config(params, vocab):
+    bench = progen.build_benchmark("541.leela")
+    ref = SimulationEngine.from_config(params, SMALL_CFG, vocab, EC)
+    r_ref = ref.run([bench])[0]
+    with pytest.warns(DeprecationWarning):
+        shim = SimulationEngine(params, SMALL_CFG, vocab,
+                                interval_size=1_000, warmup=100,
+                                max_checkpoints=1, batch_size=16)
+    assert shim.config == EC
+    assert shim.run([bench])[0].predicted_cycles == r_ref.predicted_cycles
+    # engine-internal BatchedPredictor construction must not warn
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        SimulationEngine.from_config(params, SMALL_CFG, vocab,
+                                     EC).run([bench])
+
+
+def test_simulation_engine_unknown_kwarg_raises(params, vocab):
+    with pytest.raises(TypeError):
+        SimulationEngine(params, SMALL_CFG, vocab, batch_sized=4)
+
+
+def test_batched_predictor_shim(params, vocab):
+    rng = np.random.RandomState(0)
+    tok = rng.randint(0, vocab.size, (5, 128, SMALL_CFG.clip_tokens)
+                      ).astype(np.int32)
+    ctx = rng.randint(0, vocab.size, (5, SMALL_CFG.context_tokens)
+                      ).astype(np.int32)
+    mask = np.ones((5, 128), np.float32)
+    ref = BatchedPredictor(params, SMALL_CFG,
+                           config=EngineConfig(batch_size=16))
+    ref.add(tok, ctx, mask)
+    with pytest.warns(DeprecationWarning):
+        shim = BatchedPredictor(params, SMALL_CFG, batch_size=16)
+    shim.add(tok, ctx, mask)
+    assert np.array_equal(shim.drain(), ref.drain())
+
+
+def test_predictor_engine_shim(params, vocab):
+    rng = np.random.RandomState(1)
+    tok = rng.randint(0, vocab.size, (4, 128, SMALL_CFG.clip_tokens)
+                      ).astype(np.int32)
+    ctx = rng.randint(0, vocab.size, (4, SMALL_CFG.context_tokens)
+                      ).astype(np.int32)
+    req = Request(0, tok, ctx, np.ones((4, 128), np.float32))
+    ref = PredictorEngine.from_config(params, SMALL_CFG,
+                                      EngineConfig(batch_size=8))
+    ref.submit(req)
+    r_ref = ref.flush()[0]
+    with pytest.warns(DeprecationWarning):
+        shim = PredictorEngine(params, SMALL_CFG, batch_size=8)
+    shim.submit(req)
+    assert shim.flush()[0].total_cycles == r_ref.total_cycles
+
+
+def test_peer_channels_reserved(params, vocab):
+    ec = EC.replace(multicore=2, peer_channels=True)
+    engine = SimulationEngine.from_config(params, SMALL_CFG, vocab, ec)
+    mb = multicore.build_multicore_benchmark(
+        list(multicore.MULTICORE_NAMES)[0], 2)
+    with pytest.raises(NotImplementedError, match="peer_channels"):
+        engine.run_multicore([mb])
+
+
+def test_quantum_flows_from_config(params, vocab):
+    mb = multicore.build_multicore_benchmark(
+        list(multicore.MULTICORE_NAMES)[0], 2)
+    ref = SimulationEngine.from_config(
+        params, SMALL_CFG, vocab, EC).run_multicore(
+            [mb], quantum=32)[0]
+    via_cfg = SimulationEngine.from_config(
+        params, SMALL_CFG, vocab,
+        EC.replace(quantum=32)).run_multicore([mb])[0]
+    assert via_cfg.predicted_cycles == ref.predicted_cycles

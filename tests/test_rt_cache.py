@@ -127,8 +127,9 @@ def test_rt_cache_dedupe_and_pad_row(params):
 
 
 def test_encode_bucket():
-    assert encode_bucket(1) == 8 and encode_bucket(8) == 8
-    assert encode_bucket(9) == 16 and encode_bucket(500) == 512
+    # floor 32 = the shape-stable kernel class (see ENCODE_STABLE_MIN)
+    assert encode_bucket(1) == 32 and encode_bucket(32) == 32
+    assert encode_bucket(33) == 64 and encode_bucket(500) == 512
 
 
 def test_fixed_clip_indices_matches_encode_fixed_clips():
