@@ -31,8 +31,10 @@ VOCAB = build_vocab()
 # Stamped into every bench JSON (writers) and checked FIRST by the CI
 # gate readers: a field rename bumps this and fails the gate loudly
 # instead of KeyError-ing halfway through a reader.  v1 = the implicit
-# pre-stamp schema; v2 adds the stamp itself + the multicore breakdown.
-BENCH_SCHEMA_VERSION = 2
+# pre-stamp schema; v2 adds the stamp itself + the multicore breakdown;
+# v4 adds the predict_stack tier ladder (fused / int8 / fused+int8 warm
+# passes) and the rt_store restart block to the --multi artifact.
+BENCH_SCHEMA_VERSION = 4
 
 # The mesh-scaling JSON (bench_speed --mesh) is a NEW artifact with its
 # own reader, so it gets its own stamp: v3 = v2 fields + the per-mesh

@@ -90,6 +90,14 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return step
 
 
+def read_manifest(step: int, ckpt_dir: str, *, host: int = 0) -> dict:
+    """Load a step's manifest (entries + metadata) without touching the
+    array files — how the RT-cache store validates its content key before
+    paying the restore."""
+    final = Path(ckpt_dir) / f"step_{step:08d}"
+    return json.loads((final / f"manifest.h{host}.json").read_text())
+
+
 def restore(state_like, step: int, ckpt_dir: str, *, host: int = 0,
             shardings=None):
     """Rebuild the state tree from disk.  ``state_like`` provides the tree

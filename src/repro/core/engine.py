@@ -112,6 +112,31 @@ def predict_cached_fn(cfg, use_context: bool = True):
 
 
 @lru_cache(maxsize=64)
+def serving_plan_fn(cfg):
+    """Cached jit'd per-table-version precompute for the fused serving
+    step (``predictor.serving_plan``): cross-attention K/V projections
+    of every RT row.  Rebuilt only when the table object changes."""
+    return jax.jit(lambda p, table: pred_mod.serving_plan(p, table, cfg))
+
+
+@lru_cache(maxsize=64)
+def predict_cached_fused_fn(cfg):
+    """Cached jit'd fused serving step: deduped-context weighted
+    attention over precomputed cross K/V (``forward_cached_fused``)."""
+    return jax.jit(lambda p, plan, b: pred_mod.forward_cached_fused(
+        p, plan, b, cfg))
+
+
+@lru_cache(maxsize=64)
+def predict_cached_fused_mesh_fn(cfg, n_shards: int):
+    """Sharded twin of ``predict_cached_fused_fn``: the batch axis splits
+    over the data mesh; params, RT table and plan replicate."""
+    from repro.launch.mesh import make_data_mesh
+    return jax.jit(pred_mod.sharded_forward_cached_fused(
+        cfg, make_data_mesh(n_shards)))
+
+
+@lru_cache(maxsize=64)
 def predict_mesh_fn(cfg, use_context: bool, n_shards: int):
     """Sharded twin of ``predict_fn``: the batch axis splits over an
     n-device data mesh (params replicated) — bitwise equal to the
@@ -201,7 +226,10 @@ class BatchedPredictor:
     indices instead of token tensors and dispatch through the
     block-encoder-only ``forward_cached`` step — feed them via
     ``add_indexed`` (trace engine) or plain ``add`` (tokenized requests
-    are deduped through the cache first).
+    are deduped through the cache first).  ``config.fused_serving``
+    additionally dedupes each batch's context rows on the host and
+    dispatches through ``forward_cached_fused`` over a per-table-version
+    cross-K/V serving plan (tolerance-gated ≤1e-3 vs the unfused path).
 
     Construction is config-first: ``config`` (an ``EngineConfig``)
     supplies batch size, precision, mesh shape, context ablation and
@@ -230,16 +258,30 @@ class BatchedPredictor:
         self.max_in_flight = config.max_in_flight
         use_context = config.use_context
         self._cache = rt_cache
+        self._fused = config.fused_serving
+        self._plan = None          # serving_plan for the current table
+        self._plan_src: Optional[jax.Array] = None
+        if self._fused and rt_cache is None:
+            raise ValueError(
+                "fused_serving requires an RTCache (the fused step IS "
+                "the RT-gather + block encoder)")
         if rt_cache is not None:
             # the table is a pure function of (params, cfg numerics +
             # kernel); any mismatch silently breaks the bitwise contract
             assert rt_cache.params is params and rt_cache.cfg == self.cfg, \
                 "RT cache must be built with the same params and " \
                 "resolved config as the predict step"
-            self._predict = (
-                predict_cached_mesh_fn(self.cfg, use_context, self._shards)
-                if self._shards
-                else predict_cached_fn(self.cfg, use_context))
+            if self._fused:
+                self._predict = (
+                    predict_cached_fused_mesh_fn(self.cfg, self._shards)
+                    if self._shards
+                    else predict_cached_fused_fn(self.cfg))
+            else:
+                self._predict = (
+                    predict_cached_mesh_fn(self.cfg, use_context,
+                                           self._shards)
+                    if self._shards
+                    else predict_cached_fn(self.cfg, use_context))
         else:
             self._predict = (
                 predict_mesh_fn(self.cfg, use_context, self._shards)
@@ -328,7 +370,17 @@ class BatchedPredictor:
             assert tok.shape[0] >= self._shards \
                 and tok.shape[0] % self._shards == 0, \
                 (tok.shape[0], self._shards)
-        if self._cache is not None:
+        if self._fused:
+            # host-side context dedup (~ms per batch): the fused step
+            # attends over each row's unique tokens with multiplicity
+            # weights instead of all M context rows
+            uniq, counts = std_mod.dedupe_context_tokens(ctx)
+            batch = {"rt_idx": jnp.asarray(tok),
+                     "ctx_uniq": jnp.asarray(uniq),
+                     "ctx_count": jnp.asarray(counts),
+                     "clip_mask": jnp.asarray(mask)}
+            out = self._predict(self.params, self._serving_plan(), batch)
+        elif self._cache is not None:
             batch = {"rt_idx": jnp.asarray(tok),
                      "context_tokens": jnp.asarray(ctx),
                      "clip_mask": jnp.asarray(mask)}
@@ -346,6 +398,17 @@ class BatchedPredictor:
         while len(self._pending) > self.max_in_flight:
             self._retire()
         self.stats.dispatch_seconds += time.time() - t0
+
+    def _serving_plan(self):
+        """Per-table-version cross K/V plan: rebuilt when (and only when)
+        the cache table object changes — ``ensure_rows`` growth replaces
+        the (immutable) array, and holding the strong reference in
+        ``_plan_src`` makes the identity check GC-safe."""
+        table = self._cache.table
+        if self._plan is None or self._plan_src is not table:
+            self._plan = serving_plan_fn(self.cfg)(self.params, table)
+            self._plan_src = table
+        return self._plan
 
     def _retire(self) -> None:
         out, n_real = self._pending.popleft()
@@ -465,6 +528,13 @@ class SimulationEngine:
                                           "SimulationEngine")
         config = config or EngineConfig()
         self.config = config
+        if config.precision == "int8":
+            # per-channel weight fake-quantization at engine build: the
+            # cache, plan and predict step all see the SAME quantized
+            # tree, so the bitwise params-identity contract holds within
+            # the engine (and the RT store keys on the quantized bytes)
+            from repro.core import quant
+            params = quant.quantize_dequant_params(params)
         self.params = params
         self.cfg = pred_mod.inference_config(cfg, config.precision)
         self.vocab = vocab
@@ -485,8 +555,12 @@ class SimulationEngine:
         # one cache per engine: params are pinned at construction, so the
         # table never goes stale; new programs just append unseen rows.
         # The cache shares the engine's mesh: encode passes shard too.
+        # With rt_store_dir the cache loads (or later persists) the
+        # table under a (params, cfg, l_token, vocab) content key.
         self._rt_cache = (RTCache(self.params, self.cfg, config.l_token,
-                                  n_shards=config.n_shards)
+                                  n_shards=config.n_shards,
+                                  store_dir=config.rt_store_dir,
+                                  store_extra=vocab.signature())
                           if config.rt_cache else None)
         self._queue: List[progen.Benchmark] = []
         self.last_stats: Optional[PredictorStats] = None
@@ -610,6 +684,8 @@ class SimulationEngine:
                                 - (rt_stats.build_seconds - b0))
             offset = job.offset + job.n_clips
         preds = pred.drain()
+        if self._rt_cache is not None:
+            self._rt_cache.persist()          # no-op without a store_dir
         self.last_stats = pred.stats
         self.last_rt_stats = (dataclasses.replace(rt_stats)
                               if self._rt_cache is not None else None)
@@ -739,6 +815,8 @@ class SimulationEngine:
                 job.func_seconds = mb_seconds * (job.n_clips / mb_clips)
 
         preds = pred.drain()
+        if self._rt_cache is not None:
+            self._rt_cache.persist()          # no-op without a store_dir
         self.last_stats = pred.stats
         self.last_rt_stats = (dataclasses.replace(rt_stats)
                               if self._rt_cache is not None else None)

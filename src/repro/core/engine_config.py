@@ -17,8 +17,16 @@ Field groups:
                 whose product is n) shards clip batches n ways via
                 ``shard_map`` over a 1-D "data" mesh — bitwise equal to
                 unsharded because clips are row-independent.
-  numerics      ``precision`` (None keeps cfg.dtype; "fp32"/"bf16"),
-                ``rt_cache``, ``use_context``.
+  numerics      ``precision`` (None keeps cfg.dtype; the ladder is
+                "fp32" bitwise -> "bf16" ≤1% rel err -> "int8"
+                per-channel weight quant, fp32 compute, ≤1% rel err),
+                ``rt_cache``, ``use_context``, ``fused_serving`` (the
+                dedup-fused block-encoder serving step; requires
+                rt_cache + use_context, tolerance-gated ≤1e-3 vs the
+                unfused path), ``rt_store_dir`` (persistent
+                content-addressed RT-cache store; None = in-memory
+                only).  Precision is validated HERE at construction,
+                not at first dispatch inside ``inference_config``.
   batching      ``batch_size`` (must divide by the mesh size so no
                 shard is ever empty), ``max_in_flight``.
   trace scale   ``interval_size``, ``warmup``, ``max_checkpoints``,
@@ -40,7 +48,7 @@ import json
 import warnings
 from typing import Any, Dict, Mapping, Optional, Tuple
 
-PRECISIONS = (None, "fp32", "bf16")
+PRECISIONS = (None, "fp32", "bf16", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +59,8 @@ class EngineConfig:
     precision: Optional[str] = None
     rt_cache: bool = True
     use_context: bool = True
+    fused_serving: bool = False
+    rt_store_dir: Optional[str] = None
     # --- batching ---
     batch_size: int = 256
     max_in_flight: int = 2
@@ -95,6 +105,16 @@ class EngineConfig:
             raise ValueError(
                 f"precision must be one of {PRECISIONS}, "
                 f"got {self.precision!r}")
+        if self.fused_serving and not (self.rt_cache and self.use_context):
+            raise ValueError(
+                "fused_serving requires rt_cache=True and "
+                "use_context=True (the fused step is the RT-gather + "
+                "context block encoder)")
+        if self.rt_store_dir is not None and not isinstance(
+                self.rt_store_dir, str):
+            raise ValueError(
+                f"rt_store_dir must be a path string or None, "
+                f"got {self.rt_store_dir!r}")
         if self.batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, "
                              f"got {self.batch_size}")

@@ -333,6 +333,115 @@ def forward_cached(params, rt_table, batch, cfg, use_context: bool = True):
 
 
 # --------------------------------------------------------------------------- #
+# Fused serving step (EngineConfig.fused_serving)
+# --------------------------------------------------------------------------- #
+#
+# Two exact identities collapse the per-batch work of ``forward_cached``:
+#
+# 1. Cross-attention K/V are linear in the kv input, and the kv input is
+#    rt_table[rt_idx] + posenc — so per layer
+#        K = (table @ cross_wk)[rt_idx] + (posenc @ cross_wk)
+#    and ``serving_plan`` precomputes (table @ cross_wk/wv) ONCE per table
+#    version.  The per-batch cost of the (B, L, E) rt gather, the posenc
+#    add, and all 8 cross K/V projections drops to a (B, L, H·Dh) gather.
+#
+# 2. The block encoder adds no positional encoding to the context stream,
+#    so it is permutation-equivariant over context rows: self-attention
+#    over the M=360 context tokens equals *weighted* attention over the
+#    ~64-128 unique tokens with multiplicity weights, and the head's
+#    arithmetic mean equals the count-weighted mean (Σ c_u·y_u / M).  The
+#    host dedupes each row (``standardize.dedupe_context_tokens``, ~2 ms
+#    per batch) and the device runs the whole block stack at U instead of
+#    M rows — a >5x serving win at full scale, exact up to fp
+#    reassociation.
+
+def serving_plan(params, rt_table, cfg):
+    """Per-table-version precompute for ``forward_cached_fused``: the
+    cross-attention K/V projections of every RT row, (L_layers, N, H·Dh).
+    Rebuild whenever the RT table grows (the engine keys on table
+    identity); ~ms at full scale."""
+    dt = cfg.dtype
+    table = rt_table.astype(dt)
+    blk = params["block"]
+    return {
+        "cross_kt": jnp.einsum("ne,led->lnd", table,
+                               blk["cross_wk"].astype(dt)),
+        "cross_vt": jnp.einsum("ne,led->lnd", table,
+                               blk["cross_wv"].astype(dt)),
+    }
+
+
+def _weighted_mha(q, k, v, weight, cfg):
+    """Multi-head weighted attention over already-projected q/k/v
+    ((B, S, H·Dh)); weight (B, Skv) f32 multiplicities."""
+    from repro.kernels.fused_serving import ops as wa_ops
+    B, Sq = q.shape[0], q.shape[1]
+    o = wa_ops.weighted_attention(_heads(q, cfg), _heads(k, cfg),
+                                  _heads(v, cfg), weight,
+                                  impl=cfg.attn_impl)
+    return o.reshape(B, Sq, -1)
+
+
+def forward_cached_fused(params, plan, batch, cfg):
+    """Fused serving twin of ``forward_cached`` (context path only).
+
+    batch carries rt_idx (B, L_clip) int32, ctx_uniq (B, U) int32 deduped
+    context token ids, ctx_count (B, U) f32 multiplicities (summing to M
+    per row), clip_mask (B, L_clip).  ``plan`` is ``serving_plan`` for the
+    current rt_table.  Returns predicted clip times (B,) in cycles, equal
+    to ``forward_cached`` on the un-deduped batch up to fp reassociation
+    (gated ≤1e-3 rel err; measured ~4e-7 at full scale).
+    """
+    idx = batch["rt_idx"]
+    cw = batch["ctx_count"].astype(jnp.float32)
+    clip_mask = batch["clip_mask"].astype(jnp.float32)
+    L = idx.shape[1]
+    dt = cfg.dtype
+    blk = params["block"]
+
+    pos = _sinusoidal(L, cfg.d_model, dt)
+    pk = jnp.einsum("je,led->ljd", pos, blk["cross_wk"].astype(dt))
+    pv = jnp.einsum("je,led->ljd", pos, blk["cross_wv"].astype(dt))
+    k_all = plan["cross_kt"][:, idx] + pk[:, None]       # (Lyr, B, L, HDh)
+    v_all = plan["cross_vt"][:, idx] + pv[:, None]
+    wqkv = jnp.concatenate(
+        [blk["self_wq"], blk["self_wk"], blk["self_wv"]],
+        axis=-1).astype(dt)                              # (Lyr, E, 3·HDh)
+
+    h = params["embed"][batch["ctx_uniq"]].astype(dt)    # (B, U, E)
+
+    def layer(carry, xs):
+        lp, wqkv_l, k_l, v_l = xs
+        h = carry
+        qkv = jnp.einsum("bud,dh->buh", rms_norm(h, lp["norm1"]), wqkv_l)
+        q, sk, sv = jnp.split(qkv, 3, axis=-1)
+        o = _weighted_mha(q, sk, sv, cw, cfg)
+        h = h + jnp.einsum("buh,hd->bud", o,
+                           _w(lp, "self_wo", cfg)).astype(h.dtype)
+        q2 = jnp.einsum("bud,dh->buh", rms_norm(h, lp["norm2"]),
+                        _w(lp, "cross_wq", cfg))
+        o2 = _weighted_mha(q2, k_l, v_l, clip_mask, cfg)
+        h = h + jnp.einsum("buh,hd->bud", o2,
+                           _w(lp, "cross_wo", cfg)).astype(h.dtype)
+        h = h + _ffn(lp, rms_norm(h, lp["norm3"]), cfg)
+        return shard_logical(h, "batch", None, None), None
+
+    h, _ = jax.lax.scan(layer, h, (blk, wqkv, k_all, v_all))
+
+    h = rms_norm(h, params["final_norm"])
+    hw = params["head"]
+    h = jax.nn.gelu(jnp.einsum("bud,df->buf", h, hw["w1"].astype(dt))
+                    + hw["b1"].astype(dt))
+    y = (jnp.einsum("buf,fo->buo", h, hw["w2"].astype(dt))
+         + hw["b2"].astype(dt))[..., 0]
+    y = y.astype(jnp.float32)
+    # head mean over the M context rows == count-weighted mean over uniques
+    cpi = (y * cw).sum(-1) / jnp.maximum(cw.sum(-1), 1.0)
+    n_inst = jnp.maximum(clip_mask.sum(-1), 1.0)
+    return jax.nn.softplus(cpi) * n_inst
+
+
+# --------------------------------------------------------------------------- #
 # Multi-device sharded inference (EngineConfig.mesh_shape)
 # --------------------------------------------------------------------------- #
 #
@@ -376,6 +485,21 @@ def sharded_forward_cached(cfg, use_context: bool, mesh):
         out_specs=P(mesh.axis_names[0]))
 
 
+def sharded_forward_cached_fused(cfg, mesh):
+    """``forward_cached_fused`` shard_mapped over the batch axis; params,
+    RT table and serving plan replicate."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import compat_shard_map
+    data = P(mesh.axis_names[0])
+    specs = {"rt_idx": data, "ctx_uniq": data, "ctx_count": data,
+             "clip_mask": data}
+    return compat_shard_map(
+        lambda p, plan, b: forward_cached_fused(p, plan, b, cfg),
+        mesh=mesh, in_specs=(P(), P(), specs),
+        out_specs=P(mesh.axis_names[0]))
+
+
 def sharded_encode_instructions(cfg, mesh):
     """``encode_instructions`` shard_mapped over the static-row axis:
     the RT-cache *build* divides by mesh size while the resulting table
@@ -392,8 +516,14 @@ def sharded_encode_instructions(cfg, mesh):
 # Inference precision knob: fp32 is the bitwise-reference mode; bf16 keeps
 # fp32 master params and casts at dispatch (``_w``) with fp32 softmax and
 # fp32 score/output accumulation (``preferred_element_type`` above), so it
-# is relative-error-bounded rather than bitwise.
-PRECISION_DTYPES = {"fp32": "float32", "bf16": "bfloat16"}
+# is relative-error-bounded rather than bitwise.  int8 is *storage*
+# precision: weights are per-channel fake-quantized once at engine build
+# (``core.quant.quantize_dequant_params``) and all compute stays fp32 —
+# measured, XLA's CPU int8 dot is ~5x slower than f32, so int8 compute
+# would be a regression on this backend while fp32-on-quantized-weights
+# measures exactly the deployment error (gated ≤1%).
+PRECISION_DTYPES = {"fp32": "float32", "bf16": "bfloat16",
+                    "int8": "float32"}
 
 
 def inference_config(cfg, precision: Optional[str] = None):

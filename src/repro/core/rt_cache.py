@@ -26,21 +26,59 @@ Invalidation: entries are pure functions of (params, cfg numerics, row
 bytes).  The cache pins the params it was built with — build a fresh
 ``RTCache`` (or engine) when params change; new *programs* never
 invalidate anything, their unseen rows are simply appended.
+
+Persistence (``store_dir``): the (row bytes -> RT vector) table can be
+checkpointed to disk via ``checkpoint/ckpt.py`` under a content key
+hashing (params bytes, model config, l_token, extra — by convention the
+vocab signature).  A fresh cache with a matching key adopts the stored
+table byte-identically instead of re-encoding (a full-scale cold build is
+~49 s); ANY key component changing — retrained params, different
+numerics, new vocabulary — lands on a different store path, so stale rows
+are structurally unservable.  A corrupt or truncated store warns and
+falls back to the cold encode.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
+import warnings
 from functools import lru_cache
+from pathlib import Path
 from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import ckpt
 from repro.core import predictor as pred_mod
 
 PAD_ROW_ID = 0
+
+# Bump when the persisted layout/semantics change: old stores then fail
+# the metadata check and rebuild cold instead of being misread.
+RT_STORE_VERSION = 1
+
+
+def rt_store_key(params, cfg, l_token: Optional[int] = None,
+                 extra: str = "") -> str:
+    """Content key for the persistent RT store: a hash over the exact
+    parameter bytes, the model config repr (numerics/dtype/attn choices
+    included), the token-row width, and ``extra`` (the vocab signature by
+    convention).  Equal keys => bitwise-equal tables."""
+    h = hashlib.sha256()
+    flat = ckpt._flatten(params)
+    for key in sorted(flat):
+        arr = np.asarray(flat[key])
+        h.update(key.encode())
+        h.update(str(arr.shape).encode())
+        h.update(str(arr.dtype).encode())
+        h.update(arr.tobytes())
+    h.update(repr(cfg).encode())
+    h.update(str(l_token).encode())
+    h.update(extra.encode())
+    return h.hexdigest()[:32]
 
 
 @lru_cache(maxsize=64)
@@ -93,6 +131,8 @@ class RTCacheStats:
     n_rows_served: int = 0         # dynamic (unmasked) rows answered by gather
     n_lookups: int = 0             # rows presented to ensure_rows
     build_seconds: float = 0.0     # wall time inside ensure_rows
+    n_rows_loaded: int = 0         # rows adopted from the persistent store
+    store_load_seconds: float = 0.0  # wall time inside _load_store
 
     @property
     def rows_avoided(self) -> int:
@@ -105,7 +145,9 @@ class RTCacheStats:
                 "rt_rows_served": self.n_rows_served,
                 "rt_rows_avoided": self.rows_avoided,
                 "rt_lookups": self.n_lookups,
-                "rt_build_seconds": self.build_seconds}
+                "rt_build_seconds": self.build_seconds,
+                "rt_rows_loaded": self.n_rows_loaded,
+                "rt_store_load_seconds": self.store_load_seconds}
 
 
 class RTCache:
@@ -120,7 +162,8 @@ class RTCache:
     """
 
     def __init__(self, params, cfg, l_token: Optional[int] = None, *,
-                 capacity: int = 4096, n_shards: int = 0):
+                 capacity: int = 4096, n_shards: int = 0,
+                 store_dir: Optional[str] = None, store_extra: str = ""):
         self.params = params
         self.cfg = cfg
         self.l_token = l_token
@@ -136,6 +179,15 @@ class RTCache:
         self._capacity = capacity
         self._n = 0
         self.stats = RTCacheStats()
+        # persistent store: one ckpt directory per content key under
+        # store_dir; loaded eagerly so a warm store never cold-encodes
+        self._store_path: Optional[Path] = None
+        self._persisted_rows = 0
+        if store_dir is not None:
+            self._store_key = rt_store_key(params, cfg, l_token,
+                                           store_extra)
+            self._store_path = Path(store_dir) / self._store_key
+            self._load_store()
 
     @property
     def n_rows(self) -> int:
@@ -218,3 +270,92 @@ class RTCache:
         self._n += k
         self.stats.n_rows_encoded += k
         self.stats.n_encode_passes += 1
+
+    # ------------------------------------------------------------------ #
+    # Persistent store
+    # ------------------------------------------------------------------ #
+
+    def _load_store(self) -> None:
+        """Adopt the persisted (rows -> RT vectors) table if a store
+        exists under this cache's content key.  Key/version mismatch is
+        the *expected* invalidation path (silent clean rebuild); a store
+        that matches the key but fails validation — truncated file,
+        wrong shapes, non-finite values — warns and cold-encodes."""
+        t0 = time.time()
+        path = self._store_path
+        try:
+            step = ckpt.latest_step(str(path))
+            if step is None:
+                return
+            meta = ckpt.read_manifest(step, str(path)).get("metadata", {})
+            if (meta.get("store_key") != self._store_key
+                    or meta.get("version") != RT_STORE_VERSION):
+                return                           # clean rebuild, no warn
+            n, lt, e = (int(meta["n_rows"]), int(meta["l_token"]),
+                        int(meta["d_model"]))
+            if n < 1 or (self.l_token is not None and lt != self.l_token):
+                return
+            state = ckpt.restore(
+                {"rows": np.zeros((n, lt), np.int32),
+                 "table": np.zeros((n, e), np.float32)},
+                step, str(path))
+            rows = np.ascontiguousarray(state["rows"])
+            table = np.asarray(state["table"])
+            if rows.shape != (n, lt) or table.shape != (n, e):
+                raise ValueError(
+                    f"stored shapes {rows.shape}/{table.shape} != "
+                    f"manifest ({n}, {lt})/({n}, {e})")
+            if rows.dtype != np.int32:
+                raise ValueError(f"stored rows dtype {rows.dtype}")
+            if not np.isfinite(table).all():
+                raise ValueError("stored table has non-finite values")
+            if rows[0].any():
+                raise ValueError("stored pad row (id 0) is not all-<PAD>")
+            keys = [r.tobytes() for r in rows]
+            if len(set(keys)) != n:
+                raise ValueError("stored rows are not unique")
+            self.l_token = lt
+            while self._capacity < n:
+                self._capacity *= 2
+            self._table = jnp.zeros(
+                (self._capacity, e), table.dtype).at[:n].set(
+                    jnp.asarray(table))
+            self._table.block_until_ready()
+            self._index = {k: i for i, k in enumerate(keys)}
+            self._n = n
+            self._persisted_rows = n
+            self.stats.n_rows_loaded = n
+        except Exception as exc:                     # noqa: BLE001
+            warnings.warn(
+                f"RT store at {path} unreadable ({exc!r}); "
+                "falling back to cold encode", stacklevel=2)
+            self._index = {}
+            self._table = None
+            self._n = 0
+            self._persisted_rows = 0
+            self.stats.n_rows_loaded = 0
+        finally:
+            self.stats.store_load_seconds += time.time() - t0
+
+    def persist(self) -> Optional[Path]:
+        """Checkpoint the current table under the store key (atomic
+        overwrite via ``ckpt.save``).  No-op without a store, on an empty
+        cache, or when nothing grew since the last load/persist.  Rows
+        are reconstructed from the index keys, so the persisted mapping
+        is exactly what ``ensure_rows`` would serve."""
+        if (self._store_path is None or self._n == 0
+                or self._n == self._persisted_rows):
+            return None
+        rows = np.zeros((self._n, self.l_token), np.int32)
+        for key, gid in self._index.items():
+            rows[gid] = np.frombuffer(key, np.int32)
+        table = np.asarray(self._table[:self._n])
+        meta = {"store_key": self._store_key,
+                "version": RT_STORE_VERSION,
+                "n_rows": int(self._n),
+                "l_token": int(self.l_token),
+                "d_model": int(table.shape[1])}
+        out = ckpt.save({"rows": rows, "table": table}, 0,
+                        str(self._store_path), metadata=meta)
+        self._persisted_rows = self._n
+        return out

@@ -1,0 +1,129 @@
+"""Pallas weighted-attention kernel (online softmax over weighted keys).
+
+The block encoder is permutation-equivariant over its context stream (no
+positional encoding is added to context rows), so attention over a key
+that occurs c times in the row equals attention over ONE copy of that key
+whose exponentiated score is multiplied by c:
+
+    softmax_j(s)·V  ==  Σ_u c_u·exp(s_u)·V_u / Σ_u c_u·exp(s_u)
+
+This kernel is the flash-attention kernel's recurrence with the binary
+kv-validity mask generalized to a per-key f32 weight w (w = 0 recovers
+masking, w = 1 recovers plain attention, w = c is the dedup multiplicity).
+The running max / normalizer / accumulator scratch scheme is identical to
+``kernels/flash_attention/kernel.py`` — the weight multiplies p after the
+max-shifted exponential, so the shift cancels in the final division and
+the result is exact (up to fp reassociation) regardless of weights.
+
+A query row whose keys all carry zero weight (a fully-padded drain row)
+ends with normalizer l == 0 and outputs zeros instead of NaN.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _wa_kernel(q_ref, k_ref, v_ref, w_ref, o_ref, m_scr, l_scr, acc_scr,
+               *, scale: float, sq: int, skv: int, block_q: int,
+               block_k: int):
+    """One (head, q-block, kv-block) grid step.
+
+    q_ref: (block_q, D); k_ref/v_ref: (block_k, D); w_ref: (1, block_k)
+    per-key weight; o_ref: (block_q, D).  Scratch: m/l (block_q, 1) f32,
+    acc (block_q, D) f32.
+    """
+    kv_idx = pl.program_id(2)
+    q_idx = pl.program_id(1)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # (bq, bk)
+
+    qpos = q_idx * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    kpos = kv_idx * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = (qpos < sq) & (kpos < skv)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                  # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                               # (bq, bk)
+    # the weight multiplies the shifted exponential: multiplicity for
+    # deduped keys, 0 for masked/padded keys (which also kills any
+    # residual exp(NEG_INF - m) underflow noise)
+    p = p * w_ref[0, :][None, :]
+    p = jnp.where(mask, p, 0.0)
+
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kv_idx == pl.num_programs(2) - 1)
+    def _finish():
+        l = l_scr[...]
+        o_ref[...] = (acc_scr[...] /
+                      jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sq", "skv", "block_q", "block_k", "interpret"))
+def weighted_attention_bhsd(q, k, v, kv_weight, *, sq: int, skv: int,
+                            block_q: int, block_k: int, interpret: bool):
+    """q: (BH, Sq_pad, D); k/v: (BH, Skv_pad, D); kv_weight:
+    (BH, Skv_pad) f32.  Shapes already padded to block multiples (weights
+    zero-padded); sq/skv are the true lengths.
+    """
+    BH, Sq_pad, D = q.shape
+    Skv_pad = k.shape[1]
+    n_q = Sq_pad // block_q
+    n_k = Skv_pad // block_k
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _wa_kernel, scale=scale, sq=sq, skv=skv, block_q=block_q,
+        block_k=block_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((None, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, 1, block_k), lambda b, i, j: (b, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq_pad, D), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, 1)),      # running max
+            _vmem((block_q, 1)),      # running normalizer
+            _vmem((block_q, D)),      # weighted-value accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v, kv_weight)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,108 @@
+"""Public wrappers for weighted attention (the fused serving step's core).
+
+Two implementations with one contract (inference-only — the serving path
+never differentiates through these):
+
+  weighted_attention_xla   the XLA twin the CPU serving path runs: a
+                           *no-shift* clamped exponential with deferred
+                           normalization.  Skipping the row-max pass and
+                           normalizing once after the value matmul is
+                           measurably faster on CPU than jax.nn.softmax
+                           and exact while scores stay below the clamp
+                           (trivially true at inference scale; beyond it
+                           the path is tolerance-gated anyway).
+  weighted_attention       the Pallas kernel (online max-shifted softmax,
+                           numerically safe at any score magnitude) for
+                           TPU — interpret mode on CPU, mirroring
+                           kernels/flash_attention/ops.py.
+
+Layout convention matches flash_attention: (B, S, H, D) in/out, weights
+(B, Skv) f32.  A zero weight excludes the key; a query row whose keys all
+carry zero weight outputs zeros (never NaN).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_serving.kernel import weighted_attention_bhsd
+
+# exp(80) ~ 5.5e34: far above any inference-time score, far below f32
+# overflow even summed over thousands of keys
+SCORE_CLAMP = 80.0
+_TINY = 1e-30
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pick_blocks(sq: int, skv: int) -> tuple:
+    bq = min(128, _round_up(sq, 16))
+    bk = min(128, _round_up(skv, 16))
+    return bq, bk
+
+
+def weighted_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array,
+                           kv_weight: jax.Array) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Skv, H, D); kv_weight: (B, Skv) f32.
+
+    No-shift clamped exponential, f32 scores/accumulation, one deferred
+    normalization after the value matmul.  Returns (B, Sq, H, D) in
+    q.dtype.
+    """
+    D = q.shape[-1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32)
+    s = s * (1.0 / jnp.sqrt(jnp.float32(D)))
+    e = jnp.exp(jnp.minimum(s, SCORE_CLAMP))
+    e = e * kv_weight[:, None, None, :].astype(jnp.float32)
+    o = jnp.einsum("bhqk,bkhd->bqhd", e, v,
+                   preferred_element_type=jnp.float32)
+    den = jnp.maximum(e.sum(-1), _TINY)                  # (B, H, Sq)
+    o = o / jnp.swapaxes(den, 1, 2)[..., None]
+    return o.astype(q.dtype)
+
+
+def weighted_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                       kv_weight: jax.Array, *, impl: str = "chunked",
+                       block_q: int = 0, block_k: int = 0,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Dispatch by attention impl: ``"pallas"`` runs the weighted flash
+    kernel (interpret mode on CPU), anything else the XLA twin."""
+    if impl != "pallas":
+        return weighted_attention_xla(q, k, v, kv_weight)
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bq, bk = _pick_blocks(Sq, Skv)
+    block_q = block_q or bq
+    block_k = block_k or bk
+    Sq_pad = _round_up(Sq, block_q)
+    Skv_pad = _round_up(Skv, block_k)
+
+    def to_bhsd(x, s_pad):
+        x = jnp.swapaxes(x, 1, 2)                        # (B, H, S, D)
+        if s_pad != x.shape[2]:
+            x = jnp.pad(x, ((0, 0), (0, 0), (0, s_pad - x.shape[2]),
+                            (0, 0)))
+        return x.reshape(B * H, s_pad, D)
+
+    qb = to_bhsd(q, Sq_pad)
+    kb = to_bhsd(k, Skv_pad)
+    vb = to_bhsd(v, Skv_pad)
+
+    w = kv_weight.astype(jnp.float32)
+    if Skv_pad != Skv:
+        w = jnp.pad(w, ((0, 0), (0, Skv_pad - Skv)))     # pad keys weigh 0
+    w = jnp.broadcast_to(w[:, None, None, :], (B, H, 1, Skv_pad)) \
+        .reshape(B * H, 1, Skv_pad)
+
+    o = weighted_attention_bhsd(
+        qb, kb, vb, w, sq=Sq, skv=Skv, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    o = o.reshape(B, H, Sq_pad, D)[:, :, :Sq]
+    return jnp.swapaxes(o, 1, 2)

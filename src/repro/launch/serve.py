@@ -35,7 +35,10 @@ def _build_engine_config(args):
         interval_size=args.interval_size, warmup=0, max_checkpoints=1,
         l_min=100, batch_size=args.batch_size, with_oracle=False,
         rt_cache=not args.no_rt_cache, precision=args.precision,
-        multicore=args.multicore)
+        multicore=args.multicore,
+        fused_serving=args.fused_serving)
+    if args.rt_store_dir:
+        overrides["rt_store_dir"] = args.rt_store_dir
     if args.mesh:
         overrides["mesh_shape"] = (args.mesh,)
     return config.replace(**overrides)
@@ -93,6 +96,9 @@ def serve_capsim(args) -> None:
         print(f"rt-cache: {rt.n_rows_encoded} static rows encoded in "
               f"{rt.build_seconds:.2f}s served {rt.n_rows_served} dynamic "
               f"rows ({rt.rows_avoided} instruction-encoder rows avoided)")
+        if rt.n_rows_loaded:
+            print(f"rt-store: {rt.n_rows_loaded} rows loaded in "
+                  f"{rt.store_load_seconds:.2f}s (cold encode skipped)")
 
 
 def serve_lm(args) -> None:
@@ -156,10 +162,23 @@ def main() -> None:
                     help="monolithic predict path (re-encode every "
                          "dynamic instruction row; the bitwise reference)")
     ap.add_argument("--precision", default=None,
-                    choices=("fp32", "bf16"),
+                    choices=("fp32", "bf16", "int8"),
                     help="inference numerics; default keeps the config "
                          "dtype (fp32 here).  bf16 casts fp32 params at "
-                         "dispatch, keeps fp32 softmax/accumulation")
+                         "dispatch; int8 per-channel fake-quantizes the "
+                         "weights once at engine build (fp32 compute), "
+                         "both ≤1%% rel-err gated")
+    ap.add_argument("--fused-serving", action="store_true",
+                    help="dedup-fused block-encoder serving step "
+                         "(weighted attention over each clip's unique "
+                         "context tokens + precomputed cross K/V; "
+                         "tolerance-gated ≤1e-3 vs unfused)")
+    ap.add_argument("--rt-store-dir", default=None, metavar="DIR",
+                    help="persistent content-addressed RT-cache store: "
+                         "load-or-rebuild the (row -> RT vector) table "
+                         "keyed on (params, config, vocab), persisted "
+                         "after each run — a restart never repays the "
+                         "cold encode")
     ap.add_argument("--mesh", type=int, default=0, metavar="N",
                     help="shard inference over an N-device data mesh "
                          "(predict dispatch + RT-cache encode passes; "

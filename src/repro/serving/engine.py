@@ -71,6 +71,9 @@ class PredictorEngine:
                                           "PredictorEngine")
         config = config or EngineConfig()
         self.config = config
+        if config.precision == "int8":
+            from repro.core import quant
+            params = quant.quantize_dequant_params(params)
         self.params = params
         self.cfg = pred_mod.inference_config(cfg, config.precision)
         self.batch_size = config.batch_size
@@ -79,9 +82,16 @@ class PredictorEngine:
         # params are pinned for the engine's lifetime, so the RT table
         # survives across flushes: only unseen static rows ever encode.
         # The cache shares the engine's mesh: encode passes shard too.
-        self._cache = (RTCache(params, self.cfg,
-                               n_shards=config.n_shards)
-                       if config.rt_cache else None)
+        # With rt_store_dir the table additionally survives across
+        # *process restarts* (content-keyed load-or-rebuild).
+        if config.rt_cache:
+            from repro.core.standardize import build_vocab
+            self._cache = RTCache(params, self.cfg, config.l_token,
+                                  n_shards=config.n_shards,
+                                  store_dir=config.rt_store_dir,
+                                  store_extra=build_vocab().signature())
+        else:
+            self._cache = None
         self._pending: List[Request] = []
 
     @classmethod
@@ -115,6 +125,8 @@ class PredictorEngine:
         for r in reqs:
             backend.add(r.clip_tokens, r.context_tokens, r.clip_mask)
         times = backend.drain()
+        if self._cache is not None:
+            self._cache.persist()             # no-op without a store_dir
         n = backend.stats.n_predicted
         seconds = time.time() - t0
 

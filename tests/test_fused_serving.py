@@ -1,0 +1,262 @@
+"""Fused serving step + int8 quantization invariants.
+
+The fused path's correctness rests on one algebraic fact: the block
+encoder adds no positional encoding to the context stream, so attention
+over M context rows containing duplicates equals weighted attention over
+the unique rows with the multiplicities as exponentiated-score weights.
+``forward_cached_fused`` (dedup + weighted attention + precomputed cross
+K/V) must therefore match ``forward_cached`` up to fp reassociation
+(gated ≤1e-3; measured ~1e-6), and the Pallas kernel must match its XLA
+twin.  int8 is a storage rung: per-channel weight fake-quantization with
+fp32 compute, relative-error bounded.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import predictor, quant
+from repro.core import standardize as std_mod
+from repro.core.engine import BatchedPredictor, SimulationEngine
+from repro.core.engine_config import PRECISIONS, EngineConfig
+from repro.core.rt_cache import PAD_ROW_ID, RTCache
+from repro.core.standardize import build_vocab, dedup_bucket, \
+    dedupe_context_tokens
+from repro.kernels.fused_serving import ops as wa_ops
+from repro.isa import progen
+
+VOCAB = build_vocab()
+SMALL_CFG = get_config("capsim").replace(
+    d_model=32, head_dim=8, d_ff=64, dtype="float32")
+MIX = ["503.bwaves", "541.leela", "525.x264"]
+SIM_KW = dict(interval_size=1_500, warmup=200, max_checkpoints=2,
+              l_min=32, l_clip=32, l_token=16, batch_size=16,
+              with_oracle=False)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return predictor.init_params(SMALL_CFG, jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------- #
+# context dedup
+# --------------------------------------------------------------------- #
+
+def test_dedup_bucket_ladder():
+    assert [dedup_bucket(n, 360) for n in (1, 32, 33, 48, 49, 64, 65,
+                                           96, 97, 128, 129)] == \
+        [32, 32, 48, 48, 64, 64, 96, 96, 128, 128, 192]
+    assert dedup_bucket(300, 360) == 360            # capped at M
+
+
+def test_dedupe_context_tokens_preserves_multiset():
+    rng = np.random.RandomState(0)
+    ctx = rng.randint(0, 40, (16, 360)).astype(np.int32)
+    uniq, counts = dedupe_context_tokens(ctx)
+    assert uniq.shape == counts.shape
+    assert uniq.dtype == np.int32 and counts.dtype == np.float32
+    np.testing.assert_array_equal(counts.sum(1), 360.0)
+    for i in range(ctx.shape[0]):
+        got = {int(u): int(c) for u, c in zip(uniq[i], counts[i]) if c}
+        want = dict(zip(*np.unique(ctx[i], return_counts=True)))
+        assert got == {int(k): int(v) for k, v in want.items()}
+    # unused slots carry id 0 / count 0
+    assert (uniq[counts == 0] == 0).all()
+
+
+def test_dedupe_explicit_bucket_too_small_raises():
+    ctx = np.arange(64, dtype=np.int32)[None, :]
+    with pytest.raises(ValueError, match="unique tokens > bucket"):
+        dedupe_context_tokens(ctx, bucket=32)
+    uniq, counts = dedupe_context_tokens(ctx, bucket=96)
+    assert uniq.shape == (1, 96) and counts[0].sum() == 64
+
+
+# --------------------------------------------------------------------- #
+# weighted attention kernel
+# --------------------------------------------------------------------- #
+
+def _qkvw(rng, B=3, Sq=16, Skv=24, H=4, D=8):
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Skv, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Skv, H, D)), jnp.float32)
+    w = jnp.asarray(rng.integers(0, 5, (B, Skv)), jnp.float32)
+    w = w.at[:, 0].set(1.0)                     # at least one live key
+    return q, k, v, w
+
+
+def test_weighted_attention_replicates_duplicates():
+    """weight-c attention over unique keys == plain attention over the
+    physically duplicated keys: the dedup identity itself."""
+    rng = np.random.default_rng(1)
+    q, k, v, w = _qkvw(rng, Skv=8)
+    # one multiplicity pattern for the whole batch so the duplicated
+    # key/value tensors stack to a common Skv
+    w = jnp.tile(w[:1], (w.shape[0], 1))
+    reps = np.asarray(w, np.int32)
+    k_dup = jnp.stack([jnp.repeat(k[b], reps[b], axis=0)
+                       for b in range(k.shape[0])])
+    v_dup = jnp.stack([jnp.repeat(v[b], reps[b], axis=0)
+                       for b in range(v.shape[0])])
+    ones = jnp.ones(k_dup.shape[:2], jnp.float32)
+    out_u = wa_ops.weighted_attention_xla(q, k, v, w)
+    out_d = wa_ops.weighted_attention_xla(q, k_dup, v_dup, ones)
+    np.testing.assert_allclose(np.asarray(out_u), np.asarray(out_d),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_pallas_kernel_matches_xla_twin():
+    rng = np.random.default_rng(2)
+    q, k, v, w = _qkvw(rng, B=2, Sq=33, Skv=47)     # ragged, forces pad
+    ref = wa_ops.weighted_attention_xla(q, k, v, w)
+    out = wa_ops.weighted_attention(q, k, v, w, impl="pallas",
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_weighted_attention_zero_weight_keys_ignored():
+    """Zero-weight (padding) keys must not contribute, in both impls:
+    equivalent to slicing them away."""
+    rng = np.random.default_rng(3)
+    q, k, v, w = _qkvw(rng, B=2, Skv=24)
+    w = w.at[:, 16:].set(0.0)
+    ref = wa_ops.weighted_attention_xla(q, k[:, :16], v[:, :16],
+                                        w[:, :16])
+    for impl, kw in (("chunked", {}), ("pallas", {"interpret": True})):
+        out = wa_ops.weighted_attention(q, k, v, w, impl=impl, **kw)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------- #
+# fused forward vs the unfused RT path
+# --------------------------------------------------------------------- #
+
+def _fused_batch(params, rng, B=6, L=12):
+    cprog = progen.build_benchmark("505.mcf").compiled()
+    table = cprog.token_table(VOCAB, 16)
+    cache = RTCache(params, SMALL_CFG, 16)
+    ids = cache.ensure_rows(table, keys=cprog.token_row_keys(VOCAB, 16))
+    pc = rng.integers(0, table.shape[0], (B, L)).astype(np.int32)
+    mask = (rng.uniform(size=(B, L)) < 0.8).astype(np.float32)
+    mask[:, 0] = 1.0
+    rt_idx = np.where(mask > 0, ids[pc], PAD_ROW_ID).astype(np.int32)
+    # realistic skew: few distinct ids, heavy duplication (the M=360
+    # context row in deployment has ~64-128 uniques)
+    ctx = rng.integers(1, 50, (B, SMALL_CFG.context_tokens)).astype(
+        np.int32)
+    return cache, rt_idx, ctx, mask
+
+
+def test_forward_cached_fused_matches_forward_cached(params):
+    rng = np.random.default_rng(4)
+    cache, rt_idx, ctx, mask = _fused_batch(params, rng)
+    ref = predictor.forward_cached(
+        params, cache.table, {"rt_idx": jnp.asarray(rt_idx),
+                              "context_tokens": jnp.asarray(ctx),
+                              "clip_mask": jnp.asarray(mask)}, SMALL_CFG)
+    uniq, counts = dedupe_context_tokens(ctx)
+    plan = predictor.serving_plan(params, cache.table, SMALL_CFG)
+    out = predictor.forward_cached_fused(
+        params, plan, {"rt_idx": jnp.asarray(rt_idx),
+                       "ctx_uniq": jnp.asarray(uniq),
+                       "ctx_count": jnp.asarray(counts),
+                       "clip_mask": jnp.asarray(mask)}, SMALL_CFG)
+    rel = np.abs(np.asarray(out) - np.asarray(ref)) / np.maximum(
+        np.abs(np.asarray(ref)), 1e-9)
+    assert rel.max() < 1e-3                     # measured ~1e-6
+    # bucket choice must not change the math, only the padding
+    uniq2, counts2 = dedupe_context_tokens(
+        ctx, bucket=dedup_bucket(SMALL_CFG.context_tokens,
+                                 SMALL_CFG.context_tokens))
+    out2 = predictor.forward_cached_fused(
+        params, plan, {"rt_idx": jnp.asarray(rt_idx),
+                       "ctx_uniq": jnp.asarray(uniq2),
+                       "ctx_count": jnp.asarray(counts2),
+                       "clip_mask": jnp.asarray(mask)}, SMALL_CFG)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(out),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_engine_fused_matches_unfused_within_tolerance(params):
+    runs = {}
+    for fused in (False, True):
+        eng = SimulationEngine.from_config(
+            params, SMALL_CFG, VOCAB,
+            EngineConfig(rt_cache=True, fused_serving=fused, **SIM_KW))
+        eng.submit_names(MIX)
+        runs[fused] = eng.run()
+    for a, b in zip(runs[False], runs[True]):
+        assert a.name == b.name and a.n_clips == b.n_clips
+        rel = abs(b.predicted_cycles - a.predicted_cycles) / max(
+            abs(a.predicted_cycles), 1e-9)
+        assert rel < 1e-3, (a.name, rel)
+
+
+def test_fused_without_rt_cache_rejected(params):
+    with pytest.raises(ValueError, match="fused_serving requires"):
+        EngineConfig(rt_cache=False, fused_serving=True)
+    with pytest.raises(ValueError, match="fused_serving requires"):
+        EngineConfig(use_context=False, fused_serving=True)
+    with pytest.raises(ValueError, match="requires an RTCache"):
+        BatchedPredictor(params, SMALL_CFG,
+                         config=EngineConfig(fused_serving=True,
+                                             batch_size=16))
+
+
+# --------------------------------------------------------------------- #
+# int8 quantization
+# --------------------------------------------------------------------- #
+
+def test_quantize_dequant_properties():
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.standard_normal((24, 16)), jnp.float32)
+    qd = quant.quantize_dequant(w)
+    # per-channel bound: |w - qd| <= absmax_channel / (2 * 127)
+    bound = np.abs(np.asarray(w)).max(axis=0) / (2 * quant.Q_MAX)
+    assert (np.abs(np.asarray(qd - w)) <= bound + 1e-7).all()
+    # idempotent: already-on-grid values survive a second pass exactly
+    np.testing.assert_array_equal(np.asarray(quant.quantize_dequant(qd)),
+                                  np.asarray(qd))
+    # 1-D leaves (biases, norm scales) pass through untouched
+    b = jnp.asarray(rng.standard_normal(16), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(quant.quantize_dequant(b)),
+                                  np.asarray(b))
+    # all-zero channels stay exactly zero (no 0/0)
+    z = jnp.zeros((8, 4), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(quant.quantize_dequant(z)),
+                                  np.asarray(z))
+
+
+def test_precision_ladder_names_in_sync():
+    """EngineConfig's accepted precisions and the predictor's dtype map
+    must name the same ladder."""
+    assert set(p for p in PRECISIONS if p is not None) == \
+        set(predictor.PRECISION_DTYPES)
+
+
+def test_engine_int8_within_tolerance_and_composes_with_fused(params):
+    base = EngineConfig(rt_cache=True, **SIM_KW)
+    ref_eng = SimulationEngine.from_config(params, SMALL_CFG, VOCAB, base)
+    ref_eng.submit_names(MIX)
+    ref = ref_eng.run()
+    # the quantization error bound is width-dependent: ~0.7% at the
+    # full-scale d_model=128, a few % at this test's d_model=32
+    for overrides in ({"precision": "int8"},
+                      {"precision": "int8", "fused_serving": True}):
+        eng = SimulationEngine.from_config(
+            params, SMALL_CFG, VOCAB, base.replace(**overrides))
+        eng.submit_names(MIX)
+        for a, b in zip(ref, eng.run()):
+            rel = abs(b.predicted_cycles - a.predicted_cycles) / max(
+                abs(a.predicted_cycles), 1e-9)
+            assert rel < 0.05, (a.name, overrides, rel)
+
+
+def test_std_module_exports_dedupe():
+    """serving path imports dedupe through the std_mod alias used by the
+    engine dispatcher — keep the names wired."""
+    assert std_mod.dedupe_context_tokens is dedupe_context_tokens

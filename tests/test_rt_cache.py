@@ -173,6 +173,9 @@ def test_inference_config_precision_knob():
         assert resolved == SMALL_CFG         # identity off-TPU
     assert predictor.inference_config(SMALL_CFG, "fp32").dtype == "float32"
     assert predictor.inference_config(SMALL_CFG, "bf16").dtype == "bfloat16"
+    # int8 is a storage/accuracy rung, not a compute dtype: weights are
+    # fake-quantized at engine build and the step computes in fp32
+    assert predictor.inference_config(SMALL_CFG, "int8").dtype == "float32"
     with pytest.raises(ValueError):
         predictor.inference_config(SMALL_CFG, "fp8")
 
