@@ -42,6 +42,12 @@ BENCH_SCHEMA_VERSION = 4
 # gate readers are untouched.
 MESH_BENCH_SCHEMA_VERSION = 3
 
+# The serving-service JSON (bench_serving) is likewise its own artifact:
+# v1 = per-tenant-level healthy/faulted/recovery phase blocks (p50/p99
+# latency, clips/sec, typed-status counts, end-of-phase tier) + the gate
+# verdicts.
+SERVING_BENCH_SCHEMA_VERSION = 1
+
 BENCH_BCFG = BuildConfig(interval_size=6_000, warmup=600,
                          max_checkpoints=2, l_min=50, l_clip=64,
                          l_token=16, threshold=50, coef=0.1)

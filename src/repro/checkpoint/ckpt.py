@@ -7,10 +7,20 @@ Layout (one directory per step):
         arr_00000.npy ...   one file per leaf (host-local shard)
     <dir>/LATEST            text file holding the newest complete step
 
-Writes are atomic: arrays land in ``step_N.tmp`` which is renamed only
-after the manifest is fsync'd, so a killed writer can never leave a
-half-checkpoint that restore would pick up — the crash-restart path in
-distributed/fault_tolerance.py relies on this.
+Writes are atomic: arrays land in a writer-unique ``step_N.tmp*``
+directory which is renamed only after the manifest is fsync'd, so a
+killed writer can never leave a half-checkpoint that restore would pick
+up — the crash-restart path in distributed/fault_tolerance.py and the
+persistent RT-cache store (core/rt_cache.py) rely on this.  The
+``LATEST`` pointer is published the same way (temp file + fsync +
+``os.replace``), so a crash mid-write can never leave it truncated.
+Concurrent writers racing one step are safe: tmp names embed pid + a
+serial so they never collide, and the publish rename retries through
+the delete/rename window — last writer wins with no corrupt final dir.
+
+``pre_publish`` (chaos hook) runs right before the final rename — the
+worst-case crash point; ``serving/faults.py`` uses it to prove the
+previous checkpoint generation survives a mid-persist death.
 
 On a multi-host pod each process saves only its addressable shards
 (``host`` / ``n_hosts`` name the files disjointly) and restore re-shards
@@ -23,15 +33,46 @@ keep-last-K garbage collection.
 """
 from __future__ import annotations
 
+import itertools
 import json
 import os
+import re
 import shutil
 import threading
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import numpy as np
+
+_STEP_DIR = re.compile(r"step_(\d+)$")
+
+# writer-unique tmp suffix serial: two saves in one process (or two
+# engine threads sharing an RT store dir) never collide on a tmp path
+_TMP_SERIAL = itertools.count()
+
+
+def _completed_steps(ckpt_dir: Path):
+    """Step numbers of *published* checkpoint dirs only — tmp dirs (any
+    ``step_N.tmp*`` writer suffix) and stray files never match."""
+    out = []
+    for d in ckpt_dir.iterdir():
+        m = _STEP_DIR.fullmatch(d.name)
+        if m and d.is_dir():
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def _write_latest(ckpt_dir: Path, step: int, host: int) -> None:
+    """Atomic LATEST publish: a crash can truncate the temp file, never
+    the pointer itself (the old truncate-then-write left a window where
+    a killed writer orphaned every published step)."""
+    tmp = ckpt_dir / f"LATEST.tmp{host}-{os.getpid()}-{next(_TMP_SERIAL)}"
+    with open(tmp, "w") as f:
+        f.write(str(step))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, ckpt_dir / "LATEST")
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -45,33 +86,52 @@ def _flatten(tree) -> Dict[str, Any]:
 
 
 def save(state, step: int, ckpt_dir: str, *, host: int = 0,
-         n_hosts: int = 1, metadata: Optional[dict] = None) -> Path:
+         n_hosts: int = 1, metadata: Optional[dict] = None,
+         pre_publish: Optional[Callable[[], None]] = None) -> Path:
     ckpt_dir = Path(ckpt_dir)
     final = ckpt_dir / f"step_{step:08d}"
-    tmp = ckpt_dir / f"step_{step:08d}.tmp{host}"
+    tmp = ckpt_dir / (f"step_{step:08d}.tmp{host}"
+                      f"-{os.getpid()}-{next(_TMP_SERIAL)}")
     tmp.mkdir(parents=True, exist_ok=True)
 
-    flat = _flatten(state)
-    entries = {}
-    for i, (key, leaf) in enumerate(sorted(flat.items())):
-        arr = np.asarray(leaf)
-        fname = f"arr_{i:05d}.h{host}.npy"
-        np.save(tmp / fname, arr)
-        entries[key] = {"file": fname, "shape": list(arr.shape),
-                        "dtype": str(arr.dtype)}
-    manifest = {"step": step, "host": host, "n_hosts": n_hosts,
-                "entries": entries, "metadata": metadata or {}}
-    mpath = tmp / f"manifest.h{host}.json"
-    with open(mpath, "w") as f:
-        json.dump(manifest, f, indent=1)
-        f.flush()
-        os.fsync(f.fileno())
+    try:
+        flat = _flatten(state)
+        entries = {}
+        for i, (key, leaf) in enumerate(sorted(flat.items())):
+            arr = np.asarray(leaf)
+            fname = f"arr_{i:05d}.h{host}.npy"
+            np.save(tmp / fname, arr)
+            entries[key] = {"file": fname, "shape": list(arr.shape),
+                            "dtype": str(arr.dtype)}
+        manifest = {"step": step, "host": host, "n_hosts": n_hosts,
+                    "entries": entries, "metadata": metadata or {}}
+        mpath = tmp / f"manifest.h{host}.json"
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
 
-    if final.exists():
-        shutil.rmtree(final)
-    tmp.rename(final)                                    # atomic publish
-    with open(ckpt_dir / "LATEST", "w") as f:
-        f.write(str(step))
+        if pre_publish is not None:
+            pre_publish()       # chaos hook: worst-case crash point
+
+        # publish: replace any previous generation of this step.  Two
+        # writers racing the same step can interleave rmtree/rename, so
+        # retry through the window — last writer wins, and a loser never
+        # leaves a half-deleted final dir (rmtree happens on OUR tmp's
+        # turn only; the published dir is always a complete rename).
+        for attempt in range(5):
+            if final.exists():
+                shutil.rmtree(final, ignore_errors=True)
+            try:
+                tmp.rename(final)                        # atomic publish
+                break
+            except OSError:
+                if attempt == 4:
+                    raise
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _write_latest(ckpt_dir, step, host)
     return final
 
 
@@ -81,11 +141,10 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         return None
     step = int(p.read_text().strip())
     if not (Path(ckpt_dir) / f"step_{step:08d}").exists():
-        # LATEST points at a GC'd/missing dir: fall back to scanning
-        steps = sorted(int(d.name[5:]) for d in Path(ckpt_dir).iterdir()
-                       if d.is_dir() and d.name.startswith("step_")
-                       and not d.name.endswith(tuple(
-                           f".tmp{h}" for h in range(64))))
+        # LATEST points at a GC'd/missing dir: fall back to scanning the
+        # published step dirs (tmp dirs of any writer-suffix shape are
+        # excluded by the regex, not by a fragile endswith list)
+        steps = _completed_steps(Path(ckpt_dir))
         return steps[-1] if steps else None
     return step
 
@@ -162,9 +221,7 @@ class CheckpointManager:
             _do()
 
     def _gc(self) -> None:
-        steps = sorted(int(d.name[5:]) for d in self.dir.iterdir()
-                       if d.is_dir() and d.name.startswith("step_")
-                       and ".tmp" not in d.name)
+        steps = _completed_steps(self.dir)
         for s in steps[: -self.keep]:
             shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
 

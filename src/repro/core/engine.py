@@ -243,12 +243,18 @@ class BatchedPredictor:
     """
 
     def __init__(self, params, cfg, *, config: Optional[EngineConfig] = None,
-                 rt_cache: Optional[RTCache] = None, **legacy):
+                 rt_cache: Optional[RTCache] = None,
+                 fault_injector=None, **legacy):
         if legacy:
             config = legacy_engine_config(config, legacy,
                                           "BatchedPredictor")
         config = config or EngineConfig()
         self.config = config
+        if fault_injector is None and config.faults:
+            # deferred import: repro.serving imports this module
+            from repro.serving.faults import FaultInjector
+            fault_injector = FaultInjector.from_config(config)
+        self._faults = fault_injector
         self.params = params
         self.cfg = pred_mod.inference_config(cfg, config.precision)
         self.batch_size = config.batch_size
@@ -294,6 +300,7 @@ class BatchedPredictor:
         self._buffered = 0
         self._pending: Deque[Tuple[jax.Array, int]] = deque()
         self._retired: List[np.ndarray] = []
+        self._drained = 0           # clips returned by previous drains
         self.stats = PredictorStats()
 
     def add(self, tok: np.ndarray, ctx: np.ndarray,
@@ -361,8 +368,22 @@ class BatchedPredictor:
         self._buffered -= k
         return tuple(out)
 
+    def reset_context_width(self) -> None:
+        """Unpin the pool's context-width check between *independent*
+        flushes (the pool must be empty).  A long-lived backend — the
+        serving engine holds one for its whole lifetime now — calls this
+        at each flush boundary so consecutive flushes may carry
+        different (but internally consistent) context layouts."""
+        assert self._buffered == 0, \
+            "cannot reset context width with clips still buffered"
+        self._ctx_width = None
+
     def _dispatch(self, tok, ctx, mask, n_real: int) -> None:
         t0 = time.time()
+        if self._faults is not None:
+            # chaos layer: may stall (slow_flush) or raise (device_error)
+            # exactly where a real device failure would surface
+            self._faults.on_dispatch()
         if self._shards:
             # sharded dispatch contract: every device gets a non-empty,
             # equal shard (bucket_sizes keeps buckets aligned; a pool
@@ -412,7 +433,12 @@ class BatchedPredictor:
 
     def _retire(self) -> None:
         out, n_real = self._pending.popleft()
-        self._retired.append(np.asarray(out)[:n_real])  # blocks this batch
+        out = np.asarray(out)[:n_real]                  # blocks this batch
+        if self._faults is not None:
+            # nan_output chaos: the retired batch comes back non-finite;
+            # the service-level guard must catch it before demux
+            out = self._faults.corrupt_output(out)
+        self._retired.append(out)
         self.stats.n_predicted += n_real
 
     def drain(self) -> np.ndarray:
@@ -447,8 +473,12 @@ class BatchedPredictor:
             self._retire()
         preds = (np.concatenate(self._retired) if self._retired
                  else np.zeros(0, np.float32))
-        assert preds.shape[0] == self.stats.n_predicted, \
+        # n_predicted accumulates over the backend's lifetime (many
+        # flushes); each drain returns exactly the clips added since the
+        # previous drain
+        assert preds.shape[0] == self.stats.n_predicted - self._drained, \
             "demux must return exactly the real (non-pad) clips"
+        self._drained = self.stats.n_predicted
         self._retired = []
         self.stats.drain_seconds += time.time() - t0
         return preds
@@ -552,6 +582,14 @@ class SimulationEngine:
         self.timing_params = (timing_params if timing_params is not None
                               else timing.TimingParams())
         self.max_in_flight = config.max_in_flight
+        # one fault injector per engine (None without config.faults): the
+        # cache and every per-run BatchedPredictor share its RNG stream,
+        # so a chaos run's injection schedule is one deterministic
+        # sequence across the whole stack
+        self._faults = None
+        if config.faults:
+            from repro.serving.faults import FaultInjector
+            self._faults = FaultInjector.from_config(config)
         # one cache per engine: params are pinned at construction, so the
         # table never goes stale; new programs just append unseen rows.
         # The cache shares the engine's mesh: encode passes shard too.
@@ -560,7 +598,8 @@ class SimulationEngine:
         self._rt_cache = (RTCache(self.params, self.cfg, config.l_token,
                                   n_shards=config.n_shards,
                                   store_dir=config.rt_store_dir,
-                                  store_extra=vocab.signature())
+                                  store_extra=vocab.signature(),
+                                  fault_injector=self._faults)
                           if config.rt_cache else None)
         self._queue: List[progen.Benchmark] = []
         self.last_stats: Optional[PredictorStats] = None
@@ -666,7 +705,8 @@ class SimulationEngine:
             jobs.extend(_Job(b) for b in benches)
         self.frontend_stats = FrontendStats()
         pred = BatchedPredictor(self.params, self.cfg, config=self.config,
-                                rt_cache=self._rt_cache)
+                                rt_cache=self._rt_cache,
+                                fault_injector=self._faults)
         rt_stats = (self._rt_cache.stats if self._rt_cache is not None
                     else RTCacheStats())
         offset = 0
@@ -749,7 +789,8 @@ class SimulationEngine:
         self.frontend_stats = FrontendStats()
         fe = self.frontend_stats
         pred = BatchedPredictor(self.params, self.cfg, config=self.config,
-                                rt_cache=self._rt_cache)
+                                rt_cache=self._rt_cache,
+                                fault_injector=self._faults)
         rt_stats = (self._rt_cache.stats if self._rt_cache is not None
                     else RTCacheStats())
         all_jobs: List[List[_Job]] = []

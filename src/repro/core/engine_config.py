@@ -35,6 +35,15 @@ Field groups:
                 ``quantum`` (None = scheduler default),
                 ``peer_channels`` (peer-context serving — reserved,
                 ROADMAP item 8).
+  faults        ``faults`` — chaos-engineering fault-injection spec, a
+                tuple of ``(kind, rate)`` pairs (``FAULT_KINDS`` below)
+                consumed by ``repro.serving.faults.FaultInjector`` and
+                honored by the REAL engine stack (``BatchedPredictor``
+                dispatch/retire, ``RTCache`` store load/persist), so
+                chaos tests and ``bench_serving.py`` exercise the same
+                code paths production traffic does.  ``()`` (default)
+                injects nothing and costs nothing.  ``fault_seed``
+                makes every injection schedule deterministic.
 
 The config is JSON round-trippable (``to_json``/``from_json``) so one
 ``--engine-config`` flag can drive every bench pass and CI leg.  Legacy
@@ -49,6 +58,17 @@ import warnings
 from typing import Any, Dict, Mapping, Optional, Tuple
 
 PRECISIONS = (None, "fp32", "bf16", "int8")
+
+# Injectable fault kinds (see repro/serving/faults.py for what each does
+# and README's failure-mode table for the expected recovery):
+#   device_error     predict dispatch raises (transient device failure)
+#   nan_output       a dispatched batch's predictions come back non-finite
+#   slow_flush       a dispatch stalls (stuck device / runaway compile)
+#   corrupt_rt_read  a persistent RT-store read returns corrupt data
+#   crash_persist    the process "dies" mid RTCache.persist (before the
+#                    atomic publish, so the previous store must survive)
+FAULT_KINDS = ("device_error", "nan_output", "slow_flush",
+               "corrupt_rt_read", "crash_persist")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +96,9 @@ class EngineConfig:
     multicore: int = 0
     quantum: Optional[int] = None
     peer_channels: bool = False
+    # --- fault injection (chaos) ---
+    faults: Tuple[Tuple[str, float], ...] = ()
+    fault_seed: int = 0
 
     def __post_init__(self):
         # normalize mesh_shape so (config equality == behavior equality)
@@ -84,6 +107,14 @@ class EngineConfig:
         if isinstance(shape, int):
             shape = (shape,)
         object.__setattr__(self, "mesh_shape", tuple(int(s) for s in shape))
+        # normalize faults the same way: JSON lists / dicts of
+        # {kind: rate} all collapse to one sorted tuple-of-pairs form
+        faults = self.faults
+        if isinstance(faults, Mapping):
+            faults = faults.items()
+        object.__setattr__(
+            self, "faults",
+            tuple(sorted((str(k), float(r)) for k, r in faults)))
         self.validate()
 
     @property
@@ -130,6 +161,19 @@ class EngineConfig:
             raise ValueError("peer_channels requires multicore >= 1")
         if self.quantum is not None and self.quantum < 1:
             raise ValueError(f"quantum must be >= 1, got {self.quantum}")
+        seen = set()
+        for kind, rate in self.faults:
+            if kind not in FAULT_KINDS:
+                raise ValueError(
+                    f"unknown fault kind {kind!r} "
+                    f"(known: {list(FAULT_KINDS)})")
+            if kind in seen:
+                raise ValueError(f"duplicate fault kind {kind!r}")
+            seen.add(kind)
+            if not 0.0 <= rate <= 1.0:
+                raise ValueError(
+                    f"fault rate for {kind!r} must be in [0, 1], "
+                    f"got {rate}")
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -139,6 +183,7 @@ class EngineConfig:
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d["mesh_shape"] = list(self.mesh_shape)
+        d["faults"] = [[k, r] for k, r in self.faults]
         return d
 
     def to_json(self, **kw) -> str:

@@ -163,10 +163,14 @@ class RTCache:
 
     def __init__(self, params, cfg, l_token: Optional[int] = None, *,
                  capacity: int = 4096, n_shards: int = 0,
-                 store_dir: Optional[str] = None, store_extra: str = ""):
+                 store_dir: Optional[str] = None, store_extra: str = "",
+                 fault_injector=None):
         self.params = params
         self.cfg = cfg
         self.l_token = l_token
+        # chaos layer (repro.serving.faults.FaultInjector or None): may
+        # corrupt store reads and crash persists on the REAL code paths
+        self._faults = fault_injector
         # n_shards = 0: single-device encode passes (the default);
         # n_shards >= 1: encode passes shard their row axis over an
         # n-device data mesh (EngineConfig.mesh_shape) — byte-identical
@@ -299,6 +303,12 @@ class RTCache:
                 {"rows": np.zeros((n, lt), np.int32),
                  "table": np.zeros((n, e), np.float32)},
                 step, str(path))
+            if self._faults is not None:
+                # corrupt_rt_read chaos: a read that returned garbage —
+                # raising inside this try exercises the real warn +
+                # cold-encode fallback below
+                self._faults.maybe_raise(
+                    "corrupt_rt_read", "injected corrupt RT-store read")
             rows = np.ascontiguousarray(state["rows"])
             table = np.asarray(state["table"])
             if rows.shape != (n, lt) or table.shape != (n, e):
@@ -356,6 +366,9 @@ class RTCache:
                 "l_token": int(self.l_token),
                 "d_model": int(table.shape[1])}
         out = ckpt.save({"rows": rows, "table": table}, 0,
-                        str(self._store_path), metadata=meta)
+                        str(self._store_path), metadata=meta,
+                        pre_publish=(self._faults.crash_hook()
+                                     if self._faults is not None
+                                     else None))
         self._persisted_rows = self._n
         return out

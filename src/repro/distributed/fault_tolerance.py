@@ -46,11 +46,46 @@ class ResilientTrainer:
     log_fn: Callable[[int, Dict], None] = lambda step, m: None
 
     _preempted: bool = dataclasses.field(default=False, init=False)
+    _prev_handlers: Dict = dataclasses.field(default_factory=dict,
+                                             init=False, repr=False)
+
+    # both schedulers' preemption signals: K8s/Borg send SIGTERM, an
+    # operator (or a tty) sends SIGINT — either way the right move is a
+    # drain-checkpoint, not an unclean death
+    _SIGNALS = (signal.SIGTERM, signal.SIGINT)
 
     def install_signal_handler(self) -> None:
-        def _handler(signum, frame):
-            self._preempted = True
-        signal.signal(signal.SIGTERM, _handler)
+        """Install drain-on-preemption handlers for SIGTERM *and* SIGINT.
+
+        The previous handlers are chained, not clobbered: a launcher
+        that already registered its own SIGTERM hook (log flushing, lock
+        release) still runs it.  ``uninstall_signal_handler`` restores
+        the pre-install handlers; ``run`` does so automatically on exit
+        so a trainer's handlers never outlive its loop.
+        """
+        if self._prev_handlers:
+            return                                  # already installed
+        for sig in self._SIGNALS:
+            prev = signal.getsignal(sig)
+
+            def _handler(signum, frame, _prev=prev):
+                self._preempted = True
+                # chain custom hooks only: SIG_DFL/SIG_IGN aren't
+                # callable, and the default SIGINT handler would raise
+                # KeyboardInterrupt — the unclean death this exists to
+                # replace
+                if callable(_prev) and _prev is not \
+                        signal.default_int_handler:
+                    _prev(signum, frame)
+            self._prev_handlers[sig] = prev
+            signal.signal(sig, _handler)
+
+    def uninstall_signal_handler(self) -> None:
+        """Restore the handlers that were active before install (no-op
+        if never installed)."""
+        while self._prev_handlers:
+            sig, prev = self._prev_handlers.popitem()
+            signal.signal(sig, prev)
 
     def run(self, state, batch_iter, *, start_step: int = 0,
             total_steps: int = 1000, state_like=None, shardings=None):
@@ -61,18 +96,26 @@ class ResilientTrainer:
         if restored is not None:
             state, start_step = restored, ck_step
         step = start_step
-        for batch in batch_iter:
-            if step >= total_steps or self._preempted:
-                break
-            state, metrics = self.step_fn(state, batch)
-            step += 1
-            if step % self.log_every == 0:
-                self.log_fn(step, jax.tree_util.tree_map(float, metrics))
-            if step % self.save_every == 0:
-                self.ckpt.save(state, step)
-        # drain: final checkpoint on preemption or completion
-        self.ckpt.save(state, step)
-        self.ckpt.wait()
+        installed_here = not self._prev_handlers
+        if installed_here:
+            self.install_signal_handler()
+        try:
+            for batch in batch_iter:
+                if step >= total_steps or self._preempted:
+                    break
+                state, metrics = self.step_fn(state, batch)
+                step += 1
+                if step % self.log_every == 0:
+                    self.log_fn(step,
+                                jax.tree_util.tree_map(float, metrics))
+                if step % self.save_every == 0:
+                    self.ckpt.save(state, step)
+            # drain: final checkpoint on preemption or completion
+            self.ckpt.save(state, step)
+            self.ckpt.wait()
+        finally:
+            if installed_here:
+                self.uninstall_signal_handler()
         return state, step
 
 

@@ -18,6 +18,16 @@ import os
 import time
 
 
+def parse_faults(spec):
+    """``kind=rate,kind=rate`` -> dict for ``EngineConfig.faults``
+    (validated there against the known chaos kinds)."""
+    faults = {}
+    for part in filter(None, (spec or "").split(",")):
+        kind, _, rate = part.partition("=")
+        faults[kind.strip()] = float(rate)
+    return faults
+
+
 def _build_engine_config(args):
     """Resolve --engine-config JSON (inline or @file) + flag overrides
     into one EngineConfig.  Import is deferred: callers must be able to
@@ -41,6 +51,9 @@ def _build_engine_config(args):
         overrides["rt_store_dir"] = args.rt_store_dir
     if args.mesh:
         overrides["mesh_shape"] = (args.mesh,)
+    if args.faults:
+        overrides["faults"] = parse_faults(args.faults)
+        overrides["fault_seed"] = args.fault_seed
     return config.replace(**overrides)
 
 
@@ -99,6 +112,67 @@ def serve_capsim(args) -> None:
         if rt.n_rows_loaded:
             print(f"rt-store: {rt.n_rows_loaded} rows loaded in "
                   f"{rt.store_load_seconds:.2f}s (cold encode skipped)")
+
+
+def serve_service(args) -> None:
+    """Run the fault-tolerant ``SimulationService`` front-end over the
+    synthetic suite: requests carry per-request deadlines, admission can
+    shed (typed ``overloaded``), and --faults exercises the degradation
+    ladder on live traffic."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import predictor
+    from repro.core import standardize as std_mod
+    from repro.data.dataset import BuildConfig, build_dataset
+    from repro.isa import progen
+    from repro.serving.engine import Request
+    from repro.serving.service import ServiceSLA, SimulationService
+
+    config = _build_engine_config(args)
+    # the service owns precision/fusion (the degradation ladder) — the
+    # base config only contributes the structural axes
+    config = config.replace(precision=None, fused_serving=False)
+    vocab = std_mod.build_vocab()
+    cfg = get_config("capsim").replace(dtype="float32")
+    params = predictor.init_params(cfg, jax.random.PRNGKey(0))
+
+    names = list(progen.TABLE_II)[: args.n_benchmarks]
+    bcfg = BuildConfig(interval_size=config.interval_size, warmup=0,
+                       max_checkpoints=1, l_min=100,
+                       l_clip=config.l_clip, l_token=config.l_token)
+    ds = build_dataset(names, bcfg, vocab)
+    sla = ServiceSLA(default_deadline_s=args.deadline_s,
+                     watchdog_s=args.watchdog_s)
+
+    t0 = time.time()
+    with SimulationService(params, cfg, config, sla=sla) as svc:
+        tickets = []
+        per_req = max(1, len(ds) // max(args.n_requests, 1))
+        for i in range(args.n_requests):
+            lo = (i * per_req) % len(ds)
+            hi = min(lo + per_req, len(ds))
+            tickets.append(svc.submit(Request(
+                i, ds.clip_tokens[lo:hi], ds.context_tokens[lo:hi],
+                ds.clip_mask[lo:hi])))
+        results = [t.result(timeout=600) for t in tickets]
+        stats = svc.stats()
+    wall = time.time() - t0
+
+    for r in results:
+        extra = f" [{r.error}]" if r.error else ""
+        print(f"  req {r.request_id:3d} {r.status:17s} "
+              f"tier={r.tier or '-':10s} clips={r.n_clips:5d} "
+              f"latency={r.latency_seconds:6.2f}s{extra}")
+    n_clips = sum(r.n_clips for r in results if r.ok)
+    print(f"service: {stats['statuses']} tier={stats['current_tier']} "
+          f"in {wall:.1f}s = {n_clips / max(wall, 1e-9):.0f} clips/s")
+    if "faults_fired" in stats:
+        print(f"faults fired: {stats['faults_fired']}")
+    for name, ts in stats["tiers"].items():
+        hits = {k: v for k, v in ts.items() if v and k != "name"}
+        if hits:
+            print(f"  tier {name}: {hits}")
 
 
 def serve_lm(args) -> None:
@@ -187,6 +261,25 @@ def main() -> None:
                     help="EngineConfig as a JSON object or a path to a "
                          "JSON file; individual flags override its "
                          "fields")
+    ap.add_argument("--service", action="store_true",
+                    help="serve through the fault-tolerant "
+                         "SimulationService (bounded queue, deadlines, "
+                         "watchdog, graceful degradation) instead of the "
+                         "batch SimulationEngine")
+    ap.add_argument("--n-requests", type=int, default=8,
+                    help="--service: number of requests to split the "
+                         "suite's clips across")
+    ap.add_argument("--deadline-s", type=float, default=120.0,
+                    help="--service: per-request deadline (SLA)")
+    ap.add_argument("--watchdog-s", type=float, default=60.0,
+                    help="--service: abort any single flush after this "
+                         "many seconds and retry a tier down")
+    ap.add_argument("--faults", default=None, metavar="KIND=RATE,...",
+                    help="chaos injection on the real serving path, e.g. "
+                         "'nan_output=0.1,device_error=0.05' (kinds: "
+                         "device_error nan_output slow_flush "
+                         "corrupt_rt_read crash_persist)")
+    ap.add_argument("--fault-seed", type=int, default=0)
     args = ap.parse_args()
     if args.mesh:
         # must land before jax's first backend init: jax locks the host
@@ -196,7 +289,9 @@ def main() -> None:
             os.environ["XLA_FLAGS"] = (
                 f"{flags} --xla_force_host_platform_device_count="
                 f"{args.mesh}").strip()
-    if args.arch == "capsim":
+    if args.arch == "capsim" and args.service:
+        serve_service(args)
+    elif args.arch == "capsim":
         serve_capsim(args)
     else:
         serve_lm(args)

@@ -1,1 +1,7 @@
-from repro.serving.engine import PredictorEngine, Request, Result  # noqa: F401
+from repro.serving.engine import (PredictorEngine, Request,  # noqa: F401
+                                  Result, validate_request)
+from repro.serving.faults import (FaultInjected,  # noqa: F401
+                                  FaultInjector)
+from repro.serving.service import (ServiceResult, ServiceSLA,  # noqa: F401
+                                   ServiceTicket, SimulationService,
+                                   build_ladder)

@@ -19,9 +19,13 @@ never-before-seen static rows and every clip runs block-encoder-only
 FLOPs.  ``precision="bf16"`` selects the low-precision inference mode
 (fp32 master params cast at dispatch; relative-error bounded).
 
-The engine is synchronous-by-batch (submit/flush); a production front-end
-would put a queue in front, but batching policy — the part that
-determines accelerator utilization — is all in the backend.
+The engine is synchronous-by-batch (submit/flush) and holds ONE backend
+(``BatchedPredictor``) for its whole lifetime: the cached jit step, the
+RT table, and — under ``fused_serving`` — the per-table-version cross-K/V
+serving plan all survive across flushes, so a steady request stream pays
+plan precompute only when the table actually grows, never per flush.
+The production front-end that puts a queue, deadlines and graceful
+degradation on top is ``repro.serving.service.SimulationService``.
 """
 from __future__ import annotations
 
@@ -54,6 +58,48 @@ class Result:
     total_cycles: float
     n_clips: int
     seconds: float
+
+
+def validate_request(req: Request, config: EngineConfig,
+                     expect: Optional[tuple] = None) -> None:
+    """Full submission-boundary payload check: ndims, dtypes, and
+    internal shape consistency of every array (not just the context
+    width).  ``expect=(l_clip, l_token)`` additionally pins the clip
+    shape — the ``SimulationService`` pins it to its config, and the
+    raw engine pins it to the flush's first request (the engine itself
+    is shape-polymorphic in ``l_clip`` across flushes, but one flush's
+    clips concatenate into shared device batches).  Raises
+    ``ValueError`` naming the request and the offending field — a
+    malformed tenant payload must never surface as a downstream
+    concatenate/jit shape error (or worse, a silently wrong gather)."""
+    who = f"Request {req.request_id}"
+    tok, ctx, mask = req.clip_tokens, req.context_tokens, req.clip_mask
+    if tok.ndim != 3:
+        raise ValueError(f"{who}: clip_tokens must be "
+                         f"(n, l_clip, l_token), got shape {tok.shape}")
+    n = tok.shape[0]
+    if expect is not None and tok.shape[1:] != tuple(expect):
+        raise ValueError(
+            f"{who}: clip_tokens shape {tok.shape} does not match the "
+            f"engine's (n, l_clip={expect[0]}, l_token={expect[1]})")
+    if not np.issubdtype(tok.dtype, np.integer):
+        raise ValueError(f"{who}: clip_tokens dtype {tok.dtype} is not "
+                         f"an integer token dtype (expected int32)")
+    if ctx.ndim != 2 or ctx.shape[0] != n:
+        raise ValueError(
+            f"{who}: context_tokens must be (n={n}, M), "
+            f"got shape {ctx.shape}")
+    if not np.issubdtype(ctx.dtype, np.integer):
+        raise ValueError(f"{who}: context_tokens dtype {ctx.dtype} is "
+                         f"not an integer token dtype (expected int32)")
+    ctx_mod.validate_context_width(ctx.shape[1], who)
+    if mask.shape != (n, tok.shape[1]):
+        raise ValueError(
+            f"{who}: clip_mask shape {mask.shape} does not match "
+            f"clip_tokens' (n={n}, l_clip={tok.shape[1]})")
+    if not np.issubdtype(mask.dtype, np.floating):
+        raise ValueError(f"{who}: clip_mask dtype {mask.dtype} is not a "
+                         f"float mask dtype (expected float32)")
 
 
 class PredictorEngine:
@@ -92,7 +138,14 @@ class PredictorEngine:
                                   store_extra=build_vocab().signature())
         else:
             self._cache = None
+        self._faults = None
+        if config.faults:
+            from repro.serving.faults import FaultInjector
+            self._faults = FaultInjector.from_config(config)
         self._pending: List[Request] = []
+        # ONE backend for the engine's lifetime (see module docstring):
+        # rebuilding per flush rebuilt the fused serving_plan every time
+        self._backend: Optional[BatchedPredictor] = None
 
     @classmethod
     def from_config(cls, params, cfg,
@@ -106,9 +159,25 @@ class PredictorEngine:
         return self._cache.stats if self._cache is not None else None
 
     def submit(self, req: Request) -> None:
-        ctx_mod.validate_context_width(req.context_tokens.shape[1],
-                                       f"Request {req.request_id}")
+        """Queue one request, validating the full payload contract at
+        the submission boundary (with the producer on the stack), not as
+        a shape error inside a later concatenate or jit re-trace.  The
+        flush's first request pins its clip shape."""
+        expect = (self._pending[0].clip_tokens.shape[1:]
+                  if self._pending else None)
+        validate_request(req, self.config, expect)
         self._pending.append(req)
+
+    def backend(self) -> BatchedPredictor:
+        """The engine-lifetime batch backend (built lazily on first
+        flush, then reused: cached jit step, RT table, and fused
+        serving plan all persist)."""
+        if self._backend is None:
+            self._backend = BatchedPredictor(self.params, self.cfg,
+                                             config=self.config,
+                                             rt_cache=self._cache,
+                                             fault_injector=self._faults)
+        return self._backend
 
     def flush(self) -> List[Result]:
         """Run every pending clip through the predictor; one device batch
@@ -119,15 +188,16 @@ class PredictorEngine:
         self._pending = []
         t0 = time.time()
 
-        backend = BatchedPredictor(self.params, self.cfg,
-                                   config=self.config,
-                                   rt_cache=self._cache)
+        backend = self.backend()
+        # flushes are independent: each may carry a different (but
+        # internally consistent) context layout
+        backend.reset_context_width()
         for r in reqs:
             backend.add(r.clip_tokens, r.context_tokens, r.clip_mask)
-        times = backend.drain()
+        times = backend.drain()               # exactly this flush's clips
         if self._cache is not None:
             self._cache.persist()             # no-op without a store_dir
-        n = backend.stats.n_predicted
+        n = times.shape[0]
         seconds = time.time() - t0
 
         results = []

@@ -1,0 +1,222 @@
+"""Chaos layer: injector determinism, config round-trip, injection on
+the REAL engine paths, and crash-safety of the checkpoint publishes.
+
+The contract under test: every fault kind fires where the equivalent
+real failure would surface (dispatch, retire, store read, persist), a
+crash mid-persist never loses the previous generation, and the LATEST
+pointer can never be observed truncated or pointing at garbage.
+"""
+import json
+import os
+import threading
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import latest_step, read_manifest, restore, save
+from repro.configs import get_config
+from repro.core import predictor
+from repro.core.engine import BatchedPredictor
+from repro.core.engine_config import FAULT_KINDS, EngineConfig
+from repro.core.rt_cache import RTCache
+from repro.core.standardize import build_vocab
+from repro.isa import progen
+from repro.serving.faults import FaultInjected, FaultInjector
+
+VOCAB = build_vocab()
+SMALL_CFG = get_config("capsim").replace(
+    d_model=32, head_dim=8, d_ff=64, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return predictor.init_params(SMALL_CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def table():
+    cprog = progen.build_benchmark("505.mcf").compiled()
+    return cprog.token_table(VOCAB, 16)
+
+
+def _clips(n=4, seed=0):
+    rng = np.random.RandomState(seed)
+    tok = rng.randint(0, VOCAB.size, (n, 128, SMALL_CFG.clip_tokens)
+                      ).astype(np.int32)
+    ctx = rng.randint(0, VOCAB.size, (n, SMALL_CFG.context_tokens)
+                      ).astype(np.int32)
+    return tok, ctx, np.ones((n, 128), np.float32)
+
+
+# --------------------------------------------------------------------------- #
+# Injector + config plumbing
+# --------------------------------------------------------------------------- #
+
+def test_fault_config_round_trips_and_validates():
+    cfg = EngineConfig(faults={"nan_output": 0.1, "device_error": 0.05},
+                      fault_seed=7)
+    back = EngineConfig.from_json(cfg.to_json())
+    assert back == cfg and back.faults == cfg.faults
+    assert json.loads(cfg.to_json())["faults"] == [
+        ["device_error", 0.05], ["nan_output", 0.1]]
+    with pytest.raises(ValueError, match="fault"):
+        EngineConfig(faults={"meteor_strike": 0.1})
+    with pytest.raises(ValueError, match="rate"):
+        EngineConfig(faults={"nan_output": 1.5})
+    # no faults -> no injector -> zero-overhead healthy path
+    assert FaultInjector.from_config(EngineConfig()) is None
+
+
+def test_injector_deterministic_and_toggleable():
+    mk = lambda: FaultInjector({"nan_output": 0.3}, seed=11)
+    a, b = mk(), mk()
+    draws_a = [a.maybe("nan_output") for _ in range(64)]
+    draws_b = [b.maybe("nan_output") for _ in range(64)]
+    assert draws_a == draws_b and any(draws_a) and not all(draws_a)
+    assert a.fired["nan_output"] == sum(draws_a)
+    assert a.set_enabled(False) is True           # returns previous
+    assert not any(a.maybe("nan_output") for _ in range(64))
+    a.set_enabled(True)
+    with pytest.raises(ValueError):
+        FaultInjector({"bad_kind": 0.5})
+    with pytest.raises(ValueError):
+        a.set_rates({"bad_kind": 0.5})
+
+
+def test_every_kind_is_drawable():
+    inj = FaultInjector({k: 1.0 for k in FAULT_KINDS}, seed=0)
+    for k in FAULT_KINDS:
+        assert inj.maybe(k)
+
+
+# --------------------------------------------------------------------------- #
+# Injection on the real engine paths
+# --------------------------------------------------------------------------- #
+
+def test_device_error_raises_from_dispatch(params):
+    cfg = EngineConfig(batch_size=8, faults={"device_error": 1.0})
+    b = BatchedPredictor(params, SMALL_CFG, config=cfg)
+    tok, ctx, mask = _clips()
+    with pytest.raises(FaultInjected, match="device_error"):
+        b.add(tok, ctx, mask)
+        b.drain()
+
+
+def test_nan_output_corrupts_retired_batch(params):
+    cfg = EngineConfig(batch_size=8, faults={"nan_output": 1.0})
+    b = BatchedPredictor(params, SMALL_CFG, config=cfg)
+    tok, ctx, mask = _clips()
+    b.add(tok, ctx, mask)
+    out = b.drain()
+    assert out.shape == (4,) and np.isnan(out).any()
+    # same engine, injection off: clean output (state not poisoned)
+    b._faults.set_enabled(False)
+    b.reset_context_width()
+    b.add(tok, ctx, mask)
+    assert np.isfinite(b.drain()).all()
+
+
+def test_corrupt_rt_read_warns_and_cold_encodes(params, table, tmp_path):
+    clean = RTCache(params, SMALL_CFG, 16, store_dir=str(tmp_path),
+                    store_extra=VOCAB.signature())
+    clean.ensure_rows(table)
+    assert clean.persist() is not None
+
+    inj = FaultInjector({"corrupt_rt_read": 1.0})
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        c2 = RTCache(params, SMALL_CFG, 16, store_dir=str(tmp_path),
+                     store_extra=VOCAB.signature(), fault_injector=inj)
+    assert any("RT" in str(x.message) or "store" in str(x.message)
+               for x in w)
+    assert c2.stats.n_rows_loaded == 0            # fell back to cold
+    c2.ensure_rows(table)                          # ...and still correct
+    np.testing.assert_array_equal(
+        np.asarray(clean.table[:clean.n_rows]),
+        np.asarray(c2.table[:c2.n_rows]))
+
+
+def test_crash_persist_keeps_previous_generation(params, table, tmp_path):
+    c1 = RTCache(params, SMALL_CFG, 16, store_dir=str(tmp_path),
+                 store_extra=VOCAB.signature())
+    half = table[: table.shape[0] // 2]
+    c1.ensure_rows(half)
+    assert c1.persist() is not None                # generation 1
+
+    inj = FaultInjector({"crash_persist": 1.0})
+    c2 = RTCache(params, SMALL_CFG, 16, store_dir=str(tmp_path),
+                 store_extra=VOCAB.signature(), fault_injector=inj)
+    gen1_rows = c2.stats.n_rows_loaded
+    assert gen1_rows == c1.n_rows
+    c2.ensure_rows(table)                          # grow past gen 1
+    with pytest.raises(FaultInjected, match="crash_persist"):
+        c2.persist()                               # dies before publish
+
+    # a post-crash process still loads generation 1, uncorrupted
+    c3 = RTCache(params, SMALL_CFG, 16, store_dir=str(tmp_path),
+                 store_extra=VOCAB.signature())
+    assert c3.stats.n_rows_loaded == gen1_rows
+    np.testing.assert_array_equal(
+        np.asarray(c1.table[:c1.n_rows]), np.asarray(c3.table[:c1.n_rows]))
+
+
+# --------------------------------------------------------------------------- #
+# Checkpoint publish crash-safety (the LATEST-pointer regression)
+# --------------------------------------------------------------------------- #
+
+def _state(v=1.0):
+    return {"w": np.full((4, 4), v, np.float32)}
+
+
+def test_crash_before_publish_preserves_latest(tmp_path):
+    save(_state(1.0), 1, str(tmp_path))
+    assert latest_step(str(tmp_path)) == 1
+
+    def boom():
+        raise RuntimeError("simulated death before publish")
+
+    with pytest.raises(RuntimeError):
+        save(_state(2.0), 2, str(tmp_path), pre_publish=boom)
+    # LATEST still points at the complete generation; no tmp litter
+    assert latest_step(str(tmp_path)) == 1
+    assert not [d for d in os.listdir(tmp_path) if ".tmp" in d]
+    got = restore(_state(), 1, str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(got["w"]), _state(1.0)["w"])
+
+
+def test_latest_scan_ignores_stray_tmp_dirs(tmp_path):
+    save(_state(), 3, str(tmp_path))
+    # a writer that died mid-save leaves a tmp dir; a stale LATEST from
+    # a GC race points nowhere — the fallback scan must skip both
+    (tmp_path / "step_00000009.tmp0-4242-7").mkdir()
+    (tmp_path / "LATEST").write_text("9")
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_concurrent_saves_last_writer_wins(tmp_path):
+    # many threads race the SAME step: writer-unique tmp names + the
+    # retrying atomic publish mean the final dir is always one writer's
+    # complete checkpoint, never a blend or a crash
+    errs = []
+
+    def write(v):
+        try:
+            save(_state(float(v)), 5, str(tmp_path))
+        except Exception as exc:                   # pragma: no cover
+            errs.append(exc)
+
+    threads = [threading.Thread(target=write, args=(v,))
+               for v in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert latest_step(str(tmp_path)) == 5
+    got = np.asarray(restore(_state(), 5, str(tmp_path))["w"])
+    assert float(got[0, 0]) in {float(v) for v in range(6)}
+    assert (got == got[0, 0]).all()                # one writer, whole
+    assert read_manifest(5, str(tmp_path))["step"] == 5
+    assert not [d for d in os.listdir(tmp_path) if ".tmp" in d]

@@ -154,3 +154,60 @@ def test_straggler_monitor():
     assert mon.stragglers() == [3]
     w = mon.rebalance()
     assert w[3] < 0.6 and abs(float(w.sum()) - 4.0) < 1e-6
+
+
+def test_signal_handlers_chain_and_restore(tmp_path):
+    import signal
+
+    _, state, step, batch = _setup()
+    trainer = ResilientTrainer(
+        step_fn=step, ckpt=CheckpointManager(str(tmp_path), keep=2,
+                                             async_save=False))
+    seen = []
+    prev_term = signal.getsignal(signal.SIGTERM)
+    prev_int = signal.getsignal(signal.SIGINT)
+    signal.signal(signal.SIGTERM, lambda s, f: seen.append(s))
+    try:
+        trainer.install_signal_handler()
+        trainer.install_signal_handler()          # idempotent
+        # SIGTERM: preemption flagged AND the launcher's hook still ran
+        signal.raise_signal(signal.SIGTERM)
+        assert trainer._preempted and seen == [signal.SIGTERM]
+        # SIGINT is preemption too — graceful drain, NOT KeyboardInterrupt
+        trainer._preempted = False
+        signal.raise_signal(signal.SIGINT)
+        assert trainer._preempted
+        trainer.uninstall_signal_handler()
+        # pre-install handlers are back (ours for TERM, python's for INT)
+        signal.raise_signal(signal.SIGTERM)
+        assert seen == [signal.SIGTERM, signal.SIGTERM]
+        assert signal.getsignal(signal.SIGINT) is prev_int
+    finally:
+        signal.signal(signal.SIGTERM, prev_term)
+        signal.signal(signal.SIGINT, prev_int)
+
+
+def test_preemption_drains_and_run_restores_handlers(tmp_path):
+    import signal
+
+    _, state, step, batch = _setup()
+    trainer = ResilientTrainer(
+        step_fn=step, ckpt=CheckpointManager(str(tmp_path), keep=2,
+                                             async_save=False),
+        save_every=1000)                          # only the drain saves
+    prev_int = signal.getsignal(signal.SIGINT)
+
+    def batches():
+        yield batch
+        yield batch
+        signal.raise_signal(signal.SIGINT)        # preempt mid-run
+        yield batch
+        yield batch
+
+    _, n = trainer.run(state, batches(), total_steps=100)
+    # the third step saw the flag: loop broke, drain checkpoint landed
+    assert n == 2
+    assert latest_step(str(tmp_path)) == 2
+    # run() uninstalled its handlers on the way out
+    assert signal.getsignal(signal.SIGINT) is prev_int
+    assert not trainer._prev_handlers
