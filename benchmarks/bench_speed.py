@@ -33,14 +33,15 @@ if __package__ in (None, ""):     # direct `python benchmarks/bench_speed.py`
     sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks.common import (BENCH_SCHEMA_VERSION,
-                               MESH_BENCH_SCHEMA_VERSION, bench_cfg,
+                               MESH_BENCH_SCHEMA_VERSION,
+                               SUBSAMPLE_BENCH_SCHEMA_VERSION, bench_cfg,
                                full_cfg)
 from repro.core import context as ctx_mod
 from repro.core import predictor
 from repro.core import slicer as slicer_mod
 from repro.core import standardize as std_mod
 from repro.core.engine import SimulationEngine
-from repro.core.engine_config import EngineConfig
+from repro.core.engine_config import EngineConfig, SamplingConfig
 from repro.core.simulate import capsim_simulate
 from repro.core.standardize import build_vocab
 from repro.isa import funcsim, multicore, progen, timing
@@ -926,6 +927,122 @@ def run_mesh(emit, *, max_mesh: int = 8, quick: bool = False,
             "mismatches": mismatches}
 
 
+# --------------------------------------------------------------------------- #
+# Subsample fusion: stratified clip subsampling vs the full fused+int8 path
+# --------------------------------------------------------------------------- #
+
+def run_subsample(emit, *, n_benchmarks: int = 8, quick: bool = False,
+                  config: "EngineConfig | None" = None,
+                  fraction: "float | None" = None, strata: int = 4,
+                  min_clips_per_stratum: int = 2,
+                  bootstrap_resamples: int = 200, seed: int = 0) -> dict:
+    """Analytical-ML fusion accuracy/cost trade-off (ROADMAP item 4).
+
+    Runs the Table-II suite twice through the SAME fused+int8 rung: once
+    predicting every clip (the reference), once with stratified clip
+    subsampling + ridge extrapolation + bootstrap CI.  Reports, per
+    benchmark and in aggregate: the clip-prediction ratio
+    (n_clips / clips_predicted), the ADDED relative cycles error of the
+    fused estimate vs the full prediction (not vs the oracle — the gate
+    is about what subsampling costs on top of the model), the bootstrap
+    CI width, and whether the CI covers the full-prediction estimate.
+    The full-scale targets: >= 10x fewer predicted clips at <= 2% added
+    total-cycles error with the summed CI covering the full total.
+    """
+    vocab = build_vocab()
+    cfg = predictor.inference_config(bench_cfg() if quick else full_cfg())
+    params = predictor.init_params(cfg, jax.random.PRNGKey(0))
+    names = list(progen.TABLE_II)[:n_benchmarks]
+    benches = [progen.build_benchmark(name) for name in names]
+    if fraction is None:
+        # quick scale has ~20 clips/bench: a paper-scale fraction would
+        # degenerate to the min-per-stratum floor, so quick exercises the
+        # machinery at 0.25 and the full run targets the 10x reduction
+        fraction = 0.25 if quick else 0.08
+    scfg = SamplingConfig(fraction=fraction, strata=strata,
+                          min_clips_per_stratum=min_clips_per_stratum,
+                          bootstrap_resamples=bootstrap_resamples,
+                          seed=seed)
+    ec = (config or bench_scale_config(quick)).replace(
+        warmup=0, with_oracle=False, rt_cache=True,
+        fused_serving=True, precision="int8")
+
+    def one(engine_config):
+        engine = SimulationEngine.from_config(params, cfg, vocab,
+                                              engine_config)
+        engine.run(benches)               # cold: jit + RT-table build
+        t0 = time.time()
+        results = engine.run(benches)     # warm: steady state
+        return results, time.time() - t0, engine.last_stats
+
+    full_res, full_seconds, full_stats = one(ec)
+    sub_res, sub_seconds, sub_stats = one(ec.replace(sampling=scfg))
+
+    per_bench = {}
+    tot_full = tot_sub = tot_lo = tot_hi = 0.0
+    tot_clips = tot_predicted = 0
+    n_covered = 0
+    for f, s in zip(full_res, sub_res):
+        lo, hi = s.cycles_ci
+        err = abs(s.predicted_cycles - f.predicted_cycles) \
+            / max(abs(f.predicted_cycles), 1e-9)
+        covered = lo <= f.predicted_cycles <= hi
+        n_covered += covered
+        tot_full += f.predicted_cycles
+        tot_sub += s.predicted_cycles
+        tot_lo += lo
+        tot_hi += hi
+        tot_clips += f.n_clips
+        tot_predicted += s.clips_predicted
+        per_bench[f.name] = {
+            "full_cycles": f.predicted_cycles,
+            "fused_cycles": s.predicted_cycles,
+            "added_rel_error": err,
+            "n_clips": f.n_clips,
+            "clips_predicted": s.clips_predicted,
+            "clips_extrapolated": s.clips_extrapolated,
+            "clip_ratio": f.n_clips / max(s.clips_predicted, 1),
+            "ci": [lo, hi],
+            "ci_width": hi - lo,
+            "ci_covers_full": covered}
+
+    clip_ratio = tot_clips / max(tot_predicted, 1)
+    total_err = abs(tot_sub - tot_full) / max(abs(tot_full), 1e-9)
+    per_errs = [v["added_rel_error"] for v in per_bench.values()]
+    res = {
+        "schema_version": SUBSAMPLE_BENCH_SCHEMA_VERSION,
+        "quick": quick,
+        "n_benchmarks": len(names),
+        "sampling": scfg.to_dict(),
+        "per_bench": per_bench,
+        "total_full_cycles": tot_full,
+        "total_fused_cycles": tot_sub,
+        "total_ci": [tot_lo, tot_hi],
+        "total_ci_covers_full": tot_lo <= tot_full <= tot_hi,
+        "ci_coverage_fraction": n_covered / max(len(names), 1),
+        "clip_ratio": clip_ratio,
+        "total_clips": tot_clips,
+        "total_clips_predicted": tot_predicted,
+        "added_rel_error_total": total_err,
+        "added_rel_error_max": max(per_errs),
+        "added_rel_error_mean": sum(per_errs) / len(per_errs),
+        "timing": {"full_seconds": full_seconds,
+                   "subsample_seconds": sub_seconds,
+                   "full_predict_seconds": full_stats.predict_seconds,
+                   "subsample_predict_seconds": sub_stats.predict_seconds,
+                   "n_predicted_full": full_stats.n_predicted,
+                   "n_predicted_subsample": sub_stats.n_predicted}}
+    emit.emit("speed.subsample_fusion", sub_seconds * 1e6
+              / max(tot_predicted, 1),
+              f"{len(names)} benchmarks: {tot_predicted}/{tot_clips} "
+              f"clips predicted ({clip_ratio:.1f}x fewer), total added "
+              f"err {total_err:.3%} (max per-bench {max(per_errs):.3%}), "
+              f"summed CI {'covers' if res['total_ci_covers_full'] else 'MISSES'} "
+              f"the full estimate; warm {full_seconds:.2f}s -> "
+              f"{sub_seconds:.2f}s")
+    return res
+
+
 if __name__ == "__main__":
     from benchmarks.common import CsvEmitter
     ap = argparse.ArgumentParser()
@@ -946,6 +1063,26 @@ if __name__ == "__main__":
                          "devices, bitwise-gated against the unsharded "
                          "reference.  Sets XLA_FLAGS to force N host "
                          "devices if too few are visible")
+    ap.add_argument("--subsample", action="store_true",
+                    help="analytical-ML fusion pass: stratified clip "
+                         "subsampling + ridge extrapolation vs the full "
+                         "fused+int8 prediction, with clip-ratio and "
+                         "added-error gates")
+    ap.add_argument("--subsample-fraction", type=float, default=None,
+                    help="per-stratum sampling fraction for --subsample "
+                         "(default: 0.25 quick / 0.08 full)")
+    ap.add_argument("--strata", type=int, default=4,
+                    help="number of analytical-feature strata for "
+                         "--subsample")
+    ap.add_argument("--min-clip-ratio", type=float, default=0.0,
+                    help="fail if total n_clips / clips_predicted falls "
+                         "below this (0 disables; full-scale target is "
+                         ">= 10x, quick gates >= 2x)")
+    ap.add_argument("--max-added-rel-err", type=float, default=0.0,
+                    help="fail if the subsampled total cycles diverge "
+                         "from the full fused+int8 prediction by more "
+                         "than this relative error (0 disables; "
+                         "full-scale target is <= 2%%, quick <= 5%%)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke scale (small model, short intervals)")
     ap.add_argument("--n-benchmarks", type=int, default=8)
@@ -1026,6 +1163,29 @@ if __name__ == "__main__":
             raise SystemExit(
                 "sharded engine cycles diverged from the unsharded "
                 f"reference: {res['mismatches']}")
+    elif args.subsample:
+        res = run_subsample(emitter, n_benchmarks=args.n_benchmarks,
+                            quick=args.quick, config=engine_config,
+                            fraction=args.subsample_fraction,
+                            strata=args.strata)
+        if args.json:
+            Path(args.json).write_text(json.dumps(res, indent=2))
+        if not res["total_ci_covers_full"]:
+            raise SystemExit(
+                f"summed bootstrap CI {res['total_ci']} does not cover "
+                f"the full-prediction total {res['total_full_cycles']}")
+        if args.min_clip_ratio and res["clip_ratio"] < args.min_clip_ratio:
+            raise SystemExit(
+                f"clip-prediction ratio {res['clip_ratio']:.2f}x < "
+                f"{args.min_clip_ratio}x — subsampling is not reducing "
+                "predicted clips enough")
+        if args.max_added_rel_err and \
+                res["added_rel_error_total"] > args.max_added_rel_err:
+            raise SystemExit(
+                f"subsampled total cycles added rel error "
+                f"{res['added_rel_error_total']:.4%} > "
+                f"{args.max_added_rel_err:.4%} vs the full fused+int8 "
+                "prediction")
     elif args.multicore:
         res = run_multicore_bench(emitter, core_counts=args.core_counts,
                                   quick=args.quick, config=engine_config)

@@ -48,6 +48,12 @@ MESH_BENCH_SCHEMA_VERSION = 3
 # verdicts.
 SERVING_BENCH_SCHEMA_VERSION = 1
 
+# The subsample-fusion JSON (bench_speed --subsample) is its own
+# artifact too: v5 = per-benchmark full-vs-fused totals (clip ratio,
+# added rel err vs the full fused+int8 prediction, bootstrap CI width +
+# coverage) and the aggregate gate verdicts.
+SUBSAMPLE_BENCH_SCHEMA_VERSION = 5
+
 BENCH_BCFG = BuildConfig(interval_size=6_000, warmup=600,
                          max_checkpoints=2, l_min=50, l_clip=64,
                          l_token=16, threshold=50, coef=0.1)

@@ -55,10 +55,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import analytical
 from repro.core import context as ctx_mod
 from repro.core import predictor as pred_mod
+from repro.core import sampler as sampler_mod
 from repro.core import standardize as std_mod
-from repro.core.engine_config import EngineConfig, legacy_engine_config
+from repro.core.analytical import PredictionReport
+from repro.core.engine_config import EngineConfig, reject_legacy_kwargs
 from repro.core.rt_cache import RTCache, RTCacheStats
 from repro.isa import funcsim, multicore, progen, timing
 
@@ -74,6 +77,23 @@ class SimResult:
     func_seconds: float               # functional sim + tokenize
     predict_seconds: float            # batched predictor inference (share)
     oracle_seconds: Optional[float]   # O3 oracle wall time
+    # --- PredictionReport fields (analytical-ML fusion path) ---
+    # Full-prediction runs keep the old meanings exactly: every clip is
+    # model-predicted (clips_predicted == n_clips, nothing
+    # extrapolated) and there is no interval (cycles_ci None).  Under
+    # EngineConfig.sampling, predicted_cycles becomes the stratified
+    # estimate, cycles_ci its 95% bootstrap interval, and
+    # clip_provenance marks model (True) vs analytical-residual (False)
+    # per clip.
+    cycles_ci: Optional[Tuple[float, float]] = None
+    clips_predicted: Optional[int] = None
+    clips_extrapolated: int = 0
+    clip_provenance: Optional[np.ndarray] = dataclasses.field(
+        default=None, compare=False, repr=False)
+
+    def __post_init__(self):
+        if self.clips_predicted is None:
+            self.clips_predicted = self.n_clips
 
     @property
     def capsim_seconds(self) -> float:
@@ -91,6 +111,17 @@ class SimResult:
             return None
         return abs(self.predicted_cycles - self.oracle_cycles) \
             / self.oracle_cycles
+
+    @property
+    def prediction_report(self) -> PredictionReport:
+        """The result's fused-prediction view as one typed object."""
+        ci = (self.cycles_ci if self.cycles_ci is not None
+              else (self.predicted_cycles, self.predicted_cycles))
+        return PredictionReport(
+            total_cycles=self.predicted_cycles, cycles_ci=ci,
+            clips_predicted=self.clips_predicted,
+            clips_extrapolated=self.clips_extrapolated,
+            clip_provenance=self.clip_provenance)
 
 
 @lru_cache(maxsize=64)
@@ -178,19 +209,22 @@ class FrontendStats:
     slice_seconds: float = 0.0        # clip bounds
     tokenize_seconds: float = 0.0     # token-table gather
     context_seconds: float = 0.0      # snapshot byte decomposition
+    analytical_seconds: float = 0.0   # fusion-path per-clip features
     n_instructions: int = 0
     n_clips: int = 0
 
     @property
     def frontend_seconds(self) -> float:
         return (self.interpret_seconds + self.slice_seconds
-                + self.tokenize_seconds + self.context_seconds)
+                + self.tokenize_seconds + self.context_seconds
+                + self.analytical_seconds)
 
     def as_dict(self) -> Dict[str, float]:
         return {"interpret_seconds": self.interpret_seconds,
                 "slice_seconds": self.slice_seconds,
                 "tokenize_seconds": self.tokenize_seconds,
                 "context_seconds": self.context_seconds,
+                "analytical_seconds": self.analytical_seconds,
                 "frontend_seconds": self.frontend_seconds,
                 "n_instructions": self.n_instructions,
                 "n_clips": self.n_clips}
@@ -238,16 +272,15 @@ class BatchedPredictor:
     non-empty ``config.mesh_shape`` every device batch shard_maps over
     the data mesh: buckets stay multiples of the mesh size, so no shard
     is ever empty, and demuxed rows are bitwise the single-device rows.
-    The old loose keyword arguments (``batch_size=``, ``precision=``,
-    ...) still work but raise a ``DeprecationWarning``.
+    The pre-PR-6 loose keyword arguments (``batch_size=``,
+    ``precision=``, ...) are retired: they raise ``TypeError`` pointing
+    at the ``EngineConfig`` field to use.
     """
 
     def __init__(self, params, cfg, *, config: Optional[EngineConfig] = None,
                  rt_cache: Optional[RTCache] = None,
                  fault_injector=None, **legacy):
-        if legacy:
-            config = legacy_engine_config(config, legacy,
-                                          "BatchedPredictor")
+        reject_legacy_kwargs(legacy, "BatchedPredictor")
         config = config or EngineConfig()
         self.config = config
         if fault_injector is None and config.faults:
@@ -532,6 +565,26 @@ class MulticoreSimResult:
     def n_instructions(self) -> int:
         return sum(r.n_instructions for r in self.cores)
 
+    # --- PredictionReport aggregates (analytical-ML fusion path) ---
+
+    @property
+    def cycles_ci(self) -> Optional[Tuple[float, float]]:
+        """Across-core CI: summed per-core bounds (conservative — the
+        per-core draws are independent, so the true interval is
+        narrower).  None unless every core ran the fusion path."""
+        if any(r.cycles_ci is None for r in self.cores):
+            return None
+        return (sum(r.cycles_ci[0] for r in self.cores),
+                sum(r.cycles_ci[1] for r in self.cores))
+
+    @property
+    def clips_predicted(self) -> int:
+        return sum(r.clips_predicted for r in self.cores)
+
+    @property
+    def clips_extrapolated(self) -> int:
+        return sum(r.clips_extrapolated for r in self.cores)
+
 
 class SimulationEngine:
     """Queue of benchmarks -> functional sims -> one shared clip pool ->
@@ -545,17 +598,20 @@ class SimulationEngine:
     ``PredictorEngine`` and ``launch/serve.py`` are all thin wrappers
     over it.  A non-empty ``mesh_shape`` shards every predict dispatch
     AND every RT-cache encode pass across the data mesh, bitwise equal
-    to the unsharded engine.  The old loose keyword signature still
-    works but raises a ``DeprecationWarning``.
+    to the unsharded engine.  ``config.sampling`` switches runs to the
+    analytical-ML fusion path: only a stratified sample of each
+    benchmark's clips reaches the predictor and the rest extrapolate
+    from analytical features with a bootstrap CI (``sampling=None``
+    keeps the full-prediction path bitwise).  The pre-PR-6 loose
+    keyword signature is retired: extra keywords raise ``TypeError``
+    pointing at ``EngineConfig``.
     """
 
     def __init__(self, params, cfg, vocab: std_mod.Vocab,
                  config: Optional[EngineConfig] = None, *,
                  timing_params: Optional[timing.TimingParams] = None,
                  **legacy):
-        if legacy:
-            config = legacy_engine_config(config, legacy,
-                                          "SimulationEngine")
+        reject_legacy_kwargs(legacy, "SimulationEngine")
         config = config or EngineConfig()
         self.config = config
         if config.precision == "int8":
@@ -624,11 +680,17 @@ class SimulationEngine:
 
     def _feed_trace(self, trace, token_table, static_ids,
                     pred: BatchedPredictor, job: _Job,
-                    core_id: Optional[int] = None) -> int:
+                    core_id: Optional[int] = None,
+                    sink: Optional[list] = None) -> int:
         """Tokenize + context one interval trace and enqueue its clips —
         the shared interval body of the single-core and multicore paths
         (``core_id=None`` keeps the single-core context layout bit for
-        bit).  Returns the clip count enqueued."""
+        bit).  Returns the clip count enqueued.
+
+        With ``sink`` (the fusion path) nothing reaches the predictor
+        yet: clip tensors land in the sink together with their
+        analytical feature rows, and the caller feeds only the
+        stratified sample once the job's trace is complete."""
         fe = self.frontend_stats
         n = len(trace)
         job.n_intervals += 1
@@ -654,18 +716,56 @@ class SimulationEngine:
 
         job.n_clips += n_clips
         fe.n_clips += n_clips
-        if static_ids is not None:
+        if sink is not None:
+            t0 = time.time()
+            feats = analytical.clip_features(trace, self.l_min,
+                                             self.timing_params)
+            fe.analytical_seconds += time.time() - t0
+            assert feats.shape[0] == n_clips, \
+                "analytical windows must mirror the clip partition"
+            sink.append((tok, ctx, mask, feats))
+        elif static_ids is not None:
             pred.add_indexed(tok, ctx, mask)
         else:
             pred.add(tok, ctx, mask)
         return n_clips
 
+    def _feed_sample(self, pred: BatchedPredictor, sink: list,
+                     job: _Job, job_key: int):
+        """Stratify one job's collected clips, select the sample, and
+        feed ONLY those rows to the predictor (preserving clip order,
+        so cross-benchmark pipelining survives: the device crunches
+        this job's sample while the next job's functional sim runs).
+
+        Returns the per-job fusion plan ``(features, strata, sampled)``
+        the post-drain demux hands to ``fuse_predictions``."""
+        scfg = self.config.sampling
+        if sink:
+            tok = np.concatenate([s[0] for s in sink])
+            ctx = np.concatenate([s[1] for s in sink])
+            mask = np.concatenate([s[2] for s in sink])
+            feats = np.concatenate([s[3] for s in sink])
+        else:
+            feats = np.zeros((0, analytical.N_FEATURES), np.float64)
+        strata = analytical.stratify(feats, scfg.strata)
+        sampled, _ = sampler_mod.stratified_sample(
+            strata, scfg.fraction, scfg.min_clips_per_stratum,
+            scfg.seed, key=job_key)
+        if sampled.shape[0]:
+            if self._rt_cache is not None:
+                pred.add_indexed(tok[sampled], ctx[sampled],
+                                 mask[sampled])
+            else:
+                pred.add(tok[sampled], ctx[sampled], mask[sampled])
+        return feats, strata, sampled
+
     def _functional(self, bench: progen.Benchmark, pred: BatchedPredictor,
-                    job: _Job) -> None:
+                    job: _Job, sink: Optional[list] = None) -> None:
         """Columnar functional sim + slice + tokenize one benchmark,
         feeding clips straight into the (asynchronously consuming)
         predictor.  Tokens/contexts are bitwise identical to the object
-        path (``ClipEncoder`` over ``slice_fixed`` clips)."""
+        path (``ClipEncoder`` over ``slice_fixed`` clips).  With
+        ``sink`` the clips collect there instead (fusion path)."""
         fe = self.frontend_stats
         cprog = bench.compiled()
         token_table = cprog.token_table(self.vocab, self.l_token)
@@ -688,7 +788,8 @@ class SimulationEngine:
             fe.interpret_seconds += time.time() - t0
             if not len(trace):
                 break
-            self._feed_trace(trace, token_table, static_ids, pred, job)
+            self._feed_trace(trace, token_table, static_ids, pred, job,
+                             sink=sink)
             if self.with_oracle:
                 t0 = time.time()
                 job.oracle_cycles += timing.total_cycles_columnar(
@@ -703,6 +804,8 @@ class SimulationEngine:
         self._queue = []
         if benches is not None:
             jobs.extend(_Job(b) for b in benches)
+        if self.config.sampling is not None:
+            return self._run_sampled(jobs)
         self.frontend_stats = FrontendStats()
         pred = BatchedPredictor(self.params, self.cfg, config=self.config,
                                 rt_cache=self._rt_cache,
@@ -755,6 +858,77 @@ class SimulationEngine:
         """Single-benchmark convenience path (``capsim_simulate``)."""
         return self.run([bench])[0]
 
+    def _run_sampled(self, jobs: List[_Job]) -> List[SimResult]:
+        """Fusion path of ``run()``: per benchmark, collect every clip's
+        tensors + analytical features, stratify on the analytical cycle
+        estimate, run ONLY the stratified sample through the predictor,
+        then extrapolate the rest with a ridge residual fit and a
+        bootstrap CI (``analytical.fuse_predictions``).
+
+        At ``fraction=1.0`` every clip is "sampled" in original order,
+        the fit never runs, and the total is the plain ``float(sum())``
+        over the same prediction rows the unsampled path sums — bitwise
+        equal by the batch-composition-independence contract."""
+        scfg = self.config.sampling
+        self.frontend_stats = FrontendStats()
+        pred = BatchedPredictor(self.params, self.cfg, config=self.config,
+                                rt_cache=self._rt_cache,
+                                fault_injector=self._faults)
+        rt_stats = (self._rt_cache.stats if self._rt_cache is not None
+                    else RTCacheStats())
+        plans = []                    # (features, strata, sampled) per job
+        offset = 0
+        for j, job in enumerate(jobs):
+            sink: list = []
+            t0 = time.time()
+            d0 = pred.stats.dispatch_seconds
+            b0 = rt_stats.build_seconds
+            self._functional(job.bench, pred, job, sink=sink)
+            feats, strata, sampled = self._feed_sample(pred, sink, job, j)
+            job.func_seconds = (time.time() - t0 - job.oracle_seconds
+                                - (pred.stats.dispatch_seconds - d0)
+                                - (rt_stats.build_seconds - b0))
+            job.offset = offset
+            offset += int(sampled.shape[0])
+            plans.append((feats, strata, sampled))
+        preds = pred.drain()
+        if self._rt_cache is not None:
+            self._rt_cache.persist()          # no-op without a store_dir
+        self.last_stats = pred.stats
+        self.last_rt_stats = (dataclasses.replace(rt_stats)
+                              if self._rt_cache is not None else None)
+        assert preds.shape[0] == offset == pred.stats.n_predicted, \
+            "clip accounting mismatch between sample and predictions"
+
+        results = []
+        total_sampled = max(offset, 1)
+        for j, (job, (feats, strata, sampled)) in enumerate(
+                zip(jobs, plans)):
+            n_samp = int(sampled.shape[0])
+            mine = preds[job.offset:job.offset + n_samp]
+            rep = analytical.fuse_predictions(
+                feats, strata, sampled, mine,
+                bootstrap_resamples=scfg.bootstrap_resamples,
+                seed=scfg.seed, key=j)
+            share = n_samp / total_sampled
+            results.append(SimResult(
+                name=job.bench.name,
+                n_intervals=job.n_intervals,
+                n_instructions=job.n_instructions,
+                n_clips=job.n_clips,
+                predicted_cycles=rep.total_cycles,
+                oracle_cycles=job.oracle_cycles if self.with_oracle
+                else None,
+                func_seconds=job.func_seconds,
+                predict_seconds=pred.stats.predict_seconds * share,
+                oracle_seconds=job.oracle_seconds if self.with_oracle
+                else None,
+                cycles_ci=rep.cycles_ci,
+                clips_predicted=rep.clips_predicted,
+                clips_extrapolated=rep.clips_extrapolated,
+                clip_provenance=rep.clip_provenance))
+        return results
+
     # ------------------------------ multicore ------------------------------ #
 
     def run_multicore(self,
@@ -786,6 +960,8 @@ class SimulationEngine:
             quantum = (self.config.quantum
                        if self.config.quantum is not None
                        else multicore.DEFAULT_QUANTUM)
+        if self.config.sampling is not None:
+            return self._run_multicore_sampled(mbenches, quantum)
         self.frontend_stats = FrontendStats()
         fe = self.frontend_stats
         pred = BatchedPredictor(self.params, self.cfg, config=self.config,
@@ -885,6 +1061,137 @@ class SimulationEngine:
                 * (job.n_clips / total_clips),
                 oracle_seconds=job.oracle_seconds if self.with_oracle
                 else None) for job in jobs]
+            results.append(MulticoreSimResult(
+                name=mb.name, n_cores=mb.n_cores, cores=cores))
+        return results
+
+    def _run_multicore_sampled(
+            self, mbenches: Sequence[multicore.MulticoreBenchmark],
+            quantum: int) -> List[MulticoreSimResult]:
+        """Fusion path of ``run_multicore()``: each core's clips (all
+        checkpoints) collect in a per-core sink, then the per-core
+        stratified sample feeds the pooled predictor in core order.
+        One ``fuse_predictions`` per (benchmark, core) job; the job key
+        counts flattened jobs so every core draws independently but
+        reproducibly."""
+        scfg = self.config.sampling
+        self.frontend_stats = FrontendStats()
+        fe = self.frontend_stats
+        pred = BatchedPredictor(self.params, self.cfg, config=self.config,
+                                rt_cache=self._rt_cache,
+                                fault_injector=self._faults)
+        rt_stats = (self._rt_cache.stats if self._rt_cache is not None
+                    else RTCacheStats())
+        all_jobs: List[List[_Job]] = []
+        plans = []                 # (job, features, strata, sampled)
+        offset = 0
+        key = 0
+        for mb in mbenches:
+            cprogs = mb.compiled()
+            token_tables = [cp.token_table(self.vocab, self.l_token)
+                            for cp in cprogs]
+            static_ids = None
+            if self._rt_cache is not None:
+                static_ids = [
+                    self._rt_cache.ensure_rows(
+                        tt, keys=cp.token_row_keys(self.vocab,
+                                                   self.l_token))
+                    for cp, tt in zip(cprogs, token_tables)]
+            jobs = [_Job(bench=mb, name=f"{mb.name}#c{c}")
+                    for c in range(mb.n_cores)]
+            all_jobs.append(jobs)
+            sinks: List[list] = [[] for _ in range(mb.n_cores)]
+            states = mb.fresh_states()
+            t_mb = time.time()
+            d0 = pred.stats.dispatch_seconds
+            b0 = rt_stats.build_seconds
+            oracle_s = 0.0
+            if self.warmup:
+                t0 = time.time()
+                multicore.run_multicore(cprogs, self.warmup, states,
+                                        quantum=quantum)
+                fe.interpret_seconds += time.time() - t0
+            n_ckp = min(mb.ckp_num, self.max_checkpoints)
+            for _ in range(n_ckp):
+                t0 = time.time()
+                mtrace = multicore.run_multicore(
+                    cprogs, self.interval_size, states,
+                    snapshot_every=self.l_min, quantum=quantum)
+                fe.interpret_seconds += time.time() - t0
+                if len(mtrace) == 0:
+                    break
+                for c, trace in enumerate(mtrace.cores):
+                    if not len(trace):
+                        continue
+                    self._feed_trace(
+                        trace, token_tables[c],
+                        static_ids[c] if static_ids is not None else None,
+                        pred, jobs[c], core_id=c, sink=sinks[c])
+                if self.with_oracle:
+                    t0 = time.time()
+                    totals = timing.total_cycles_multicore(
+                        mtrace.cores, mtrace.schedule, self.timing_params)
+                    dt = time.time() - t0
+                    oracle_s += dt
+                    for c, cyc in enumerate(totals):
+                        jobs[c].oracle_cycles += cyc
+                        jobs[c].oracle_seconds += dt / mb.n_cores
+            for c, job in enumerate(jobs):
+                feats, strata, sampled = self._feed_sample(
+                    pred, sinks[c], job, key)
+                key += 1
+                job.offset = offset
+                offset += int(sampled.shape[0])
+                plans.append((job, feats, strata, sampled))
+            mb_seconds = (time.time() - t_mb - oracle_s
+                          - (pred.stats.dispatch_seconds - d0)
+                          - (rt_stats.build_seconds - b0))
+            mb_clips = max(sum(j.n_clips for j in jobs), 1)
+            for job in jobs:
+                job.func_seconds = mb_seconds * (job.n_clips / mb_clips)
+
+        preds = pred.drain()
+        if self._rt_cache is not None:
+            self._rt_cache.persist()          # no-op without a store_dir
+        self.last_stats = pred.stats
+        self.last_rt_stats = (dataclasses.replace(rt_stats)
+                              if self._rt_cache is not None else None)
+        assert preds.shape[0] == offset == pred.stats.n_predicted, \
+            "clip accounting mismatch between sample and predictions"
+
+        total_sampled = max(offset, 1)
+        reports: Dict[int, Tuple[analytical.PredictionReport, int]] = {}
+        for k, (job, feats, strata, sampled) in enumerate(plans):
+            n_samp = int(sampled.shape[0])
+            mine = preds[job.offset:job.offset + n_samp]
+            rep = analytical.fuse_predictions(
+                feats, strata, sampled, mine,
+                bootstrap_resamples=scfg.bootstrap_resamples,
+                seed=scfg.seed, key=k)
+            reports[id(job)] = (rep, n_samp)
+
+        results = []
+        for mb, jobs in zip(mbenches, all_jobs):
+            cores = []
+            for job in jobs:
+                rep, n_samp = reports[id(job)]
+                cores.append(SimResult(
+                    name=job.name,
+                    n_intervals=job.n_intervals,
+                    n_instructions=job.n_instructions,
+                    n_clips=job.n_clips,
+                    predicted_cycles=rep.total_cycles,
+                    oracle_cycles=job.oracle_cycles if self.with_oracle
+                    else None,
+                    func_seconds=job.func_seconds,
+                    predict_seconds=pred.stats.predict_seconds
+                    * (n_samp / total_sampled),
+                    oracle_seconds=job.oracle_seconds if self.with_oracle
+                    else None,
+                    cycles_ci=rep.cycles_ci,
+                    clips_predicted=rep.clips_predicted,
+                    clips_extrapolated=rep.clips_extrapolated,
+                    clip_provenance=rep.clip_provenance))
             results.append(MulticoreSimResult(
                 name=mb.name, n_cores=mb.n_cores, cores=cores))
         return results

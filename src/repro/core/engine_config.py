@@ -44,17 +44,27 @@ Field groups:
                 code paths production traffic does.  ``()`` (default)
                 injects nothing and costs nothing.  ``fault_seed``
                 makes every injection schedule deterministic.
+  sampling      ``sampling`` — opt-in analytical-ML fusion mode: a
+                nested ``SamplingConfig`` (or an equivalent mapping; a
+                JSON round trip hands one back).  Only a stratified
+                sample of each benchmark's clips runs through the
+                attention predictor; the rest are extrapolated from a
+                ridge fit over per-clip analytical features
+                (``repro.core.analytical``) with a bootstrap confidence
+                interval over the stratified estimate.  ``None``
+                (default) preserves the exact full-prediction path
+                bitwise.
 
 The config is JSON round-trippable (``to_json``/``from_json``) so one
-``--engine-config`` flag can drive every bench pass and CI leg.  Legacy
-keyword signatures on the entry points forward here through
-``legacy_engine_config`` and raise a ``DeprecationWarning``.
+``--engine-config`` flag can drive every bench pass and CI leg.  The
+pre-PR-6 loose keyword signatures are fully retired: any extra keyword
+on an entry point raises ``TypeError`` (``reject_legacy_kwargs``)
+pointing at the ``EngineConfig`` field to use instead.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-import warnings
 from typing import Any, Dict, Mapping, Optional, Tuple
 
 PRECISIONS = (None, "fp32", "bf16", "int8")
@@ -69,6 +79,64 @@ PRECISIONS = (None, "fp32", "bf16", "int8")
 #                    atomic publish, so the previous store must survive)
 FAULT_KINDS = ("device_error", "nan_output", "slow_flush",
                "corrupt_rt_read", "crash_persist")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    """Stratified clip-subsampling knobs for the analytical-ML fusion
+    path (``EngineConfig.sampling``).
+
+    ``fraction``: target share of each stratum's clips that run through
+    the attention predictor (``1.0`` samples everything and is bitwise
+    the unsampled engine).  ``strata``: number of quantile bins of the
+    analytical cycle estimate per benchmark.  ``min_clips_per_stratum``
+    floors every non-empty stratum's sample so rare-but-expensive
+    strata are never extrapolated blind.  ``bootstrap_resamples``:
+    within-stratum bootstrap replicates behind the 95% ``cycles_ci``
+    (``0`` degenerates the CI to a point).  ``seed`` drives every
+    selection and resample deterministically.
+    """
+
+    fraction: float = 0.1
+    strata: int = 4
+    seed: int = 0
+    min_clips_per_stratum: int = 2
+    bootstrap_resamples: int = 200
+
+    def __post_init__(self):
+        self.validate()
+
+    def validate(self) -> None:
+        if not 0.0 < self.fraction <= 1.0:
+            raise ValueError(
+                f"sampling fraction must be in (0, 1], "
+                f"got {self.fraction}")
+        if self.strata < 1:
+            raise ValueError(f"strata must be >= 1, got {self.strata}")
+        if self.min_clips_per_stratum < 1:
+            raise ValueError(
+                f"min_clips_per_stratum must be >= 1, "
+                f"got {self.min_clips_per_stratum}")
+        if self.bootstrap_resamples < 0:
+            raise ValueError(
+                f"bootstrap_resamples must be >= 0, "
+                f"got {self.bootstrap_resamples}")
+
+    def replace(self, **kw) -> "SamplingConfig":
+        return dataclasses.replace(self, **kw)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, data: Mapping[str, Any]) -> "SamplingConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(data) - fields
+        if unknown:
+            raise ValueError(
+                f"unknown SamplingConfig fields {sorted(unknown)} "
+                f"(known: {sorted(fields)})")
+        return cls(**dict(data))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +167,8 @@ class EngineConfig:
     # --- fault injection (chaos) ---
     faults: Tuple[Tuple[str, float], ...] = ()
     fault_seed: int = 0
+    # --- analytical-ML fusion (None = full prediction, bitwise) ---
+    sampling: Optional[SamplingConfig] = None
 
     def __post_init__(self):
         # normalize mesh_shape so (config equality == behavior equality)
@@ -115,6 +185,10 @@ class EngineConfig:
         object.__setattr__(
             self, "faults",
             tuple(sorted((str(k), float(r)) for k, r in faults)))
+        # normalize sampling: a JSON round trip hands back a mapping
+        if isinstance(self.sampling, Mapping):
+            object.__setattr__(self, "sampling",
+                               SamplingConfig.from_dict(self.sampling))
         self.validate()
 
     @property
@@ -174,6 +248,11 @@ class EngineConfig:
                 raise ValueError(
                     f"fault rate for {kind!r} must be in [0, 1], "
                     f"got {rate}")
+        if self.sampling is not None and not isinstance(self.sampling,
+                                                        SamplingConfig):
+            raise ValueError(
+                f"sampling must be a SamplingConfig (or a mapping of "
+                f"its fields) or None, got {self.sampling!r}")
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -181,7 +260,7 @@ class EngineConfig:
     # ------------------------------ JSON ------------------------------ #
 
     def to_dict(self) -> Dict[str, Any]:
-        d = dataclasses.asdict(self)
+        d = dataclasses.asdict(self)          # nests sampling as a dict
         d["mesh_shape"] = list(self.mesh_shape)
         d["faults"] = [[k, r] for k, r in self.faults]
         return d
@@ -204,26 +283,26 @@ class EngineConfig:
         return cls.from_dict(json.loads(text))
 
 
-# field names the deprecated kwarg shims accept (== the config fields)
-LEGACY_FIELDS = frozenset(f.name for f in dataclasses.fields(EngineConfig))
+# config field names — used only to phrase the retirement TypeError
+_CONFIG_FIELDS = frozenset(f.name for f in dataclasses.fields(EngineConfig))
 
 
-def legacy_engine_config(config: Optional[EngineConfig],
-                         kwargs: Dict[str, Any], where: str, *,
-                         stacklevel: int = 3) -> EngineConfig:
-    """Fold a deprecated loose-kwarg call into an ``EngineConfig``.
+def reject_legacy_kwargs(kwargs: Dict[str, Any], where: str) -> None:
+    """The PR-6 deprecated loose-kwarg shims are retired.
 
-    Unknown names raise ``TypeError`` (exactly like a real signature
-    would); known names warn once per call site and override ``config``
-    (or the defaults)."""
-    unknown = set(kwargs) - LEGACY_FIELDS
-    if unknown:
+    Every entry point now accepts knobs exclusively through
+    ``config=EngineConfig(...)``; any leftover keyword raises
+    ``TypeError``.  Keywords that name real config fields get a message
+    pointing at the exact ``EngineConfig(...)`` construction to use."""
+    if not kwargs:
+        return
+    names = sorted(kwargs)
+    known = sorted(set(kwargs) & _CONFIG_FIELDS)
+    if known:
+        fields = ", ".join(f"{k}=..." for k in known)
         raise TypeError(
-            f"{where}() got unexpected keyword arguments "
-            f"{sorted(unknown)}")
-    warnings.warn(
-        f"{where}: passing {sorted(kwargs)} as keyword arguments is "
-        f"deprecated — construct an EngineConfig and pass config=, e.g. "
-        f"config=EngineConfig({', '.join(f'{k}=...' for k in sorted(kwargs))})",
-        DeprecationWarning, stacklevel=stacklevel)
-    return (config or EngineConfig()).replace(**kwargs)
+            f"{where}() no longer accepts {names} as keyword arguments "
+            f"(the deprecated shims were removed) — construct an "
+            f"EngineConfig and pass config=EngineConfig({fields})")
+    raise TypeError(
+        f"{where}() got unexpected keyword arguments {names}")

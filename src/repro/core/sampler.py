@@ -16,12 +16,23 @@ Intervals are dominated by a few clip *contents* repeated thousands of times
                            "reduction of categories represented ... instead
                            of adjusting their occurrence number"),
   3. coefficient 0.02 turns the paper's 300 h training corpus into ~10 h.
+
+``stratified_sample`` below is the *inference-time* sampler for the
+analytical-ML fusion path (ROADMAP item 4): given per-clip stratum
+labels (quantile bins of the analytical cycle estimate,
+``analytical.stratify``), it picks a small representative subset per
+stratum — deterministic under a seed, every non-empty stratum covered
+with at least ``min_per_stratum`` clips — so only that subset runs
+through the attention predictor.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import defaultdict
 from typing import Dict, Hashable, List, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.slicer import Clip
 
@@ -105,3 +116,57 @@ def sample_indices(keys: Sequence[Hashable], threshold: int = 200,
     for i, k in enumerate(keys):
         groups[k].append(i)
     return select_from_groups(groups, len(keys), threshold, coef)
+
+
+# --------------------------------------------------------------------------- #
+# Stratified inference-time sampler (analytical-ML fusion path)
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class StratifiedStats:
+    n_in: int
+    n_out: int
+    n_strata: int                     # non-empty strata
+    per_stratum: Tuple[Tuple[int, int, int], ...]   # (label, size, kept)
+
+    @property
+    def reduction(self) -> float:
+        return self.n_out / max(self.n_in, 1)
+
+
+def stratified_sample(strata: np.ndarray, fraction: float,
+                      min_per_stratum: int = 1, seed: int = 0,
+                      key: int = 0
+                      ) -> Tuple[np.ndarray, StratifiedStats]:
+    """Pick ``max(min_per_stratum, ceil(fraction * size))`` clips per
+    non-empty stratum, without replacement, deterministically.
+
+    ``strata`` is the (n,) per-clip label array; the draw is seeded by
+    ``(seed, key)`` so distinct jobs (benchmarks, cores) sample
+    independently but reproducibly.  Strata iterate in sorted label
+    order and each stratum's picks come back sorted, so the result is
+    invariant to how labels were numbered.  Returns (sorted indices,
+    stats); ``fraction=1.0`` returns every index — the bitwise-identity
+    contract the fusion path's ``fraction=1.0`` mode relies on.
+    """
+    strata = np.asarray(strata)
+    n = strata.shape[0]
+    rng = np.random.default_rng(
+        np.asarray([abs(int(seed)), abs(int(key))], np.uint64))
+    keep: List[np.ndarray] = []
+    per: List[Tuple[int, int, int]] = []
+    for label in np.unique(strata):
+        idxs = np.flatnonzero(strata == label)
+        size = idxs.shape[0]
+        k = min(size, max(min_per_stratum,
+                          math.ceil(fraction * size)))
+        # rng.choice without replacement, sorted: deterministic and
+        # independent of the stratum's internal ordering
+        take = np.sort(rng.choice(size, size=k, replace=False))
+        keep.append(idxs[take])
+        per.append((int(label), size, k))
+    indices = (np.sort(np.concatenate(keep)) if keep
+               else np.zeros(0, np.int64)).astype(np.int64)
+    stats = StratifiedStats(n_in=n, n_out=int(indices.shape[0]),
+                            n_strata=len(per), per_stratum=tuple(per))
+    return indices, stats

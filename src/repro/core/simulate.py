@@ -11,10 +11,11 @@ the accuracy comparison.
 ``repro.core.engine.SimulationEngine`` — the multi-benchmark batch engine
 that shares one clip pool and one cached-jit predict step across programs.
 Both wrappers are thin shells over ``SimulationEngine.from_config``: all
-knobs (trace scale, batching, precision, RT cache, device mesh) travel in
-one ``EngineConfig``.  The old loose keyword arguments still work but
-raise a ``DeprecationWarning``.  Use the engine directly when simulating
-more than one benchmark.
+knobs (trace scale, batching, precision, RT cache, device mesh, clip
+subsampling) travel in one ``EngineConfig``.  The PR-6 deprecated loose
+keyword arguments are retired: passing one raises ``TypeError`` pointing
+at the matching ``EngineConfig`` field.  Use the engine directly when
+simulating more than one benchmark.
 """
 from __future__ import annotations
 
@@ -23,7 +24,7 @@ from typing import Optional
 from repro.core import standardize as std_mod
 from repro.core.engine import (MulticoreSimResult, SimResult,
                                SimulationEngine)
-from repro.core.engine_config import EngineConfig, legacy_engine_config
+from repro.core.engine_config import EngineConfig, reject_legacy_kwargs
 from repro.isa import multicore as mc_mod
 from repro.isa import progen, timing
 
@@ -43,9 +44,11 @@ def capsim_simulate(bench: progen.Benchmark, params, cfg,
     ``config.precision`` None keeps cfg.dtype, "fp32"/"bf16" select the
     inference numerics (bf16 is relative-error bounded, not bitwise); a
     non-empty ``config.mesh_shape`` shards clip batches and RT-cache
-    encode passes over the data mesh (bitwise-equal to unsharded)."""
-    if legacy:
-        config = legacy_engine_config(config, legacy, "capsim_simulate")
+    encode passes over the data mesh (bitwise-equal to unsharded);
+    ``config.sampling`` predicts only a stratified clip sample and
+    extrapolates the rest with a bootstrap CI (``sampling=None`` keeps
+    the full path bitwise)."""
+    reject_legacy_kwargs(legacy, "capsim_simulate")
     engine = SimulationEngine.from_config(params, cfg, vocab, config,
                                           timing_params=timing_params)
     return engine.simulate(bench)
@@ -62,9 +65,7 @@ def capsim_simulate_multicore(mbench: mc_mod.MulticoreBenchmark, params,
     sims feeding one pooled predictor (shared RT cache, core-id context
     channel), demuxed per core and summed per benchmark.  The scheduler
     quantum travels as ``config.quantum`` (None = scheduler default)."""
-    if legacy:
-        config = legacy_engine_config(config, legacy,
-                                      "capsim_simulate_multicore")
+    reject_legacy_kwargs(legacy, "capsim_simulate_multicore")
     engine = SimulationEngine.from_config(params, cfg, vocab, config,
                                           timing_params=timing_params)
     return engine.run_multicore([mbench])[0]

@@ -54,6 +54,13 @@ def _build_engine_config(args):
     if args.faults:
         overrides["faults"] = parse_faults(args.faults)
         overrides["fault_seed"] = args.fault_seed
+    if args.subsample is not None:
+        from repro.core.engine_config import SamplingConfig
+        overrides["sampling"] = SamplingConfig(
+            fraction=args.subsample, strata=args.strata,
+            seed=args.sample_seed,
+            min_clips_per_stratum=args.min_clips_per_stratum,
+            bootstrap_resamples=args.bootstrap_resamples)
     return config.replace(**overrides)
 
 
@@ -81,9 +88,13 @@ def serve_capsim(args) -> None:
         wall = time.time() - t0
         stats = engine.last_stats
         for mr in mresults:
-            print(f"  {mr.name:16s} x{mr.n_cores} cores "
-                  f"clips={mr.n_clips:5d} "
-                  f"predicted={mr.predicted_cycles:12.0f} core-cycles")
+            line = (f"  {mr.name:16s} x{mr.n_cores} cores "
+                    f"clips={mr.n_clips:5d} "
+                    f"predicted={mr.predicted_cycles:12.0f} core-cycles")
+            if mr.cycles_ci is not None:
+                lo, hi = mr.cycles_ci
+                line += f"  [{lo:.0f}, {hi:.0f}] 95% CI"
+            print(line)
             for cr in mr.cores:
                 print(f"    {cr.name:16s} clips={cr.n_clips:5d} "
                       f"predicted={cr.predicted_cycles:12.0f} cycles")
@@ -97,8 +108,14 @@ def serve_capsim(args) -> None:
         wall = time.time() - t0
         stats = engine.last_stats
         for r in results:
-            print(f"  {r.name:16s} clips={r.n_clips:5d} "
-                  f"predicted={r.predicted_cycles:12.0f} cycles")
+            line = (f"  {r.name:16s} clips={r.n_clips:5d} "
+                    f"predicted={r.predicted_cycles:12.0f} cycles")
+            if r.cycles_ci is not None:
+                lo, hi = r.cycles_ci
+                line += (f"  [{lo:.0f}, {hi:.0f}] 95% CI "
+                         f"({r.clips_predicted} predicted + "
+                         f"{r.clips_extrapolated} extrapolated)")
+            print(line)
         served = f"{len(results)} benchmarks"
     print(f"served {served} "
           f"({stats.n_clips} clips, {stats.n_batches} device batches, "
@@ -257,6 +274,24 @@ def main() -> None:
                     help="shard inference over an N-device data mesh "
                          "(predict dispatch + RT-cache encode passes; "
                          "bitwise-equal to unsharded).  0 = no mesh")
+    ap.add_argument("--subsample", type=float, default=None,
+                    metavar="FRACTION",
+                    help="analytical-ML fusion: predict only a "
+                         "stratified FRACTION of each benchmark's clips "
+                         "and extrapolate the rest from analytical "
+                         "features with a bootstrap CI (default: full "
+                         "prediction)")
+    ap.add_argument("--strata", type=int, default=4,
+                    help="--subsample: quantile strata over the "
+                         "analytical cycle estimate")
+    ap.add_argument("--min-clips-per-stratum", type=int, default=2,
+                    help="--subsample: floor of sampled clips per "
+                         "non-empty stratum")
+    ap.add_argument("--bootstrap-resamples", type=int, default=200,
+                    help="--subsample: bootstrap resamples behind the "
+                         "95%% CI (0 disables)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="--subsample: sampling + bootstrap seed")
     ap.add_argument("--engine-config", default=None, metavar="JSON",
                     help="EngineConfig as a JSON object or a path to a "
                          "JSON file; individual flags override its "

@@ -31,14 +31,16 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import analytical
 from repro.core import context as ctx_mod
 from repro.core import predictor as pred_mod
+from repro.core import sampler as sampler_mod
 from repro.core.engine import BatchedPredictor
-from repro.core.engine_config import EngineConfig, legacy_engine_config
+from repro.core.engine_config import EngineConfig, reject_legacy_kwargs
 from repro.core.rt_cache import RTCache, RTCacheStats
 
 
@@ -58,6 +60,14 @@ class Result:
     total_cycles: float
     n_clips: int
     seconds: float
+    # --- PredictionReport fields (config.sampling flushes only) ---
+    cycles_ci: Optional[Tuple[float, float]] = None
+    clips_predicted: Optional[int] = None     # None -> every clip (full path)
+    clips_extrapolated: int = 0
+
+    def __post_init__(self):
+        if self.clips_predicted is None:
+            self.clips_predicted = self.n_clips
 
 
 def validate_request(req: Request, config: EngineConfig,
@@ -106,15 +116,17 @@ class PredictorEngine:
     """Construction is config-first: batching, precision, RT cache and
     the device mesh all travel in one ``EngineConfig`` (a non-empty
     ``mesh_shape`` shards every flush's device batches AND the RT-cache
-    encode passes over the data mesh, bitwise equal to unsharded).  The
-    old loose keyword arguments (``batch_size=``, ``precision=``, ...)
-    still work but raise a ``DeprecationWarning``."""
+    encode passes over the data mesh, bitwise equal to unsharded).
+    ``config.sampling`` switches flushes to the analytical-ML fusion
+    path: only a stratified sample of each request's clips runs through
+    the predictor, the rest extrapolate from token-derived features, and
+    each ``Result`` carries a bootstrap CI.  The pre-PR-6 loose keyword
+    signature is retired: extra keywords raise ``TypeError`` pointing at
+    ``EngineConfig``."""
 
     def __init__(self, params, cfg,
                  config: Optional[EngineConfig] = None, **legacy):
-        if legacy:
-            config = legacy_engine_config(config, legacy,
-                                          "PredictorEngine")
+        reject_legacy_kwargs(legacy, "PredictorEngine")
         config = config or EngineConfig()
         self.config = config
         if config.precision == "int8":
@@ -192,6 +204,8 @@ class PredictorEngine:
         # flushes are independent: each may carry a different (but
         # internally consistent) context layout
         backend.reset_context_width()
+        if self.config.sampling is not None:
+            return self._flush_sampled(reqs, backend, t0)
         for r in reqs:
             backend.add(r.clip_tokens, r.context_tokens, r.clip_mask)
         times = backend.drain()               # exactly this flush's clips
@@ -209,5 +223,57 @@ class PredictorEngine:
                 total_cycles=float(times[off:off + k].sum()),
                 n_clips=k,
                 seconds=seconds * (k / max(n, 1))))
+            off += k
+        return results
+
+    def _flush_sampled(self, reqs: List[Request],
+                       backend: BatchedPredictor,
+                       t0: float) -> List[Result]:
+        """Fusion path of ``flush()``: per request, stratify on
+        token-derived features (``analytical.token_clip_features`` —
+        serving never sees the columnar trace), predict only the
+        stratified sample, extrapolate the rest, and attach the
+        bootstrap CI.  Every request still resolves to exactly one
+        typed ``Result``; the draw is keyed by ``request_id`` so a
+        retried request samples identically."""
+        scfg = self.config.sampling
+        plans = []
+        for r in reqs:
+            feats = analytical.token_clip_features(r.clip_tokens,
+                                                   r.clip_mask)
+            # token features have no analytical-cycles column; clip
+            # occupancy (column 0) is the work-amount proxy
+            strata = analytical.stratify(feats, scfg.strata,
+                                         key_column=0)
+            sampled, _ = sampler_mod.stratified_sample(
+                strata, scfg.fraction, scfg.min_clips_per_stratum,
+                scfg.seed, key=r.request_id)
+            if sampled.shape[0]:
+                backend.add(r.clip_tokens[sampled],
+                            r.context_tokens[sampled],
+                            r.clip_mask[sampled])
+            plans.append((feats, strata, sampled))
+        preds = backend.drain()               # exactly the sampled clips
+        if self._cache is not None:
+            self._cache.persist()             # no-op without a store_dir
+        n = preds.shape[0]
+        seconds = time.time() - t0
+
+        results = []
+        off = 0
+        for r, (feats, strata, sampled) in zip(reqs, plans):
+            k = int(sampled.shape[0])
+            rep = analytical.fuse_predictions(
+                feats, strata, sampled, preds[off:off + k],
+                bootstrap_resamples=scfg.bootstrap_resamples,
+                seed=scfg.seed, key=r.request_id)
+            results.append(Result(
+                request_id=r.request_id,
+                total_cycles=rep.total_cycles,
+                n_clips=int(r.clip_tokens.shape[0]),
+                seconds=seconds * (k / max(n, 1)),
+                cycles_ci=rep.cycles_ci,
+                clips_predicted=rep.clips_predicted,
+                clips_extrapolated=rep.clips_extrapolated))
             off += k
         return results

@@ -57,7 +57,9 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import analytical
 from repro.core import predictor as pred_mod
+from repro.core import sampler as sampler_mod
 from repro.core.engine import BatchedPredictor
 from repro.core.engine_config import EngineConfig
 from repro.core.rt_cache import RTCache
@@ -649,11 +651,14 @@ class SimulationService:
             try:
                 backend = tier.backend()
                 backend.reset_context_width()
-                for qr in batch:
-                    r = qr.req
-                    backend.add(r.clip_tokens, r.context_tokens,
-                                r.clip_mask)
-                box["times"] = backend.drain()
+                if self.config.sampling is not None:
+                    box["times"] = self._drain_sampled(backend, batch)
+                else:
+                    for qr in batch:
+                        r = qr.req
+                        backend.add(r.clip_tokens, r.context_tokens,
+                                    r.clip_mask)
+                    box["times"] = backend.drain()
             except BaseException as exc:      # noqa: BLE001 — re-raised
                 box["exc"] = exc
             finally:
@@ -677,6 +682,46 @@ class SimulationService:
                 self.tier_stats[self._tiers.index(tier)] \
                     .persist_failures += 1
         return box["times"], flush_s          # type: ignore[return-value]
+
+    def _drain_sampled(self, backend: BatchedPredictor,
+                       batch: Sequence[_QueuedRequest]) -> np.ndarray:
+        """Fusion flush body (``config.sampling``): predict only each
+        request's stratified clip sample, extrapolate the rest from
+        token-derived features, and synthesize a FULL-length per-clip
+        times vector — so the NaN guard and per-request scatter in
+        ``_serve_batch`` (and hence the typed-result contract) are
+        untouched.  The bootstrap is skipped here: ``ServiceResult``
+        carries totals, not intervals — use ``PredictorEngine`` with
+        sampling for CIs."""
+        scfg = self.config.sampling
+        plans = []
+        for qr in batch:
+            r = qr.req
+            feats = analytical.token_clip_features(r.clip_tokens,
+                                                   r.clip_mask)
+            strata = analytical.stratify(feats, scfg.strata,
+                                         key_column=0)
+            sampled, _ = sampler_mod.stratified_sample(
+                strata, scfg.fraction, scfg.min_clips_per_stratum,
+                scfg.seed, key=r.request_id)
+            if sampled.shape[0]:
+                backend.add(r.clip_tokens[sampled],
+                            r.context_tokens[sampled],
+                            r.clip_mask[sampled])
+            plans.append((feats, strata, sampled))
+        preds = backend.drain()
+        full: List[np.ndarray] = []
+        off = 0
+        for qr, (feats, strata, sampled) in zip(batch, plans):
+            k = int(sampled.shape[0])
+            rep = analytical.fuse_predictions(
+                feats, strata, sampled, preds[off:off + k],
+                bootstrap_resamples=0, seed=scfg.seed,
+                key=qr.req.request_id)
+            full.append(np.asarray(rep.times, np.float64))
+            off += k
+        return (np.concatenate(full) if full
+                else np.zeros(0, np.float64))
 
     def _spot_check(self, tier: _Tier,
                     batch: Sequence[_QueuedRequest]) -> Optional[float]:

@@ -31,7 +31,12 @@ def _lists(elem: _Strategy, min_size: int = 0,
     return _Strategy(draw)
 
 
-strategies = SimpleNamespace(integers=_integers, lists=_lists)
+def _floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+strategies = SimpleNamespace(integers=_integers, lists=_lists,
+                             floats=_floats)
 
 
 def settings(max_examples: int = 20, deadline=None, **_kw):

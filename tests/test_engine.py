@@ -14,6 +14,7 @@ from repro.core import context as ctx_mod
 from repro.core import predictor
 from repro.core.engine import (BatchedPredictor, SimulationEngine,
                                bucket_sizes, predict_fn)
+from repro.core.engine_config import EngineConfig
 from repro.core.simulate import capsim_simulate
 from repro.core.standardize import ClipEncoder, build_vocab, encode_clip
 from repro.isa import progen
@@ -25,9 +26,9 @@ SMALL_CFG = get_config("capsim").replace(
 # three mixed-size benchmarks: different ckp_num caps and interval sizes
 # exercise full batches, bucketed remainders, and cross-bench boundaries
 MIX = ["503.bwaves", "541.leela", "525.x264"]
-SIM_KW = dict(interval_size=1_500, warmup=200, max_checkpoints=3,
-              l_min=32, l_clip=32, l_token=16, batch_size=16,
-              with_oracle=False)
+SIM_EC = EngineConfig(interval_size=1_500, warmup=200, max_checkpoints=3,
+                      l_min=32, l_clip=32, l_token=16, batch_size=16,
+                      with_oracle=False)
 
 
 @pytest.fixture(scope="module")
@@ -37,7 +38,7 @@ def params():
 
 @pytest.fixture(scope="module")
 def engine_results(params):
-    engine = SimulationEngine(params, SMALL_CFG, VOCAB, **SIM_KW)
+    engine = SimulationEngine(params, SMALL_CFG, VOCAB, SIM_EC)
     engine.submit_names(MIX)
     return engine.run(), engine.last_stats
 
@@ -48,7 +49,7 @@ def test_engine_matches_capsim_simulate_bitwise(params, engine_results):
     results, _ = engine_results
     for name, r in zip(MIX, results):
         solo = capsim_simulate(progen.build_benchmark(name), params,
-                               SMALL_CFG, VOCAB, **SIM_KW)
+                               SMALL_CFG, VOCAB, SIM_EC)
         assert r.name == solo.name == name
         assert r.n_clips == solo.n_clips
         assert r.n_instructions == solo.n_instructions
@@ -80,11 +81,13 @@ def test_batched_predictor_order_and_remainder(params):
                       (n, ctx_mod.CONTEXT_LEN)).astype(np.int32)
     mask = np.ones((n, 32), np.float32)
 
-    whole = BatchedPredictor(params, SMALL_CFG, batch_size=16)
+    whole = BatchedPredictor(params, SMALL_CFG,
+                             config=EngineConfig(batch_size=16))
     whole.add(tok, ctx, mask)
     ref = whole.drain()
 
-    split = BatchedPredictor(params, SMALL_CFG, batch_size=16)
+    split = BatchedPredictor(params, SMALL_CFG,
+                             config=EngineConfig(batch_size=16))
     for lo, hi in ((0, 5), (5, 17), (17, 23)):
         split.add(tok[lo:hi], ctx[lo:hi], mask[lo:hi])
     out = split.drain()

@@ -1,8 +1,9 @@
 """EngineConfig: the unified construction surface (PR 6 satellite).
 
-Covers: validation + JSON round trip, the deprecated kwarg shims on all
-four entry points (warn AND produce the same engine behavior as the
-config path), and ``from_config`` equivalence.
+Covers: validation + JSON round trip (including the nested
+``SamplingConfig``), the retired PR-6 kwarg shims on all four entry
+points (legacy keywords must raise ``TypeError`` pointing at
+``EngineConfig``), and ``from_config`` equivalence.
 """
 import warnings
 
@@ -14,7 +15,8 @@ from repro.configs import get_config
 from repro.core import predictor
 from repro.core import standardize as std_mod
 from repro.core.engine import BatchedPredictor, SimulationEngine
-from repro.core.engine_config import EngineConfig, legacy_engine_config
+from repro.core.engine_config import (EngineConfig, SamplingConfig,
+                                      reject_legacy_kwargs)
 from repro.core.simulate import capsim_simulate, capsim_simulate_multicore
 from repro.isa import multicore, progen
 from repro.serving.engine import PredictorEngine, Request
@@ -42,6 +44,7 @@ def test_defaults_unsharded():
     assert ec.mesh_shape == ()
     assert ec.n_shards == 0
     assert ec.rt_cache and ec.use_context and ec.with_oracle
+    assert ec.sampling is None
 
 
 def test_mesh_shape_normalization():
@@ -66,6 +69,7 @@ def test_frozen():
     dict(multicore=-1),
     dict(peer_channels=True),               # needs multicore >= 1
     dict(quantum=0),
+    dict(sampling=42),                      # not a SamplingConfig
 ])
 def test_validate_rejects(bad):
     with pytest.raises(ValueError):
@@ -80,103 +84,116 @@ def test_json_round_trip():
     assert isinstance(ec.to_dict()["mesh_shape"], list)
 
 
+# ------------------------------ SamplingConfig ------------------------------ #
+
+def test_sampling_defaults_and_validation():
+    sc = SamplingConfig()
+    assert 0.0 < sc.fraction <= 1.0
+    assert sc.strata >= 1 and sc.min_clips_per_stratum >= 1
+    for bad in (dict(fraction=0.0), dict(fraction=1.5),
+                dict(fraction=-0.1), dict(strata=0),
+                dict(min_clips_per_stratum=0),
+                dict(bootstrap_resamples=-1)):
+        with pytest.raises(ValueError):
+            SamplingConfig(**bad)
+
+
+def test_sampling_json_round_trip():
+    ec = EngineConfig(sampling=SamplingConfig(fraction=0.25, strata=3,
+                                              seed=7, bootstrap_resamples=9))
+    rt = EngineConfig.from_json(ec.to_json())
+    assert rt == ec
+    assert isinstance(rt.sampling, SamplingConfig)
+    # sampling=None round-trips as None
+    assert EngineConfig.from_json(EngineConfig().to_json()).sampling is None
+
+
+def test_sampling_from_dict_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown SamplingConfig fields"):
+        SamplingConfig.from_dict({"fractions": 0.1})
+    with pytest.raises(ValueError):
+        EngineConfig.from_dict(
+            {"sampling": {"fraction": 0.1, "bogus": 1}})
+
+
+def test_sampling_dict_normalizes_in_engine_config():
+    ec = EngineConfig(sampling={"fraction": 0.5, "strata": 2})
+    assert isinstance(ec.sampling, SamplingConfig)
+    assert ec.sampling.fraction == 0.5 and ec.sampling.strata == 2
+
+
 def test_from_dict_rejects_unknown():
     with pytest.raises(ValueError, match="unknown EngineConfig fields"):
         EngineConfig.from_dict({"batch_sized": 4})
 
 
-def test_legacy_helper_unknown_name_is_type_error():
+# ------------------------------ retired shims ------------------------------ #
+
+def test_reject_legacy_unknown_name_is_type_error():
     with pytest.raises(TypeError, match="unexpected keyword"):
-        legacy_engine_config(None, {"batch_sized": 4}, "X")
+        reject_legacy_kwargs({"batch_sized": 4}, "X")
 
 
-def test_legacy_helper_folds_and_warns():
-    with pytest.warns(DeprecationWarning, match="EngineConfig"):
-        ec = legacy_engine_config(EngineConfig(l_min=50),
-                                  {"batch_size": 8}, "X")
-    assert ec.batch_size == 8 and ec.l_min == 50
+def test_reject_legacy_known_field_points_at_config():
+    with pytest.raises(TypeError, match="EngineConfig\\(batch_size=\\.\\.\\."):
+        reject_legacy_kwargs({"batch_size": 8}, "X")
+    reject_legacy_kwargs({}, "X")           # no kwargs -> no-op
 
 
-# ------------------------------ entry points ------------------------------ #
-
-def test_capsim_simulate_shim_equivalent(params, vocab):
+def test_capsim_simulate_legacy_kwargs_raise(params, vocab):
     bench = progen.build_benchmark("505.mcf")
-    ref = capsim_simulate(bench, params, SMALL_CFG, vocab, EC)
-    with pytest.warns(DeprecationWarning):
-        shim = capsim_simulate(bench, params, SMALL_CFG, vocab,
-                               interval_size=1_000, warmup=100,
-                               max_checkpoints=1, batch_size=16)
-    assert shim.predicted_cycles == ref.predicted_cycles
-    assert shim.oracle_cycles == ref.oracle_cycles
+    with pytest.raises(TypeError, match="EngineConfig"):
+        capsim_simulate(bench, params, SMALL_CFG, vocab,
+                        interval_size=1_000, batch_size=16)
 
 
-def test_capsim_simulate_multicore_shim_equivalent(params, vocab):
+def test_capsim_simulate_multicore_legacy_kwargs_raise(params, vocab):
     mb = multicore.build_multicore_benchmark(
         list(multicore.MULTICORE_NAMES)[0], 2)
-    ref = capsim_simulate_multicore(mb, params, SMALL_CFG, vocab, EC)
-    with pytest.warns(DeprecationWarning):
-        shim = capsim_simulate_multicore(
-            mb, params, SMALL_CFG, vocab, interval_size=1_000,
-            warmup=100, max_checkpoints=1, batch_size=16)
-    assert shim.predicted_cycles == ref.predicted_cycles
-    assert [c.predicted_cycles for c in shim.cores] == \
-        [c.predicted_cycles for c in ref.cores]
+    with pytest.raises(TypeError, match="EngineConfig"):
+        capsim_simulate_multicore(mb, params, SMALL_CFG, vocab,
+                                  interval_size=1_000, batch_size=16)
 
 
-def test_simulation_engine_shim_and_from_config(params, vocab):
+def test_simulation_engine_legacy_kwargs_raise(params, vocab):
+    with pytest.raises(TypeError, match="EngineConfig"):
+        SimulationEngine(params, SMALL_CFG, vocab, batch_size=16)
+    with pytest.raises(TypeError):
+        SimulationEngine(params, SMALL_CFG, vocab, batch_sized=4)
+
+
+def test_engine_construction_does_not_warn(params, vocab):
     bench = progen.build_benchmark("541.leela")
-    ref = SimulationEngine.from_config(params, SMALL_CFG, vocab, EC)
-    r_ref = ref.run([bench])[0]
-    with pytest.warns(DeprecationWarning):
-        shim = SimulationEngine(params, SMALL_CFG, vocab,
-                                interval_size=1_000, warmup=100,
-                                max_checkpoints=1, batch_size=16)
-    assert shim.config == EC
-    assert shim.run([bench])[0].predicted_cycles == r_ref.predicted_cycles
-    # engine-internal BatchedPredictor construction must not warn
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         SimulationEngine.from_config(params, SMALL_CFG, vocab,
                                      EC).run([bench])
 
 
-def test_simulation_engine_unknown_kwarg_raises(params, vocab):
-    with pytest.raises(TypeError):
-        SimulationEngine(params, SMALL_CFG, vocab, batch_sized=4)
+def test_batched_predictor_legacy_kwargs_raise(params, vocab):
+    with pytest.raises(TypeError, match="EngineConfig"):
+        BatchedPredictor(params, SMALL_CFG, batch_size=16)
 
 
-def test_batched_predictor_shim(params, vocab):
-    rng = np.random.RandomState(0)
-    tok = rng.randint(0, vocab.size, (5, 128, SMALL_CFG.clip_tokens)
-                      ).astype(np.int32)
-    ctx = rng.randint(0, vocab.size, (5, SMALL_CFG.context_tokens)
-                      ).astype(np.int32)
-    mask = np.ones((5, 128), np.float32)
-    ref = BatchedPredictor(params, SMALL_CFG,
-                           config=EngineConfig(batch_size=16))
-    ref.add(tok, ctx, mask)
-    with pytest.warns(DeprecationWarning):
-        shim = BatchedPredictor(params, SMALL_CFG, batch_size=16)
-    shim.add(tok, ctx, mask)
-    assert np.array_equal(shim.drain(), ref.drain())
-
-
-def test_predictor_engine_shim(params, vocab):
+def test_predictor_engine_legacy_kwargs_raise(params, vocab):
+    with pytest.raises(TypeError, match="EngineConfig"):
+        PredictorEngine(params, SMALL_CFG, batch_size=8)
+    # the config path still serves
     rng = np.random.RandomState(1)
     tok = rng.randint(0, vocab.size, (4, 128, SMALL_CFG.clip_tokens)
                       ).astype(np.int32)
     ctx = rng.randint(0, vocab.size, (4, SMALL_CFG.context_tokens)
                       ).astype(np.int32)
     req = Request(0, tok, ctx, np.ones((4, 128), np.float32))
-    ref = PredictorEngine.from_config(params, SMALL_CFG,
+    eng = PredictorEngine.from_config(params, SMALL_CFG,
                                       EngineConfig(batch_size=8))
-    ref.submit(req)
-    r_ref = ref.flush()[0]
-    with pytest.warns(DeprecationWarning):
-        shim = PredictorEngine(params, SMALL_CFG, batch_size=8)
-    shim.submit(req)
-    assert shim.flush()[0].total_cycles == r_ref.total_cycles
+    eng.submit(req)
+    res = eng.flush()[0]
+    assert res.n_clips == 4 and res.clips_predicted == 4
+    assert res.clips_extrapolated == 0 and res.cycles_ci is None
 
+
+# ------------------------------ entry points ------------------------------ #
 
 def test_peer_channels_reserved(params, vocab):
     ec = EC.replace(multicore=2, peer_channels=True)

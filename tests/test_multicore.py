@@ -24,6 +24,7 @@ from repro.core import context as ctx_mod
 from repro.core import predictor
 from repro.core import standardize as std_mod
 from repro.core.engine import SimulationEngine
+from repro.core.engine_config import EngineConfig
 from repro.core.standardize import CORE, build_vocab
 from repro.isa import funcsim, multicore, progen, timing
 from repro.isa.compiled import IREG_SLOT, compile_program
@@ -37,6 +38,7 @@ SMALL_CFG = get_config("capsim").replace(
 SIM_KW = dict(interval_size=1_200, warmup=150, max_checkpoints=2,
               l_min=32, l_clip=32, l_token=16, batch_size=16,
               with_oracle=True)
+SIM_EC = EngineConfig(**SIM_KW)
 
 
 @pytest.fixture(scope="module")
@@ -282,7 +284,7 @@ def _sequential_core_reference(mb, params, *, interval_size,
 def mc_engine_results(params):
     mbenches = [multicore.build_multicore_benchmark("mt.mix", 2),
                 multicore.build_multicore_benchmark("mt.chase", 3)]
-    engine = SimulationEngine(params, SMALL_CFG, VOCAB, **SIM_KW)
+    engine = SimulationEngine(params, SMALL_CFG, VOCAB, SIM_EC)
     return mbenches, engine.run_multicore(mbenches), engine
 
 
@@ -321,11 +323,11 @@ def test_rt_cache_shared_across_cores(params):
     """All cores of one multi-threaded program share a token table
     (immediates collapse to <CONST>), so adding cores must not add RT
     rows — and a 4-core run encodes exactly what a 1-core run does."""
-    kw = dict(SIM_KW, with_oracle=False)
-    e1 = SimulationEngine(params, SMALL_CFG, VOCAB, **kw)
+    ec = SIM_EC.replace(with_oracle=False)
+    e1 = SimulationEngine(params, SMALL_CFG, VOCAB, ec)
     e1.run_multicore([multicore.build_multicore_benchmark("mt.mix", 1)])
     rows1 = e1.last_rt_stats.n_rows_encoded
-    e4 = SimulationEngine(params, SMALL_CFG, VOCAB, **kw)
+    e4 = SimulationEngine(params, SMALL_CFG, VOCAB, ec)
     e4.run_multicore([multicore.build_multicore_benchmark("mt.mix", 4)])
     rows4 = e4.last_rt_stats.n_rows_encoded
     assert rows1 == rows4

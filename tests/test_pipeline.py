@@ -6,6 +6,7 @@ import pytest
 from repro.configs import get_config
 from repro.core import context as ctx_mod
 from repro.core import predictor
+from repro.core.engine_config import EngineConfig
 from repro.core.intervals import basic_block_leaders, pick_intervals
 from repro.core.simulate import capsim_simulate
 from repro.core.standardize import build_vocab
@@ -89,7 +90,8 @@ def test_basic_block_leaders():
 
 def test_serving_engine_multi_request(tiny_ds):
     params = predictor.init_params(SMALL_CFG, jax.random.PRNGKey(0))
-    engine = PredictorEngine(params, SMALL_CFG, batch_size=8)
+    engine = PredictorEngine(params, SMALL_CFG,
+                             EngineConfig(batch_size=8))
     n1, n2 = 5, 9
     engine.submit(Request(1, tiny_ds.clip_tokens[:n1],
                           tiny_ds.context_tokens[:n1],
@@ -102,7 +104,8 @@ def test_serving_engine_multi_request(tiny_ds):
     assert results[0].n_clips == n1 and results[1].n_clips == n2
     assert all(r.total_cycles > 0 for r in results)
     # batching across requests == predicting each clip alone
-    lone = PredictorEngine(params, SMALL_CFG, batch_size=8)
+    lone = PredictorEngine(params, SMALL_CFG,
+                           EngineConfig(batch_size=8))
     lone.submit(Request(3, tiny_ds.clip_tokens[:n1],
                         tiny_ds.context_tokens[:n1],
                         tiny_ds.clip_mask[:n1]))
@@ -121,7 +124,8 @@ def test_serving_engine_multi_request(tiny_ds):
     assert rt.n_rows_encoded == encoded_before
     assert replay.total_cycles == results[0].total_cycles
     # and the monolithic reference path agrees
-    mono = PredictorEngine(params, SMALL_CFG, batch_size=8, rt_cache=False)
+    mono = PredictorEngine(params, SMALL_CFG,
+                           EngineConfig(batch_size=8, rt_cache=False))
     mono.submit(Request(5, tiny_ds.clip_tokens[:n1],
                         tiny_ds.context_tokens[:n1],
                         tiny_ds.clip_mask[:n1]))
@@ -132,9 +136,9 @@ def test_capsim_simulate_end_to_end():
     bench = progen.build_benchmark("525.x264")
     params = predictor.init_params(SMALL_CFG, jax.random.PRNGKey(0))
     r = capsim_simulate(bench, params, SMALL_CFG, VOCAB,
-                        interval_size=2_000, warmup=200,
-                        max_checkpoints=2, l_min=32, l_clip=32,
-                        batch_size=16)
+                        EngineConfig(interval_size=2_000, warmup=200,
+                                     max_checkpoints=2, l_min=32,
+                                     l_clip=32, batch_size=16))
     assert r.n_intervals == 2
     assert r.n_instructions == 4_000
     assert r.predicted_cycles > 0

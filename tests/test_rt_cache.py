@@ -16,6 +16,7 @@ import pytest
 from repro.configs import get_config
 from repro.core import predictor
 from repro.core.engine import BatchedPredictor, SimulationEngine
+from repro.core.engine_config import EngineConfig
 from repro.core.rt_cache import PAD_ROW_ID, RTCache, encode_bucket
 from repro.core.standardize import build_vocab, encode_fixed_clips, \
     fixed_clip_indices
@@ -26,9 +27,9 @@ VOCAB = build_vocab()
 SMALL_CFG = get_config("capsim").replace(
     d_model=32, head_dim=8, d_ff=64, dtype="float32")
 MIX = ["503.bwaves", "541.leela", "525.x264"]
-SIM_KW = dict(interval_size=1_500, warmup=200, max_checkpoints=3,
-              l_min=32, l_clip=32, l_token=16, batch_size=16,
-              with_oracle=False)
+SIM_EC = EngineConfig(interval_size=1_500, warmup=200, max_checkpoints=3,
+                      l_min=32, l_clip=32, l_token=16, batch_size=16,
+                      with_oracle=False)
 
 
 @pytest.fixture(scope="module")
@@ -74,8 +75,8 @@ def test_engine_rt_cache_bitwise_per_benchmark(params):
     per benchmark — the CI gate's unit-scale twin."""
     runs = {}
     for rt in (True, False):
-        eng = SimulationEngine(params, SMALL_CFG, VOCAB, rt_cache=rt,
-                               **SIM_KW)
+        eng = SimulationEngine(params, SMALL_CFG, VOCAB,
+                               SIM_EC.replace(rt_cache=rt))
         eng.submit_names(MIX)
         runs[rt] = eng.run()
         if rt:
@@ -96,11 +97,13 @@ def test_batched_predictor_token_path_through_cache(params):
     bucketed remainder (zero-row padding)."""
     rng = np.random.RandomState(3)
     cache, tok, rt_idx, ctx, mask = _table_batch(params, rng, B=23, L=32)
-    mono = BatchedPredictor(params, SMALL_CFG, batch_size=16)
+    mono = BatchedPredictor(params, SMALL_CFG,
+                            config=EngineConfig(batch_size=16))
     mono.add(tok, ctx, mask)
     ref = mono.drain()
 
-    cached = BatchedPredictor(params, SMALL_CFG, batch_size=16,
+    cached = BatchedPredictor(params, SMALL_CFG,
+                              config=EngineConfig(batch_size=16),
                               rt_cache=cache)
     for lo, hi in ((0, 5), (5, 17), (17, 23)):
         cached.add(tok[lo:hi], ctx[lo:hi], mask[lo:hi])
@@ -154,8 +157,8 @@ def test_bf16_precision_within_relative_error(params):
     softmax/accumulation — per-benchmark predictions within 1%."""
     results = {}
     for prec in (None, "bf16"):
-        eng = SimulationEngine(params, SMALL_CFG, VOCAB, precision=prec,
-                               **SIM_KW)
+        eng = SimulationEngine(params, SMALL_CFG, VOCAB,
+                               SIM_EC.replace(precision=prec))
         eng.submit_names(MIX)
         results[prec] = eng.run()
     for a, b in zip(results[None], results["bf16"]):
