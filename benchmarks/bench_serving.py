@@ -32,10 +32,12 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 import time
+import urllib.request
 from pathlib import Path
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -46,9 +48,10 @@ if __package__ in (None, ""):   # direct `python benchmarks/bench_serving.py`
 from benchmarks.common import (SERVING_BENCH_SCHEMA_VERSION, bench_cfg,
                                full_cfg, get_mixed_dataset)
 from repro.core import predictor
-from repro.core.engine_config import EngineConfig
+from repro.core.engine_config import EngineConfig, ObservabilityConfig
 from repro.serving.engine import PredictorEngine, Request
-from repro.serving.service import ServiceSLA, SimulationService
+from repro.serving.service import (TIER_TRANSITIONS_TOTAL, ServiceSLA,
+                                   SimulationService)
 
 # ~10% total injected fault probability per opportunity, split evenly
 # across every chaos kind the stack supports
@@ -59,6 +62,76 @@ FAULT_MIX_10PCT = {"device_error": 0.02, "nan_output": 0.02,
 
 def _percentile(xs: List[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+_PROM_LINE = re.compile(r'^(\w+)\{(.*)\} (\S+)$')
+_PROM_LABEL = re.compile(r'(\w+)="([^"]*)"')
+
+
+def scrape_transitions(port: int, instance: str) -> List[Dict]:
+    """GET /metrics and parse this service's tier-transition counter
+    series — the same scrape a production Prometheus would do, driven
+    mid-bench so the exporter path is exercised under live traffic."""
+    with urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics", timeout=10) as resp:
+        text = resp.read().decode()
+    rows = []
+    for line in text.splitlines():
+        m = _PROM_LINE.match(line)
+        if not m or m.group(1) != TIER_TRANSITIONS_TOTAL:
+            continue
+        labels = dict(_PROM_LABEL.findall(m.group(2)))
+        if labels.get("instance") != instance:
+            continue
+        labels["count"] = int(float(m.group(3)))
+        rows.append(labels)
+    return rows
+
+
+def transition_gates(probe: List[Dict], stats: Dict,
+                     flight_last: Optional[Dict]) -> Dict:
+    """Cross-check the three independent transition ledgers: the scraped
+    counter series, the snapshot's per-tier counters, and the flight
+    recorder's event ring (when a postmortem was taken).
+
+    Every demotion recorded on a non-floor tier produced exactly one
+    transition (floor trips have nowhere to go); every promotion
+    produced one.  All three ledgers must agree on those totals.
+    """
+    tiers = stats["tiers"]
+    names = list(tiers)
+    exp_demote = sum(tiers[n]["demotions"] for n in names[:-1])
+    exp_promote = sum(tiers[n]["promotions"] for n in names)
+    got_demote = sum(r["count"] for r in probe
+                     if r["reason"] != "promotion")
+    got_promote = sum(r["count"] for r in probe
+                      if r["reason"] == "promotion")
+    out = {
+        "expected_demote_transitions": exp_demote,
+        "expected_promote_transitions": exp_promote,
+        "probed_demote_transitions": got_demote,
+        "probed_promote_transitions": got_promote,
+        "metrics_consistent": (got_demote == exp_demote
+                               and got_promote == exp_promote),
+    }
+    if flight_last is not None:
+        # the postmortem freezes (events, state) atomically inside
+        # _demote, so ITS ledgers must agree with each other too
+        ev = [e for e in flight_last["events"]
+              if e["kind"] == "tier_transition"]
+        ptiers = flight_last["state"]["tiers"]
+        pnames = list(ptiers)
+        p_exp_dem = sum(ptiers[n]["demotions"] for n in pnames[:-1])
+        p_exp_pro = sum(ptiers[n]["promotions"] for n in pnames)
+        f_dem = sum(1 for e in ev if e["reason"] != "promotion")
+        f_pro = sum(1 for e in ev if e["reason"] == "promotion")
+        out["flight_demote_events"] = f_dem
+        out["flight_promote_events"] = f_pro
+        out["flight_consistent"] = (f_dem == p_exp_dem
+                                    and f_pro == p_exp_pro)
+    else:
+        out["flight_consistent"] = None      # no demotion, nothing to dump
+    return out
 
 
 def make_requests(ds, n_requests: int, clips_per_req: int, id0: int
@@ -159,14 +232,22 @@ def phase_block(results, latencies, wall: float, svc) -> Dict:
 
 
 def run_level(params, cfg, ds, n_tenants: int, *, quick: bool,
-              rel_err_gate: float, seed: int) -> Dict:
+              rel_err_gate: float, seed: int,
+              metrics_port: Optional[int] = None,
+              flight_dir: Optional[str] = None,
+              trace_out: Optional[str] = None) -> Dict:
     per_req = 8 if quick else 16
     n_req = n_tenants * (4 if quick else 6)
     mean_gap = 0.25 if quick else 0.1
     deadline = 30.0 if quick else 120.0
+    obs_cfg = None
+    if flight_dir or trace_out:
+        obs_cfg = ObservabilityConfig(trace=bool(trace_out),
+                                      flight_dir=flight_dir)
     config = EngineConfig(
         batch_size=32 if quick else 64, l_clip=64, l_token=16,
-        faults=FAULT_MIX_10PCT, fault_seed=seed)
+        faults=FAULT_MIX_10PCT, fault_seed=seed,
+        observability=obs_cfg)
     sla = ServiceSLA(queue_limit=max(64, 2 * n_req),
                      default_deadline_s=deadline,
                      watchdog_s=15.0 if quick else 45.0,
@@ -198,6 +279,11 @@ def run_level(params, cfg, ds, n_tenants: int, *, quick: bool,
                                            mean_gap, deadline, rng)
         level["faulted"] = phase_block(res_f, lat_f, wall_f, svc)
         level["faults_fired"] = svc.injector.stats()
+        if metrics_port is not None:
+            # live scrape between phases: the exporter serves while the
+            # service is still taking traffic
+            level["metrics_probe_mid"] = scrape_transitions(
+                metrics_port, svc.instance)
 
         svc.injector.set_enabled(False)
         res_r, lat_r, wall_r = drive_phase(svc, r_reqs, n_tenants,
@@ -225,6 +311,17 @@ def run_level(params, cfg, ds, n_tenants: int, *, quick: bool,
             "repromoted": svc.current_tier == svc.tier_stats[0].name,
         }
         level["stats"] = svc.stats()
+        if metrics_port is not None:
+            probe = scrape_transitions(metrics_port, svc.instance)
+            level["metrics_probe"] = probe
+            flight_last = (svc.obs.flight.last
+                           if svc.obs.flight is not None else None)
+            level["gates"].update(transition_gates(
+                probe, level["stats"], flight_last))
+        if svc.obs.flight is not None:
+            level["postmortems"] = list(svc.obs.flight.postmortems)
+    if trace_out:
+        svc.obs.tracer.dump(trace_out)
     return level
 
 
@@ -239,6 +336,19 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the schema-stamped breakdown artifact")
+    ap.add_argument("--metrics-port", type=int, default=0, metavar="PORT",
+                    help="serve /metrics for the run and probe it "
+                         "between phases (0 = ephemeral port; the "
+                         "tier-transition consistency gates always run)")
+    ap.add_argument("--no-metrics", action="store_true",
+                    help="skip the exporter + probe + consistency gates")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="flight-recorder postmortem directory: every "
+                         "demotion dumps events + spans + metrics + the "
+                         "service snapshot as JSON")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable span tracing; dump the last level's "
+                         "Chrome/Perfetto trace JSON here")
     args = ap.parse_args()
 
     quick = args.quick
@@ -248,13 +358,25 @@ def main() -> None:
     params = predictor.init_params(cfg, jax.random.PRNGKey(0))
     ds = get_mixed_dataset(4 if quick else 8)
 
+    metrics_port = None
+    metrics_server = None
+    if not args.no_metrics:
+        from repro.obs.exporter import serve_metrics
+        metrics_server = serve_metrics(port=args.metrics_port)
+        metrics_port = metrics_server.server_address[1]
+        print(f"metrics: http://127.0.0.1:{metrics_port}/metrics")
+
     out = {"schema_version": SERVING_BENCH_SCHEMA_VERSION,
-           "quick": quick, "rel_err_gate": rel_err_gate, "levels": []}
+           "quick": quick, "rel_err_gate": rel_err_gate,
+           "metrics_port": metrics_port, "levels": []}
     ok = True
     for n in levels:
         print(f"== {n} tenant(s) ==")
         level = run_level(params, cfg, ds, n, quick=quick,
-                          rel_err_gate=rel_err_gate, seed=args.seed)
+                          rel_err_gate=rel_err_gate, seed=args.seed,
+                          metrics_port=metrics_port,
+                          flight_dir=args.flight_dir,
+                          trace_out=args.trace_out)
         out["levels"].append(level)
         for ph in ("healthy", "faulted", "recovery"):
             b = level[ph]
@@ -267,6 +389,16 @@ def main() -> None:
               f"(worst rel err {g['worst_faulted_rel_err']:.2e} <= "
               f"{rel_err_gate}) repromoted={g['repromoted']}")
         ok = ok and g["typed"] and g["gated"] and g["repromoted"]
+        if "metrics_consistent" in g:
+            print(f"  ledgers: metrics_consistent="
+                  f"{g['metrics_consistent']} "
+                  f"(demote {g['probed_demote_transitions']}/"
+                  f"{g['expected_demote_transitions']}, promote "
+                  f"{g['probed_promote_transitions']}/"
+                  f"{g['expected_promote_transitions']}) "
+                  f"flight_consistent={g['flight_consistent']}")
+            ok = ok and g["metrics_consistent"] \
+                and g["flight_consistent"] is not False
 
     # the 1-tenant healthy p99 bound: generous, absolute, runner-safe
     p99_bound = 20.0 if quick else 60.0
@@ -275,6 +407,8 @@ def main() -> None:
     out["gates_pass"] = bool(ok and p99 <= p99_bound)
     print(f"1-tenant healthy p99 {p99:.2f}s (bound {p99_bound}s); "
           f"all gates {'PASS' if out['gates_pass'] else 'FAIL'}")
+    if metrics_server is not None:
+        metrics_server.shutdown()
     if args.json:
         Path(args.json).write_text(json.dumps(out, indent=2))
         print(f"wrote {args.json}")

@@ -45,6 +45,7 @@ from repro.core.engine_config import EngineConfig, SamplingConfig
 from repro.core.simulate import capsim_simulate
 from repro.core.standardize import build_vocab
 from repro.isa import funcsim, multicore, progen, timing
+from repro.obs import REGISTRY
 
 BENCHES = ["503.bwaves", "505.mcf", "548.exchange2"]
 
@@ -543,7 +544,11 @@ def run_multi(emit, *, n_benchmarks: int = 8, quick: bool = False,
                 "frontend_speedup": fe_ratio,
                 **rt_cache_stats,
                 "predict_speedup": predict_speedup},
-            "per_bench": per_bench}
+            "per_bench": per_bench,
+            # the full registry at end of run: span totals, histograms,
+            # per-instance predictor/rt counters — one artifact carries
+            # both the derived figures above and their raw source
+            "metrics": REGISTRY.snapshot()}
 
 
 # --------------------------------------------------------------------------- #
@@ -928,6 +933,67 @@ def run_mesh(emit, *, max_mesh: int = 8, quick: bool = False,
 
 
 # --------------------------------------------------------------------------- #
+# Observability overhead: traced vs untraced warm fused+int8 predict
+# --------------------------------------------------------------------------- #
+
+def run_obs_overhead(emit, *, quick: bool = False, repeats: int = 3,
+                     n_benchmarks: int = 8,
+                     config: "EngineConfig | None" = None,
+                     trace_out: "str | None" = None) -> dict:
+    """Measure what span tracing costs on the hot path.
+
+    Runs the warm fused+int8 suite twice — observability default (metrics
+    registry only, tracer disabled) and with ``trace=True`` — taking the
+    min of ``repeats`` warm passes each, so one GC pause or CI-runner
+    hiccup cannot fake a regression.  The two runs must also stay bitwise
+    equal: tracing must never perturb numerics.  ``--max-obs-overhead``
+    gates the relative overhead (full scale target: <= 2%).
+    """
+    vocab = build_vocab()
+    cfg = predictor.inference_config(bench_cfg() if quick else full_cfg())
+    params = predictor.init_params(cfg, jax.random.PRNGKey(0))
+    names = list(progen.TABLE_II)[:n_benchmarks]
+    benches = [progen.build_benchmark(name) for name in names]
+    ec = (config or bench_scale_config(quick)).replace(
+        warmup=0, with_oracle=False, rt_cache=True,
+        fused_serving=True, precision="int8")
+
+    def best_warm(engine_config):
+        engine = SimulationEngine.from_config(params, cfg, vocab,
+                                              engine_config)
+        engine.run(benches)               # cold: jit + RT-table build
+        best, results = float("inf"), None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            results = engine.run(benches)
+            best = min(best, time.perf_counter() - t0)
+        return best, results, engine
+
+    from repro.core.engine_config import ObservabilityConfig
+    off_s, off_res, _ = best_warm(ec)
+    on_s, on_res, traced = best_warm(ec.replace(
+        observability=ObservabilityConfig(trace=True)))
+    if trace_out:
+        traced.obs.tracer.dump(trace_out)
+    overhead = on_s / max(off_s, 1e-9) - 1.0
+    bitwise = all(a.predicted_cycles == b.predicted_cycles
+                  for a, b in zip(off_res, on_res))
+    n_clips = sum(r.n_clips for r in off_res)
+    emit.emit("speed.obs_overhead", on_s * 1e6 / max(n_clips, 1),
+              f"warm fused+int8 min-of-{repeats}: untraced {off_s:.3f}s "
+              f"vs traced {on_s:.3f}s = {overhead:+.2%} overhead "
+              f"({len(traced.obs.tracer.spans())} spans recorded); "
+              f"cycles {'bitwise equal' if bitwise else 'MISMATCH'}")
+    return {"schema_version": BENCH_SCHEMA_VERSION, "quick": quick,
+            "repeats": repeats, "n_clips": n_clips,
+            "untraced_warm_seconds": off_s,
+            "traced_warm_seconds": on_s,
+            "overhead_ratio": overhead,
+            "spans_recorded": len(traced.obs.tracer.spans()),
+            "bitwise_equal": bitwise}
+
+
+# --------------------------------------------------------------------------- #
 # Subsample fusion: stratified clip subsampling vs the full fused+int8 path
 # --------------------------------------------------------------------------- #
 
@@ -1083,6 +1149,23 @@ if __name__ == "__main__":
                          "from the full fused+int8 prediction by more "
                          "than this relative error (0 disables; "
                          "full-scale target is <= 2%%, quick <= 5%%)")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="observability-overhead pass: warm fused+int8 "
+                         "suite with tracing on vs off (min-of-3), "
+                         "bitwise-gated; see --max-obs-overhead")
+    ap.add_argument("--max-obs-overhead", type=float, default=0.0,
+                    help="--obs-overhead: fail if the traced warm pass "
+                         "is slower than the untraced one by more than "
+                         "this fraction (0 disables; full-scale target "
+                         "is <= 0.02, quick runs use a lenient bound — "
+                         "shared CI runners jitter more than 2%%)")
+    ap.add_argument("--obs-repeats", type=int, default=3,
+                    help="--obs-overhead: warm passes per arm (min "
+                         "taken)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="--obs-overhead: dump the traced arm's "
+                         "Chrome/Perfetto trace JSON here (open at "
+                         "ui.perfetto.dev)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke scale (small model, short intervals)")
     ap.add_argument("--n-benchmarks", type=int, default=8)
@@ -1144,7 +1227,25 @@ if __name__ == "__main__":
                 f"{args.mesh}").strip()
     emitter = CsvEmitter()
     engine_config = resolve_engine_config(args.engine_config, args.quick)
-    if args.dataset_build:
+    if args.obs_overhead:
+        res = run_obs_overhead(emitter, quick=args.quick,
+                               repeats=args.obs_repeats,
+                               n_benchmarks=args.n_benchmarks,
+                               config=engine_config,
+                               trace_out=args.trace_out)
+        if args.json:
+            Path(args.json).write_text(json.dumps(res, indent=2))
+        if not res["bitwise_equal"]:
+            raise SystemExit(
+                "traced run predicted cycles diverged from the "
+                "untraced run — tracing must never perturb numerics")
+        if args.max_obs_overhead and \
+                res["overhead_ratio"] > args.max_obs_overhead:
+            raise SystemExit(
+                f"observability overhead {res['overhead_ratio']:+.2%} > "
+                f"{args.max_obs_overhead:.2%} — tracing is intruding on "
+                "the hot path")
+    elif args.dataset_build:
         res = run_dataset_build(emitter, quick=args.quick)
         if args.json:
             Path(args.json).write_text(json.dumps(res, indent=2))

@@ -33,8 +33,10 @@ VOCAB = build_vocab()
 # instead of KeyError-ing halfway through a reader.  v1 = the implicit
 # pre-stamp schema; v2 adds the stamp itself + the multicore breakdown;
 # v4 adds the predict_stack tier ladder (fused / int8 / fused+int8 warm
-# passes) and the rt_store restart block to the --multi artifact.
-BENCH_SCHEMA_VERSION = 4
+# passes) and the rt_store restart block to the --multi artifact; v5
+# embeds the end-of-run metrics-registry snapshot in the --multi
+# artifact and stamps the --obs-overhead artifact.
+BENCH_SCHEMA_VERSION = 5
 
 # The mesh-scaling JSON (bench_speed --mesh) is a NEW artifact with its
 # own reader, so it gets its own stamp: v3 = v2 fields + the per-mesh
@@ -45,8 +47,10 @@ MESH_BENCH_SCHEMA_VERSION = 3
 # The serving-service JSON (bench_serving) is likewise its own artifact:
 # v1 = per-tenant-level healthy/faulted/recovery phase blocks (p50/p99
 # latency, clips/sec, typed-status counts, end-of-phase tier) + the gate
-# verdicts.
-SERVING_BENCH_SCHEMA_VERSION = 1
+# verdicts; v2 adds the live /metrics probe block (tier-transition
+# counters scraped mid-run), the flight-recorder consistency gate, and
+# the snapshot-shaped ``stats`` block (ServiceSnapshot keys).
+SERVING_BENCH_SCHEMA_VERSION = 2
 
 # The subsample-fusion JSON (bench_speed --subsample) is its own
 # artifact too: v5 = per-benchmark full-vs-fused totals (clip ratio,

@@ -46,7 +46,6 @@ semantics.
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from functools import lru_cache
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
@@ -64,6 +63,7 @@ from repro.core.analytical import PredictionReport
 from repro.core.engine_config import EngineConfig, reject_legacy_kwargs
 from repro.core.rt_cache import RTCache, RTCacheStats
 from repro.isa import funcsim, multicore, progen, timing
+from repro.obs import SPAN_SECONDS_TOTAL, Observability
 
 
 @dataclasses.dataclass
@@ -201,17 +201,82 @@ def bucket_sizes(batch_size: int, align: int = 1) -> Tuple[int, ...]:
     return tuple(sizes)
 
 
-@dataclasses.dataclass
-class FrontendStats:
-    """Host front-end breakdown across one ``SimulationEngine.run``."""
+# stage span name per FrontendStats field — the engine times these via
+# obs spans and the stats view reads the registry back
+_FE_SPANS = {"interpret_seconds": "engine.interpret",
+             "slice_seconds": "engine.slice",
+             "tokenize_seconds": "engine.tokenize",
+             "context_seconds": "engine.context",
+             "analytical_seconds": "engine.analytical"}
 
-    interpret_seconds: float = 0.0    # columnar functional interpreter
-    slice_seconds: float = 0.0        # clip bounds
-    tokenize_seconds: float = 0.0     # token-table gather
-    context_seconds: float = 0.0      # snapshot byte decomposition
-    analytical_seconds: float = 0.0   # fusion-path per-clip features
-    n_instructions: int = 0
-    n_clips: int = 0
+
+class FrontendStats:
+    """Host front-end breakdown across one ``SimulationEngine.run``.
+
+    A live *view* over the obs metrics registry: the engine writes
+    stage spans + counters (the same cells ``/metrics`` serves) and a
+    fresh view snapshots a baseline at construction, so each ``run``
+    reads per-run deltas while the registry keeps lifetime totals.
+    No-arg construction is the all-zeros stand-in.
+    """
+
+    def __init__(self, obs: Optional[Observability] = None,
+                 instance: str = ""):
+        self._obs = obs
+        self._instance = instance
+        base: Dict[str, float] = {}
+        if obs is not None:
+            for field, span in _FE_SPANS.items():
+                base[field] = obs.metrics.value(
+                    SPAN_SECONDS_TOTAL, span=span, instance=instance)
+            base["n_instructions"] = obs.metrics.value(
+                "capsim_frontend_instructions_total", instance=instance)
+            base["n_clips"] = obs.metrics.value(
+                "capsim_frontend_clips_total", instance=instance)
+        self._base = base
+
+    def _span_delta(self, field: str) -> float:
+        if self._obs is None:
+            return 0.0
+        now = self._obs.metrics.value(
+            SPAN_SECONDS_TOTAL, span=_FE_SPANS[field],
+            instance=self._instance)
+        return now - self._base[field]
+
+    def _count_delta(self, name: str, key: str) -> int:
+        if self._obs is None:
+            return 0
+        now = self._obs.metrics.value(name, instance=self._instance)
+        return int(now - self._base[key])
+
+    @property
+    def interpret_seconds(self) -> float:
+        return self._span_delta("interpret_seconds")
+
+    @property
+    def slice_seconds(self) -> float:
+        return self._span_delta("slice_seconds")
+
+    @property
+    def tokenize_seconds(self) -> float:
+        return self._span_delta("tokenize_seconds")
+
+    @property
+    def context_seconds(self) -> float:
+        return self._span_delta("context_seconds")
+
+    @property
+    def analytical_seconds(self) -> float:
+        return self._span_delta("analytical_seconds")
+
+    @property
+    def n_instructions(self) -> int:
+        return self._count_delta("capsim_frontend_instructions_total",
+                                 "n_instructions")
+
+    @property
+    def n_clips(self) -> int:
+        return self._count_delta("capsim_frontend_clips_total", "n_clips")
 
     @property
     def frontend_seconds(self) -> float:
@@ -230,15 +295,65 @@ class FrontendStats:
                 "n_clips": self.n_clips}
 
 
-@dataclasses.dataclass
 class PredictorStats:
-    n_clips: int = 0                  # real clips fed in
-    n_predicted: int = 0              # real clips with a retired prediction
-    n_pad: int = 0                    # padding rows dispatched
-    n_batches: int = 0
-    batch_shapes: Dict[int, int] = dataclasses.field(default_factory=dict)
-    dispatch_seconds: float = 0.0
-    drain_seconds: float = 0.0
+    """Live view over one predictor instance's registry cells.
+
+    Each ``BatchedPredictor`` gets a process-unique ``instance`` label,
+    so its cells start at zero and concurrent predictors (including
+    flushes abandoned by the serving watchdog) can never corrupt each
+    other's accounting — which keeps the drain demux assert exact.
+    """
+
+    def __init__(self, obs: Optional[Observability] = None,
+                 instance: str = ""):
+        self._obs = obs
+        self._instance = instance
+
+    def _val(self, name: str) -> float:
+        if self._obs is None:
+            return 0.0
+        return self._obs.metrics.value(name, instance=self._instance)
+
+    @property
+    def n_clips(self) -> int:              # real clips fed in
+        return int(self._val("capsim_predictor_clips_total"))
+
+    @property
+    def n_predicted(self) -> int:          # real clips retired
+        return int(self._val("capsim_predictor_predicted_total"))
+
+    @property
+    def n_pad(self) -> int:                # padding rows dispatched
+        return int(self._val("capsim_predictor_pad_rows_total"))
+
+    @property
+    def batch_shapes(self) -> Dict[int, int]:
+        if self._obs is None:
+            return {}
+        return {int(labels["shape"]): int(v)
+                for labels, v in self._obs.metrics.collect(
+                    "capsim_predictor_batches_total",
+                    instance=self._instance)}
+
+    @property
+    def n_batches(self) -> int:
+        return sum(self.batch_shapes.values())
+
+    @property
+    def dispatch_seconds(self) -> float:
+        if self._obs is None:
+            return 0.0
+        return self._obs.metrics.value(
+            SPAN_SECONDS_TOTAL, span="predict.dispatch",
+            instance=self._instance)
+
+    @property
+    def drain_seconds(self) -> float:
+        if self._obs is None:
+            return 0.0
+        return self._obs.metrics.value(
+            SPAN_SECONDS_TOTAL, span="predict.drain",
+            instance=self._instance)
 
     @property
     def predict_seconds(self) -> float:
@@ -279,10 +394,41 @@ class BatchedPredictor:
 
     def __init__(self, params, cfg, *, config: Optional[EngineConfig] = None,
                  rt_cache: Optional[RTCache] = None,
-                 fault_injector=None, **legacy):
+                 fault_injector=None,
+                 obs: Optional[Observability] = None, **legacy):
         reject_legacy_kwargs(legacy, "BatchedPredictor")
         config = config or EngineConfig()
         self.config = config
+        self.obs = (obs if obs is not None
+                    else Observability.from_config(config.observability))
+        m = self.obs.metrics
+        self.instance = m.next_instance("predictor")
+        self._c_clips = m.counter(
+            "capsim_predictor_clips_total", "Real clips fed in.",
+            ("instance",)).labels(instance=self.instance)
+        self._c_predicted = m.counter(
+            "capsim_predictor_predicted_total",
+            "Real clips with a retired prediction.",
+            ("instance",)).labels(instance=self.instance)
+        self._c_pad = m.counter(
+            "capsim_predictor_pad_rows_total",
+            "Padding rows dispatched.",
+            ("instance",)).labels(instance=self.instance)
+        self._fam_batches = m.counter(
+            "capsim_predictor_batches_total",
+            "Device batches dispatched, by padded batch shape.",
+            ("instance", "shape"))
+        self._batch_handles: Dict[int, object] = {}
+        self._g_in_flight = m.gauge(
+            "capsim_predictor_in_flight",
+            "Un-retired device batches (the double buffer).",
+            ("instance",)).labels(instance=self.instance)
+        self._h_occupancy = m.histogram(
+            "capsim_predictor_bucket_occupancy",
+            "Real-row share of each dispatched bucket.",
+            ("instance",),
+            buckets=(0.25, 0.5, 0.75, 0.9, 0.99, 1.0)).labels(
+                instance=self.instance)
         if fault_injector is None and config.faults:
             # deferred import: repro.serving imports this module
             from repro.serving.faults import FaultInjector
@@ -334,7 +480,7 @@ class BatchedPredictor:
         self._pending: Deque[Tuple[jax.Array, int]] = deque()
         self._retired: List[np.ndarray] = []
         self._drained = 0           # clips returned by previous drains
-        self.stats = PredictorStats()
+        self.stats = PredictorStats(self.obs, self.instance)
 
     def add(self, tok: np.ndarray, ctx: np.ndarray,
             mask: np.ndarray) -> None:
@@ -354,7 +500,7 @@ class BatchedPredictor:
         assert self._cache is not None, "add_indexed needs an RT cache"
         if rt_idx.shape[0] == 0:
             return
-        self._cache.stats.n_rows_served += int(mask.sum())
+        self._cache.record_served(int(mask.sum()))
         self._buffer(rt_idx, ctx, mask)
 
     def _buffer(self, tok: np.ndarray, ctx: np.ndarray,
@@ -376,7 +522,7 @@ class BatchedPredictor:
         self._ctx.append(ctx)
         self._mask.append(mask)
         self._buffered += tok.shape[0]
-        self.stats.n_clips += tok.shape[0]
+        self._c_clips.inc(tok.shape[0])
         while self._buffered >= self.batch_size:
             tok_b, ctx_b, mask_b = self._take(self.batch_size)
             self._dispatch(tok_b, ctx_b, mask_b, self.batch_size)
@@ -412,7 +558,13 @@ class BatchedPredictor:
         self._ctx_width = None
 
     def _dispatch(self, tok, ctx, mask, n_real: int) -> None:
-        t0 = time.time()
+        # the dispatch span includes any blocking retires forced by the
+        # in-flight cap — the same accounting window the pre-obs
+        # dispatch_seconds stopwatch covered
+        with self.obs.span("predict.dispatch", instance=self.instance):
+            self._dispatch_inner(tok, ctx, mask, n_real)
+
+    def _dispatch_inner(self, tok, ctx, mask, n_real: int) -> None:
         if self._faults is not None:
             # chaos layer: may stall (slow_flush) or raise (device_error)
             # exactly where a real device failure would surface
@@ -445,13 +597,18 @@ class BatchedPredictor:
                      "clip_mask": jnp.asarray(mask)}
             out = self._predict(self.params, batch)   # async dispatch
         self._pending.append((out, n_real))
-        self.stats.n_batches += 1
-        self.stats.n_pad += tok.shape[0] - n_real
-        self.stats.batch_shapes[tok.shape[0]] = \
-            self.stats.batch_shapes.get(tok.shape[0], 0) + 1
+        shape = tok.shape[0]
+        handle = self._batch_handles.get(shape)
+        if handle is None:
+            handle = self._fam_batches.labels(instance=self.instance,
+                                              shape=shape)
+            self._batch_handles[shape] = handle
+        handle.inc()
+        self._c_pad.inc(shape - n_real)
+        self._h_occupancy.observe(n_real / shape)
         while len(self._pending) > self.max_in_flight:
             self._retire()
-        self.stats.dispatch_seconds += time.time() - t0
+        self._g_in_flight.set(len(self._pending))
 
     def _serving_plan(self):
         """Per-table-version cross K/V plan: rebuilt when (and only when)
@@ -465,19 +622,24 @@ class BatchedPredictor:
         return self._plan
 
     def _retire(self) -> None:
-        out, n_real = self._pending.popleft()
-        out = np.asarray(out)[:n_real]                  # blocks this batch
-        if self._faults is not None:
-            # nan_output chaos: the retired batch comes back non-finite;
-            # the service-level guard must catch it before demux
-            out = self._faults.corrupt_output(out)
-        self._retired.append(out)
-        self.stats.n_predicted += n_real
+        with self.obs.span("predict.retire", instance=self.instance):
+            out, n_real = self._pending.popleft()
+            out = np.asarray(out)[:n_real]              # blocks this batch
+            if self._faults is not None:
+                # nan_output chaos: the retired batch comes back
+                # non-finite; the service-level guard must catch it
+                # before demux
+                out = self._faults.corrupt_output(out)
+            self._retired.append(out)
+            self._c_predicted.inc(n_real)
 
     def drain(self) -> np.ndarray:
         """Flush the remainder, block on all outstanding batches, and
         return (n_clips,) float32 predictions in submission order."""
-        t0 = time.time()
+        with self.obs.span("predict.drain", instance=self.instance):
+            return self._drain_inner()
+
+    def _drain_inner(self) -> np.ndarray:
         if self._buffered:
             n = self._buffered
             tok, ctx, mask = self._take(n)
@@ -504,6 +666,7 @@ class BatchedPredictor:
             self._dispatch(tok, ctx, mask, n)
         while self._pending:
             self._retire()
+        self._g_in_flight.set(0)
         preds = (np.concatenate(self._retired) if self._retired
                  else np.zeros(0, np.float32))
         # n_predicted accumulates over the backend's lifetime (many
@@ -513,7 +676,6 @@ class BatchedPredictor:
             "demux must return exactly the real (non-pad) clips"
         self._drained = self.stats.n_predicted
         self._retired = []
-        self.stats.drain_seconds += time.time() - t0
         return preds
 
 
@@ -614,6 +776,16 @@ class SimulationEngine:
         reject_legacy_kwargs(legacy, "SimulationEngine")
         config = config or EngineConfig()
         self.config = config
+        self.obs = Observability.from_config(config.observability)
+        self.instance = self.obs.metrics.next_instance("engine")
+        self._c_instructions = self.obs.metrics.counter(
+            "capsim_frontend_instructions_total",
+            "Instructions functionally simulated.",
+            ("instance",)).labels(instance=self.instance)
+        self._c_fe_clips = self.obs.metrics.counter(
+            "capsim_frontend_clips_total",
+            "Clips sliced/tokenized by the front-end.",
+            ("instance",)).labels(instance=self.instance)
         if config.precision == "int8":
             # per-channel weight fake-quantization at engine build: the
             # cache, plan and predict step all see the SAME quantized
@@ -655,12 +827,13 @@ class SimulationEngine:
                                   n_shards=config.n_shards,
                                   store_dir=config.rt_store_dir,
                                   store_extra=vocab.signature(),
-                                  fault_injector=self._faults)
+                                  fault_injector=self._faults,
+                                  obs=self.obs)
                           if config.rt_cache else None)
         self._queue: List[progen.Benchmark] = []
         self.last_stats: Optional[PredictorStats] = None
-        self.last_rt_stats: Optional[RTCacheStats] = None
-        self.frontend_stats = FrontendStats()
+        self.last_rt_stats = None
+        self.frontend_stats = FrontendStats(self.obs, self.instance)
 
     @classmethod
     def from_config(cls, params, cfg, vocab: std_mod.Vocab,
@@ -691,36 +864,33 @@ class SimulationEngine:
         yet: clip tensors land in the sink together with their
         analytical feature rows, and the caller feeds only the
         stratified sample once the job's trace is complete."""
-        fe = self.frontend_stats
         n = len(trace)
         job.n_intervals += 1
         job.n_instructions += n
-        fe.n_instructions += n
+        self._c_instructions.inc(n)
 
-        t0 = time.time()
-        if static_ids is not None:
-            tok, mask = std_mod.fixed_clip_indices(
-                static_ids, trace.pc, self.l_min, self.l_clip)
-        else:
-            tok, mask = std_mod.encode_fixed_clips(
-                token_table, trace.pc, self.l_min, self.l_clip)
-        n_clips = tok.shape[0]                 # slice_fixed partition
-        fe.tokenize_seconds += time.time() - t0
+        with self.obs.span("engine.tokenize", instance=self.instance):
+            if static_ids is not None:
+                tok, mask = std_mod.fixed_clip_indices(
+                    static_ids, trace.pc, self.l_min, self.l_clip)
+            else:
+                tok, mask = std_mod.encode_fixed_clips(
+                    token_table, trace.pc, self.l_min, self.l_clip)
+            n_clips = tok.shape[0]             # slice_fixed partition
 
-        t0 = time.time()
-        ctx_all = ctx_mod.context_tokens_from_matrix(
-            trace.snapshots, self.vocab, core_id=core_id)
-        rows = np.minimum(np.arange(n_clips), len(ctx_all) - 1)
-        ctx = ctx_all[rows]
-        fe.context_seconds += time.time() - t0
+        with self.obs.span("engine.context", instance=self.instance):
+            ctx_all = ctx_mod.context_tokens_from_matrix(
+                trace.snapshots, self.vocab, core_id=core_id)
+            rows = np.minimum(np.arange(n_clips), len(ctx_all) - 1)
+            ctx = ctx_all[rows]
 
         job.n_clips += n_clips
-        fe.n_clips += n_clips
+        self._c_fe_clips.inc(n_clips)
         if sink is not None:
-            t0 = time.time()
-            feats = analytical.clip_features(trace, self.l_min,
-                                             self.timing_params)
-            fe.analytical_seconds += time.time() - t0
+            with self.obs.span("engine.analytical",
+                               instance=self.instance):
+                feats = analytical.clip_features(trace, self.l_min,
+                                                 self.timing_params)
             assert feats.shape[0] == n_clips, \
                 "analytical windows must mirror the clip partition"
             sink.append((tok, ctx, mask, feats))
@@ -766,7 +936,6 @@ class SimulationEngine:
         predictor.  Tokens/contexts are bitwise identical to the object
         path (``ClipEncoder`` over ``slice_fixed`` clips).  With
         ``sink`` the clips collect there instead (fusion path)."""
-        fe = self.frontend_stats
         cprog = bench.compiled()
         token_table = cprog.token_table(self.vocab, self.l_token)
         static_ids = None
@@ -777,24 +946,25 @@ class SimulationEngine:
                 token_table,
                 keys=cprog.token_row_keys(self.vocab, self.l_token))
         st = progen.fresh_compiled_state(bench)
-        t0 = time.time()
-        _, st = funcsim.run_compiled(cprog, self.warmup, st)
-        fe.interpret_seconds += time.time() - t0
+        with self.obs.span("engine.interpret", instance=self.instance):
+            _, st = funcsim.run_compiled(cprog, self.warmup, st)
         n_ckp = min(bench.ckp_num, self.max_checkpoints)
         for _ in range(n_ckp):
-            t0 = time.time()
-            trace, st = funcsim.run_compiled(
-                cprog, self.interval_size, st, snapshot_every=self.l_min)
-            fe.interpret_seconds += time.time() - t0
+            with self.obs.span("engine.interpret",
+                               instance=self.instance):
+                trace, st = funcsim.run_compiled(
+                    cprog, self.interval_size, st,
+                    snapshot_every=self.l_min)
             if not len(trace):
                 break
             self._feed_trace(trace, token_table, static_ids, pred, job,
                              sink=sink)
             if self.with_oracle:
-                t0 = time.time()
-                job.oracle_cycles += timing.total_cycles_columnar(
-                    trace, self.timing_params)
-                job.oracle_seconds += time.time() - t0
+                with self.obs.span("engine.oracle",
+                                   instance=self.instance) as osp:
+                    job.oracle_cycles += timing.total_cycles_columnar(
+                        trace, self.timing_params)
+                job.oracle_seconds += osp.seconds
 
     def run(self, benches: Optional[Sequence[progen.Benchmark]] = None
             ) -> List[SimResult]:
@@ -806,23 +976,24 @@ class SimulationEngine:
             jobs.extend(_Job(b) for b in benches)
         if self.config.sampling is not None:
             return self._run_sampled(jobs)
-        self.frontend_stats = FrontendStats()
+        self.frontend_stats = FrontendStats(self.obs, self.instance)
         pred = BatchedPredictor(self.params, self.cfg, config=self.config,
                                 rt_cache=self._rt_cache,
-                                fault_injector=self._faults)
+                                fault_injector=self._faults, obs=self.obs)
         rt_stats = (self._rt_cache.stats if self._rt_cache is not None
                     else RTCacheStats())
         offset = 0
         for job in jobs:
             job.offset = offset
-            t0 = time.time()
             d0 = pred.stats.dispatch_seconds
             b0 = rt_stats.build_seconds
-            self._functional(job.bench, pred, job)
+            with self.obs.span("engine.job", instance=self.instance,
+                               args={"bench": job.bench.name}) as jsp:
+                self._functional(job.bench, pred, job)
             # dispatch (and any blocking retire) and the RT-cache build
             # overlap the functional window; subtract both so device
             # predict time isn't counted twice
-            job.func_seconds = (time.time() - t0 - job.oracle_seconds
+            job.func_seconds = (jsp.seconds - job.oracle_seconds
                                 - (pred.stats.dispatch_seconds - d0)
                                 - (rt_stats.build_seconds - b0))
             offset = job.offset + job.n_clips
@@ -830,7 +1001,7 @@ class SimulationEngine:
         if self._rt_cache is not None:
             self._rt_cache.persist()          # no-op without a store_dir
         self.last_stats = pred.stats
-        self.last_rt_stats = (dataclasses.replace(rt_stats)
+        self.last_rt_stats = (rt_stats.freeze()
                               if self._rt_cache is not None else None)
         assert preds.shape[0] == offset == pred.stats.n_predicted, \
             "clip accounting mismatch between pool and predictions"
@@ -870,22 +1041,24 @@ class SimulationEngine:
         over the same prediction rows the unsampled path sums — bitwise
         equal by the batch-composition-independence contract."""
         scfg = self.config.sampling
-        self.frontend_stats = FrontendStats()
+        self.frontend_stats = FrontendStats(self.obs, self.instance)
         pred = BatchedPredictor(self.params, self.cfg, config=self.config,
                                 rt_cache=self._rt_cache,
-                                fault_injector=self._faults)
+                                fault_injector=self._faults, obs=self.obs)
         rt_stats = (self._rt_cache.stats if self._rt_cache is not None
                     else RTCacheStats())
         plans = []                    # (features, strata, sampled) per job
         offset = 0
         for j, job in enumerate(jobs):
             sink: list = []
-            t0 = time.time()
             d0 = pred.stats.dispatch_seconds
             b0 = rt_stats.build_seconds
-            self._functional(job.bench, pred, job, sink=sink)
-            feats, strata, sampled = self._feed_sample(pred, sink, job, j)
-            job.func_seconds = (time.time() - t0 - job.oracle_seconds
+            with self.obs.span("engine.job", instance=self.instance,
+                               args={"bench": job.bench.name}) as jsp:
+                self._functional(job.bench, pred, job, sink=sink)
+                feats, strata, sampled = self._feed_sample(pred, sink,
+                                                           job, j)
+            job.func_seconds = (jsp.seconds - job.oracle_seconds
                                 - (pred.stats.dispatch_seconds - d0)
                                 - (rt_stats.build_seconds - b0))
             job.offset = offset
@@ -895,7 +1068,7 @@ class SimulationEngine:
         if self._rt_cache is not None:
             self._rt_cache.persist()          # no-op without a store_dir
         self.last_stats = pred.stats
-        self.last_rt_stats = (dataclasses.replace(rt_stats)
+        self.last_rt_stats = (rt_stats.freeze()
                               if self._rt_cache is not None else None)
         assert preds.shape[0] == offset == pred.stats.n_predicted, \
             "clip accounting mismatch between sample and predictions"
@@ -962,11 +1135,10 @@ class SimulationEngine:
                        else multicore.DEFAULT_QUANTUM)
         if self.config.sampling is not None:
             return self._run_multicore_sampled(mbenches, quantum)
-        self.frontend_stats = FrontendStats()
-        fe = self.frontend_stats
+        self.frontend_stats = FrontendStats(self.obs, self.instance)
         pred = BatchedPredictor(self.params, self.cfg, config=self.config,
                                 rt_cache=self._rt_cache,
-                                fault_injector=self._faults)
+                                fault_injector=self._faults, obs=self.obs)
         rt_stats = (self._rt_cache.stats if self._rt_cache is not None
                     else RTCacheStats())
         all_jobs: List[List[_Job]] = []
@@ -989,42 +1161,46 @@ class SimulationEngine:
                     for c in range(mb.n_cores)]
             all_jobs.append(jobs)
             states = mb.fresh_states()
-            t_mb = time.time()
             d0 = pred.stats.dispatch_seconds
             b0 = rt_stats.build_seconds
             oracle_s = 0.0
-            if self.warmup:
-                t0 = time.time()
-                multicore.run_multicore(cprogs, self.warmup, states,
-                                        quantum=quantum)
-                fe.interpret_seconds += time.time() - t0
-            n_ckp = min(mb.ckp_num, self.max_checkpoints)
-            for _ in range(n_ckp):
-                t0 = time.time()
-                mtrace = multicore.run_multicore(
-                    cprogs, self.interval_size, states,
-                    snapshot_every=self.l_min, quantum=quantum)
-                fe.interpret_seconds += time.time() - t0
-                if len(mtrace) == 0:
-                    break
-                for c, trace in enumerate(mtrace.cores):
-                    if not len(trace):
-                        continue
-                    n_clips = self._feed_trace(
-                        trace, token_tables[c],
-                        static_ids[c] if static_ids is not None else None,
-                        pred, jobs[c], core_id=c)
-                    segments.append((jobs[c], n_clips))
-                if self.with_oracle:
-                    t0 = time.time()
-                    totals = timing.total_cycles_multicore(
-                        mtrace.cores, mtrace.schedule, self.timing_params)
-                    dt = time.time() - t0
-                    oracle_s += dt
-                    for c, cyc in enumerate(totals):
-                        jobs[c].oracle_cycles += cyc
-                        jobs[c].oracle_seconds += dt / mb.n_cores
-            mb_seconds = (time.time() - t_mb - oracle_s
+            with self.obs.span("engine.job", instance=self.instance,
+                               args={"bench": mb.name}) as jsp:
+                if self.warmup:
+                    with self.obs.span("engine.interpret",
+                                       instance=self.instance):
+                        multicore.run_multicore(cprogs, self.warmup,
+                                                states, quantum=quantum)
+                n_ckp = min(mb.ckp_num, self.max_checkpoints)
+                for _ in range(n_ckp):
+                    with self.obs.span("engine.interpret",
+                                       instance=self.instance):
+                        mtrace = multicore.run_multicore(
+                            cprogs, self.interval_size, states,
+                            snapshot_every=self.l_min, quantum=quantum)
+                    if len(mtrace) == 0:
+                        break
+                    for c, trace in enumerate(mtrace.cores):
+                        if not len(trace):
+                            continue
+                        n_clips = self._feed_trace(
+                            trace, token_tables[c],
+                            static_ids[c] if static_ids is not None
+                            else None,
+                            pred, jobs[c], core_id=c)
+                        segments.append((jobs[c], n_clips))
+                    if self.with_oracle:
+                        with self.obs.span("engine.oracle",
+                                           instance=self.instance) as osp:
+                            totals = timing.total_cycles_multicore(
+                                mtrace.cores, mtrace.schedule,
+                                self.timing_params)
+                        dt = osp.seconds
+                        oracle_s += dt
+                        for c, cyc in enumerate(totals):
+                            jobs[c].oracle_cycles += cyc
+                            jobs[c].oracle_seconds += dt / mb.n_cores
+            mb_seconds = (jsp.seconds - oracle_s
                           - (pred.stats.dispatch_seconds - d0)
                           - (rt_stats.build_seconds - b0))
             mb_clips = max(sum(j.n_clips for j in jobs), 1)
@@ -1035,7 +1211,7 @@ class SimulationEngine:
         if self._rt_cache is not None:
             self._rt_cache.persist()          # no-op without a store_dir
         self.last_stats = pred.stats
-        self.last_rt_stats = (dataclasses.replace(rt_stats)
+        self.last_rt_stats = (rt_stats.freeze()
                               if self._rt_cache is not None else None)
         total = sum(n for _, n in segments)
         assert preds.shape[0] == total == pred.stats.n_predicted, \
@@ -1075,11 +1251,10 @@ class SimulationEngine:
         counts flattened jobs so every core draws independently but
         reproducibly."""
         scfg = self.config.sampling
-        self.frontend_stats = FrontendStats()
-        fe = self.frontend_stats
+        self.frontend_stats = FrontendStats(self.obs, self.instance)
         pred = BatchedPredictor(self.params, self.cfg, config=self.config,
                                 rt_cache=self._rt_cache,
-                                fault_injector=self._faults)
+                                fault_injector=self._faults, obs=self.obs)
         rt_stats = (self._rt_cache.stats if self._rt_cache is not None
                     else RTCacheStats())
         all_jobs: List[List[_Job]] = []
@@ -1102,48 +1277,52 @@ class SimulationEngine:
             all_jobs.append(jobs)
             sinks: List[list] = [[] for _ in range(mb.n_cores)]
             states = mb.fresh_states()
-            t_mb = time.time()
             d0 = pred.stats.dispatch_seconds
             b0 = rt_stats.build_seconds
             oracle_s = 0.0
-            if self.warmup:
-                t0 = time.time()
-                multicore.run_multicore(cprogs, self.warmup, states,
-                                        quantum=quantum)
-                fe.interpret_seconds += time.time() - t0
-            n_ckp = min(mb.ckp_num, self.max_checkpoints)
-            for _ in range(n_ckp):
-                t0 = time.time()
-                mtrace = multicore.run_multicore(
-                    cprogs, self.interval_size, states,
-                    snapshot_every=self.l_min, quantum=quantum)
-                fe.interpret_seconds += time.time() - t0
-                if len(mtrace) == 0:
-                    break
-                for c, trace in enumerate(mtrace.cores):
-                    if not len(trace):
-                        continue
-                    self._feed_trace(
-                        trace, token_tables[c],
-                        static_ids[c] if static_ids is not None else None,
-                        pred, jobs[c], core_id=c, sink=sinks[c])
-                if self.with_oracle:
-                    t0 = time.time()
-                    totals = timing.total_cycles_multicore(
-                        mtrace.cores, mtrace.schedule, self.timing_params)
-                    dt = time.time() - t0
-                    oracle_s += dt
-                    for c, cyc in enumerate(totals):
-                        jobs[c].oracle_cycles += cyc
-                        jobs[c].oracle_seconds += dt / mb.n_cores
-            for c, job in enumerate(jobs):
-                feats, strata, sampled = self._feed_sample(
-                    pred, sinks[c], job, key)
-                key += 1
-                job.offset = offset
-                offset += int(sampled.shape[0])
-                plans.append((job, feats, strata, sampled))
-            mb_seconds = (time.time() - t_mb - oracle_s
+            with self.obs.span("engine.job", instance=self.instance,
+                               args={"bench": mb.name}) as jsp:
+                if self.warmup:
+                    with self.obs.span("engine.interpret",
+                                       instance=self.instance):
+                        multicore.run_multicore(cprogs, self.warmup,
+                                                states, quantum=quantum)
+                n_ckp = min(mb.ckp_num, self.max_checkpoints)
+                for _ in range(n_ckp):
+                    with self.obs.span("engine.interpret",
+                                       instance=self.instance):
+                        mtrace = multicore.run_multicore(
+                            cprogs, self.interval_size, states,
+                            snapshot_every=self.l_min, quantum=quantum)
+                    if len(mtrace) == 0:
+                        break
+                    for c, trace in enumerate(mtrace.cores):
+                        if not len(trace):
+                            continue
+                        self._feed_trace(
+                            trace, token_tables[c],
+                            static_ids[c] if static_ids is not None
+                            else None,
+                            pred, jobs[c], core_id=c, sink=sinks[c])
+                    if self.with_oracle:
+                        with self.obs.span("engine.oracle",
+                                           instance=self.instance) as osp:
+                            totals = timing.total_cycles_multicore(
+                                mtrace.cores, mtrace.schedule,
+                                self.timing_params)
+                        dt = osp.seconds
+                        oracle_s += dt
+                        for c, cyc in enumerate(totals):
+                            jobs[c].oracle_cycles += cyc
+                            jobs[c].oracle_seconds += dt / mb.n_cores
+                for c, job in enumerate(jobs):
+                    feats, strata, sampled = self._feed_sample(
+                        pred, sinks[c], job, key)
+                    key += 1
+                    job.offset = offset
+                    offset += int(sampled.shape[0])
+                    plans.append((job, feats, strata, sampled))
+            mb_seconds = (jsp.seconds - oracle_s
                           - (pred.stats.dispatch_seconds - d0)
                           - (rt_stats.build_seconds - b0))
             mb_clips = max(sum(j.n_clips for j in jobs), 1)
@@ -1154,7 +1333,7 @@ class SimulationEngine:
         if self._rt_cache is not None:
             self._rt_cache.persist()          # no-op without a store_dir
         self.last_stats = pred.stats
-        self.last_rt_stats = (dataclasses.replace(rt_stats)
+        self.last_rt_stats = (rt_stats.freeze()
                               if self._rt_cache is not None else None)
         assert preds.shape[0] == offset == pred.stats.n_predicted, \
             "clip accounting mismatch between sample and predictions"

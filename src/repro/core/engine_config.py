@@ -54,6 +54,11 @@ Field groups:
                 interval over the stratified estimate.  ``None``
                 (default) preserves the exact full-prediction path
                 bitwise.
+  observability ``observability`` — a nested ``ObservabilityConfig``
+                (or mapping) enabling span tracing and the degradation
+                flight recorder (``repro.obs``).  The metrics registry
+                is always on; ``None`` (default) just means no trace
+                ring and no postmortem files.
 
 The config is JSON round-trippable (``to_json``/``from_json``) so one
 ``--engine-config`` flag can drive every bench pass and CI leg.  The
@@ -140,6 +145,63 @@ class SamplingConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObservabilityConfig:
+    """Observability knobs (``EngineConfig.observability``).
+
+    The metrics registry is always on — it replaced the ad-hoc Stats
+    accumulators, so it costs what they cost.  ``trace`` opts into the
+    span tracer (a private ``repro.obs.Tracer`` ring of ``trace_ring``
+    spans, Chrome-trace exportable); disabled tracing allocates nothing
+    on the span path.  ``flight_dir`` opts into the degradation flight
+    recorder: the last ``flight_events`` structured events and
+    ``flight_spans`` trace spans are frozen into an atomic postmortem
+    JSON under that directory whenever the service demotes a tier, the
+    watchdog abandons a flush, or a persist fault fires.
+    """
+
+    trace: bool = False
+    trace_ring: int = 4096
+    flight_dir: Optional[str] = None
+    flight_spans: int = 256
+    flight_events: int = 512
+
+    def __post_init__(self):
+        self.validate()
+
+    def validate(self) -> None:
+        if self.trace_ring < 1:
+            raise ValueError(
+                f"trace_ring must be >= 1, got {self.trace_ring}")
+        if self.flight_spans < 0:
+            raise ValueError(
+                f"flight_spans must be >= 0, got {self.flight_spans}")
+        if self.flight_events < 1:
+            raise ValueError(
+                f"flight_events must be >= 1, got {self.flight_events}")
+        if self.flight_dir is not None and not isinstance(
+                self.flight_dir, str):
+            raise ValueError(
+                f"flight_dir must be a path string or None, "
+                f"got {self.flight_dir!r}")
+
+    def replace(self, **kw) -> "ObservabilityConfig":
+        return dataclasses.replace(self, **kw)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, data: Mapping[str, Any]) -> "ObservabilityConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(data) - fields
+        if unknown:
+            raise ValueError(
+                f"unknown ObservabilityConfig fields {sorted(unknown)} "
+                f"(known: {sorted(fields)})")
+        return cls(**dict(data))
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     # --- mesh ---
     mesh_shape: Tuple[int, ...] = ()
@@ -169,6 +231,8 @@ class EngineConfig:
     fault_seed: int = 0
     # --- analytical-ML fusion (None = full prediction, bitwise) ---
     sampling: Optional[SamplingConfig] = None
+    # --- observability (None = metrics only: no tracing, no flight) ---
+    observability: Optional[ObservabilityConfig] = None
 
     def __post_init__(self):
         # normalize mesh_shape so (config equality == behavior equality)
@@ -189,6 +253,10 @@ class EngineConfig:
         if isinstance(self.sampling, Mapping):
             object.__setattr__(self, "sampling",
                                SamplingConfig.from_dict(self.sampling))
+        if isinstance(self.observability, Mapping):
+            object.__setattr__(
+                self, "observability",
+                ObservabilityConfig.from_dict(self.observability))
         self.validate()
 
     @property
@@ -253,6 +321,12 @@ class EngineConfig:
             raise ValueError(
                 f"sampling must be a SamplingConfig (or a mapping of "
                 f"its fields) or None, got {self.sampling!r}")
+        if self.observability is not None and not isinstance(
+                self.observability, ObservabilityConfig):
+            raise ValueError(
+                f"observability must be an ObservabilityConfig (or a "
+                f"mapping of its fields) or None, "
+                f"got {self.observability!r}")
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)

@@ -41,7 +41,6 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import time
 import warnings
 from functools import lru_cache
 from pathlib import Path
@@ -53,6 +52,7 @@ import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.core import predictor as pred_mod
+from repro.obs import SPAN_SECONDS_TOTAL, Observability
 
 PAD_ROW_ID = 0
 
@@ -124,16 +124,7 @@ def encode_bucket(n: int, align: int = 1) -> int:
     return b
 
 
-@dataclasses.dataclass
-class RTCacheStats:
-    n_rows_encoded: int = 0        # unique static rows run through encoder
-    n_encode_passes: int = 0       # device passes (one per new-row flush)
-    n_rows_served: int = 0         # dynamic (unmasked) rows answered by gather
-    n_lookups: int = 0             # rows presented to ensure_rows
-    build_seconds: float = 0.0     # wall time inside ensure_rows
-    n_rows_loaded: int = 0         # rows adopted from the persistent store
-    store_load_seconds: float = 0.0  # wall time inside _load_store
-
+class _RTStatsDictMixin:
     @property
     def rows_avoided(self) -> int:
         """Dynamic instruction-encoder rows the gather replaced."""
@@ -150,6 +141,86 @@ class RTCacheStats:
                 "rt_store_load_seconds": self.store_load_seconds}
 
 
+@dataclasses.dataclass(frozen=True)
+class RTCacheStatsSnapshot(_RTStatsDictMixin):
+    """Point-in-time copy of an :class:`RTCacheStats` view (what
+    ``SimulationEngine.last_rt_stats`` hands out)."""
+
+    n_rows_encoded: int = 0
+    n_encode_passes: int = 0
+    n_rows_served: int = 0
+    n_lookups: int = 0
+    build_seconds: float = 0.0
+    n_rows_loaded: int = 0
+    store_load_seconds: float = 0.0
+
+
+class RTCacheStats(_RTStatsDictMixin):
+    """Live *view* over the obs metrics registry for one cache instance.
+
+    The cache writes counters/gauges/spans into ``repro.obs`` (that is
+    the system of record — ``/metrics`` serves the same cells); this
+    class keeps the historical attribute surface by reading them back.
+    Constructed with no arguments it is an all-zeros stand-in (the
+    engine's "no RT cache" placeholder).  ``freeze()`` returns an
+    immutable :class:`RTCacheStatsSnapshot`.
+    """
+
+    def __init__(self, obs: Optional[Observability] = None,
+                 instance: str = ""):
+        self._obs = obs
+        self._instance = instance
+
+    def _val(self, name: str) -> float:
+        if self._obs is None:
+            return 0.0
+        return self._obs.metrics.value(name, instance=self._instance)
+
+    def _span_s(self, span: str) -> float:
+        if self._obs is None:
+            return 0.0
+        return self._obs.metrics.value(SPAN_SECONDS_TOTAL, span=span,
+                                       instance=self._instance)
+
+    @property
+    def n_rows_encoded(self) -> int:
+        return int(self._val("capsim_rt_rows_encoded_total"))
+
+    @property
+    def n_encode_passes(self) -> int:
+        return int(self._val("capsim_rt_encode_passes_total"))
+
+    @property
+    def n_rows_served(self) -> int:
+        return int(self._val("capsim_rt_rows_served_total"))
+
+    @property
+    def n_lookups(self) -> int:
+        return int(self._val("capsim_rt_lookups_total"))
+
+    @property
+    def build_seconds(self) -> float:
+        return self._span_s("rt.build")
+
+    @property
+    def n_rows_loaded(self) -> int:
+        return int(self._val("capsim_rt_rows_loaded"))
+
+    @property
+    def store_load_seconds(self) -> float:
+        return self._span_s("rt.store_load")
+
+    def freeze(self) -> RTCacheStatsSnapshot:
+        return RTCacheStatsSnapshot(
+            n_rows_encoded=self.n_rows_encoded,
+            n_encode_passes=self.n_encode_passes,
+            n_rows_served=self.n_rows_served,
+            n_lookups=self.n_lookups,
+            build_seconds=self.build_seconds,
+            n_rows_loaded=self.n_rows_loaded,
+            store_load_seconds=self.store_load_seconds)
+
+
 class RTCache:
     """Content-addressed map from standardized token rows to rows of a
     device-resident RT table.
@@ -164,10 +235,33 @@ class RTCache:
     def __init__(self, params, cfg, l_token: Optional[int] = None, *,
                  capacity: int = 4096, n_shards: int = 0,
                  store_dir: Optional[str] = None, store_extra: str = "",
-                 fault_injector=None):
+                 fault_injector=None, obs: Optional[Observability] = None):
         self.params = params
         self.cfg = cfg
         self.l_token = l_token
+        self.obs = obs if obs is not None else Observability()
+        m = self.obs.metrics
+        self.instance = m.next_instance("rt")
+        self._c_encoded = m.counter(
+            "capsim_rt_rows_encoded_total",
+            "Unique static rows run through the instruction encoder.",
+            ("instance",)).labels(instance=self.instance)
+        self._c_passes = m.counter(
+            "capsim_rt_encode_passes_total",
+            "Device encode passes (one per new-row flush).",
+            ("instance",)).labels(instance=self.instance)
+        self._c_served = m.counter(
+            "capsim_rt_rows_served_total",
+            "Dynamic (unmasked) rows answered by the RT gather.",
+            ("instance",)).labels(instance=self.instance)
+        self._c_lookups = m.counter(
+            "capsim_rt_lookups_total",
+            "Rows presented to ensure_rows.",
+            ("instance",)).labels(instance=self.instance)
+        self._g_loaded = m.gauge(
+            "capsim_rt_rows_loaded",
+            "Rows adopted from the persistent store (0 after a failed "
+            "load).", ("instance",)).labels(instance=self.instance)
         # chaos layer (repro.serving.faults.FaultInjector or None): may
         # corrupt store reads and crash persists on the REAL code paths
         self._faults = fault_injector
@@ -182,7 +276,7 @@ class RTCache:
         self._table: Optional[jax.Array] = None
         self._capacity = capacity
         self._n = 0
-        self.stats = RTCacheStats()
+        self.stats = RTCacheStats(self.obs, self.instance)
         # persistent store: one ckpt directory per content key under
         # store_dir; loaded eagerly so a warm store never cold-encodes
         self._store_path: Optional[Path] = None
@@ -208,36 +302,41 @@ class RTCache:
         RT row ids; unseen rows are encoded in one padded device pass.
         ``keys`` (the rows' ``tobytes()``, e.g. a program's memoized
         ``token_row_keys``) skips re-hashing."""
-        t0 = time.time()
-        rows = np.ascontiguousarray(rows, dtype=np.int32)
-        if self.l_token is None:
-            self.l_token = rows.shape[1]
-        assert rows.ndim == 2 and rows.shape[1] == self.l_token, rows.shape
-        if keys is None:
-            keys = [r.tobytes() for r in rows]
-        self.stats.n_lookups += rows.shape[0]
+        with self.obs.span("rt.build", instance=self.instance):
+            rows = np.ascontiguousarray(rows, dtype=np.int32)
+            if self.l_token is None:
+                self.l_token = rows.shape[1]
+            assert (rows.ndim == 2
+                    and rows.shape[1] == self.l_token), rows.shape
+            if keys is None:
+                keys = [r.tobytes() for r in rows]
+            self._c_lookups.inc(rows.shape[0])
 
-        new_rows: List[np.ndarray] = []
-        pending: Dict[bytes, int] = {}
-        if self._n == 0:                     # reserve the all-<PAD> row
-            pad = np.zeros(self.l_token, np.int32)
-            pending[pad.tobytes()] = PAD_ROW_ID
-            new_rows.append(pad)
-        ids = np.empty(rows.shape[0], np.int32)
-        index = self._index
-        for i, key in enumerate(keys):
-            gid = index.get(key)
-            if gid is None:
-                gid = pending.get(key)
+            new_rows: List[np.ndarray] = []
+            pending: Dict[bytes, int] = {}
+            if self._n == 0:                 # reserve the all-<PAD> row
+                pad = np.zeros(self.l_token, np.int32)
+                pending[pad.tobytes()] = PAD_ROW_ID
+                new_rows.append(pad)
+            ids = np.empty(rows.shape[0], np.int32)
+            index = self._index
+            for i, key in enumerate(keys):
+                gid = index.get(key)
                 if gid is None:
-                    gid = self._n + len(new_rows)
-                    pending[key] = gid
-                    new_rows.append(rows[i])
-            ids[i] = gid
-        if new_rows:
-            self._flush(np.stack(new_rows), pending)
-        self.stats.build_seconds += time.time() - t0
+                    gid = pending.get(key)
+                    if gid is None:
+                        gid = self._n + len(new_rows)
+                        pending[key] = gid
+                        new_rows.append(rows[i])
+                ids[i] = gid
+            if new_rows:
+                self._flush(np.stack(new_rows), pending)
         return ids
+
+    def record_served(self, n: int) -> None:
+        """Count dynamic rows the gather answered (called by the
+        predictor's indexed dispatch path)."""
+        self._c_served.inc(n)
 
     def index_clips(self, clip_tokens: np.ndarray) -> np.ndarray:
         """Serving-path adapter: (n, L_clip, L_token) tokenized clips ->
@@ -272,8 +371,8 @@ class RTCache:
         self._table.block_until_ready()      # build time stays in stats
         self._index.update(pending)
         self._n += k
-        self.stats.n_rows_encoded += k
-        self.stats.n_encode_passes += 1
+        self._c_encoded.inc(k)
+        self._c_passes.inc()
 
     # ------------------------------------------------------------------ #
     # Persistent store
@@ -285,8 +384,11 @@ class RTCache:
         the *expected* invalidation path (silent clean rebuild); a store
         that matches the key but fails validation — truncated file,
         wrong shapes, non-finite values — warns and cold-encodes."""
-        t0 = time.time()
         path = self._store_path
+        with self.obs.span("rt.store_load", instance=self.instance):
+            self._load_store_inner(path)
+
+    def _load_store_inner(self, path: Optional[Path]) -> None:
         try:
             step = ckpt.latest_step(str(path))
             if step is None:
@@ -334,7 +436,7 @@ class RTCache:
             self._index = {k: i for i, k in enumerate(keys)}
             self._n = n
             self._persisted_rows = n
-            self.stats.n_rows_loaded = n
+            self._g_loaded.set(n)
         except Exception as exc:                     # noqa: BLE001
             warnings.warn(
                 f"RT store at {path} unreadable ({exc!r}); "
@@ -343,9 +445,9 @@ class RTCache:
             self._table = None
             self._n = 0
             self._persisted_rows = 0
-            self.stats.n_rows_loaded = 0
-        finally:
-            self.stats.store_load_seconds += time.time() - t0
+            self._g_loaded.set(0)
+            self.obs.event("rt_store_load_failure", path=str(path),
+                           error=repr(exc))
 
     def persist(self) -> Optional[Path]:
         """Checkpoint the current table under the store key (atomic

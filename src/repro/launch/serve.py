@@ -61,7 +61,31 @@ def _build_engine_config(args):
             seed=args.sample_seed,
             min_clips_per_stratum=args.min_clips_per_stratum,
             bootstrap_resamples=args.bootstrap_resamples)
+    if args.trace_out or args.flight_dir:
+        from repro.core.engine_config import ObservabilityConfig
+        overrides["observability"] = ObservabilityConfig(
+            trace=bool(args.trace_out), flight_dir=args.flight_dir)
     return config.replace(**overrides)
+
+
+def _start_metrics(args):
+    """Start the /metrics exporter when --metrics-port is given.
+    Returns the server (or None); the caller shuts it down."""
+    if args.metrics_port is None:
+        return None
+    from repro.obs.exporter import serve_metrics
+    server = serve_metrics(port=args.metrics_port)
+    print(f"metrics: http://{server.server_address[0]}:"
+          f"{server.server_address[1]}/metrics")
+    return server
+
+
+def _dump_trace(args, obs) -> None:
+    """Write the Chrome/Perfetto trace when --trace-out is given."""
+    if args.trace_out and obs.tracer.enabled:
+        obs.tracer.dump(args.trace_out)
+        print(f"trace: {args.trace_out} "
+              f"({len(obs.tracer.spans())} spans; open at ui.perfetto.dev)")
 
 
 def serve_capsim(args) -> None:
@@ -78,6 +102,7 @@ def serve_capsim(args) -> None:
     cfg = get_config("capsim").replace(dtype="float32")
     params = predictor.init_params(cfg, jax.random.PRNGKey(0))
     engine = SimulationEngine.from_config(params, cfg, vocab, config)
+    metrics_server = _start_metrics(args)
 
     if args.multicore > 0:
         # multicore serving: (benchmark, core) shards through the same
@@ -129,6 +154,9 @@ def serve_capsim(args) -> None:
         if rt.n_rows_loaded:
             print(f"rt-store: {rt.n_rows_loaded} rows loaded in "
                   f"{rt.store_load_seconds:.2f}s (cold encode skipped)")
+    _dump_trace(args, engine.obs)
+    if metrics_server is not None:
+        metrics_server.shutdown()
 
 
 def serve_service(args) -> None:
@@ -162,6 +190,7 @@ def serve_service(args) -> None:
     sla = ServiceSLA(default_deadline_s=args.deadline_s,
                      watchdog_s=args.watchdog_s)
 
+    metrics_server = _start_metrics(args)
     t0 = time.time()
     with SimulationService(params, cfg, config, sla=sla) as svc:
         tickets = []
@@ -190,6 +219,12 @@ def serve_service(args) -> None:
         hits = {k: v for k, v in ts.items() if v and k != "name"}
         if hits:
             print(f"  tier {name}: {hits}")
+    _dump_trace(args, svc.obs)
+    if svc.obs.flight is not None and svc.obs.flight.postmortems:
+        print(f"postmortems: {len(svc.obs.flight.postmortems)} written "
+              f"to {args.flight_dir}")
+    if metrics_server is not None:
+        metrics_server.shutdown()
 
 
 def serve_lm(args) -> None:
@@ -309,6 +344,19 @@ def main() -> None:
     ap.add_argument("--watchdog-s", type=float, default=60.0,
                     help="--service: abort any single flush after this "
                          "many seconds and retry a tier down")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve Prometheus text at "
+                         "http://127.0.0.1:PORT/metrics for the run's "
+                         "duration (0 = ephemeral port, printed)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable span tracing and write a Chrome/"
+                         "Perfetto trace-event JSON at exit (open at "
+                         "ui.perfetto.dev)")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="enable the degradation flight recorder: every "
+                         "service demotion dumps a postmortem JSON "
+                         "(events + recent spans + metrics) into DIR")
     ap.add_argument("--faults", default=None, metavar="KIND=RATE,...",
                     help="chaos injection on the real serving path, e.g. "
                          "'nan_output=0.1,device_error=0.05' (kinds: "

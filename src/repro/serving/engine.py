@@ -30,7 +30,6 @@ degradation on top is ``repro.serving.service.SimulationService``.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -42,6 +41,7 @@ from repro.core import sampler as sampler_mod
 from repro.core.engine import BatchedPredictor
 from repro.core.engine_config import EngineConfig, reject_legacy_kwargs
 from repro.core.rt_cache import RTCache, RTCacheStats
+from repro.obs import Observability
 
 
 @dataclasses.dataclass
@@ -129,6 +129,8 @@ class PredictorEngine:
         reject_legacy_kwargs(legacy, "PredictorEngine")
         config = config or EngineConfig()
         self.config = config
+        self.obs = Observability.from_config(config.observability)
+        self.instance = self.obs.metrics.next_instance("pengine")
         if config.precision == "int8":
             from repro.core import quant
             params = quant.quantize_dequant_params(params)
@@ -147,7 +149,8 @@ class PredictorEngine:
             self._cache = RTCache(params, self.cfg, config.l_token,
                                   n_shards=config.n_shards,
                                   store_dir=config.rt_store_dir,
-                                  store_extra=build_vocab().signature())
+                                  store_extra=build_vocab().signature(),
+                                  obs=self.obs)
         else:
             self._cache = None
         self._faults = None
@@ -188,7 +191,8 @@ class PredictorEngine:
             self._backend = BatchedPredictor(self.params, self.cfg,
                                              config=self.config,
                                              rt_cache=self._cache,
-                                             fault_injector=self._faults)
+                                             fault_injector=self._faults,
+                                             obs=self.obs)
         return self._backend
 
     def flush(self) -> List[Result]:
@@ -198,21 +202,21 @@ class PredictorEngine:
             return []
         reqs = self._pending
         self._pending = []
-        t0 = time.time()
-
-        backend = self.backend()
-        # flushes are independent: each may carry a different (but
-        # internally consistent) context layout
-        backend.reset_context_width()
         if self.config.sampling is not None:
-            return self._flush_sampled(reqs, backend, t0)
-        for r in reqs:
-            backend.add(r.clip_tokens, r.context_tokens, r.clip_mask)
-        times = backend.drain()               # exactly this flush's clips
-        if self._cache is not None:
-            self._cache.persist()             # no-op without a store_dir
+            return self._flush_sampled(reqs)
+        with self.obs.span("serving.flush", instance=self.instance,
+                           args={"requests": len(reqs)}) as sp:
+            backend = self.backend()
+            # flushes are independent: each may carry a different (but
+            # internally consistent) context layout
+            backend.reset_context_width()
+            for r in reqs:
+                backend.add(r.clip_tokens, r.context_tokens, r.clip_mask)
+            times = backend.drain()           # exactly this flush's clips
+            if self._cache is not None:
+                self._cache.persist()         # no-op without a store_dir
         n = times.shape[0]
-        seconds = time.time() - t0
+        seconds = sp.seconds
 
         results = []
         off = 0
@@ -226,9 +230,7 @@ class PredictorEngine:
             off += k
         return results
 
-    def _flush_sampled(self, reqs: List[Request],
-                       backend: BatchedPredictor,
-                       t0: float) -> List[Result]:
+    def _flush_sampled(self, reqs: List[Request]) -> List[Result]:
         """Fusion path of ``flush()``: per request, stratify on
         token-derived features (``analytical.token_clip_features`` —
         serving never sees the columnar trace), predict only the
@@ -238,26 +240,31 @@ class PredictorEngine:
         retried request samples identically."""
         scfg = self.config.sampling
         plans = []
-        for r in reqs:
-            feats = analytical.token_clip_features(r.clip_tokens,
-                                                   r.clip_mask)
-            # token features have no analytical-cycles column; clip
-            # occupancy (column 0) is the work-amount proxy
-            strata = analytical.stratify(feats, scfg.strata,
-                                         key_column=0)
-            sampled, _ = sampler_mod.stratified_sample(
-                strata, scfg.fraction, scfg.min_clips_per_stratum,
-                scfg.seed, key=r.request_id)
-            if sampled.shape[0]:
-                backend.add(r.clip_tokens[sampled],
-                            r.context_tokens[sampled],
-                            r.clip_mask[sampled])
-            plans.append((feats, strata, sampled))
-        preds = backend.drain()               # exactly the sampled clips
-        if self._cache is not None:
-            self._cache.persist()             # no-op without a store_dir
+        with self.obs.span("serving.flush", instance=self.instance,
+                           args={"requests": len(reqs),
+                                 "sampled": True}) as sp:
+            backend = self.backend()
+            backend.reset_context_width()
+            for r in reqs:
+                feats = analytical.token_clip_features(r.clip_tokens,
+                                                       r.clip_mask)
+                # token features have no analytical-cycles column; clip
+                # occupancy (column 0) is the work-amount proxy
+                strata = analytical.stratify(feats, scfg.strata,
+                                             key_column=0)
+                sampled, _ = sampler_mod.stratified_sample(
+                    strata, scfg.fraction, scfg.min_clips_per_stratum,
+                    scfg.seed, key=r.request_id)
+                if sampled.shape[0]:
+                    backend.add(r.clip_tokens[sampled],
+                                r.context_tokens[sampled],
+                                r.clip_mask[sampled])
+                plans.append((feats, strata, sampled))
+            preds = backend.drain()           # exactly the sampled clips
+            if self._cache is not None:
+                self._cache.persist()         # no-op without a store_dir
         n = preds.shape[0]
-        seconds = time.time() - t0
+        seconds = sp.seconds
 
         results = []
         off = 0

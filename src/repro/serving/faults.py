@@ -38,8 +38,13 @@ from typing import Dict, Iterable, Mapping, Optional, Tuple, Union
 import numpy as np
 
 from repro.core.engine_config import FAULT_KINDS, EngineConfig
+from repro.obs.metrics import REGISTRY
 
 FaultSpec = Union[Mapping[str, float], Iterable[Tuple[str, float]]]
+
+# fleet-wide fault ledger: every fired injection also lands in the
+# process metrics registry so /metrics shows chaos activity live
+FAULTS_INJECTED_TOTAL = "capsim_faults_injected_total"
 
 
 class FaultInjected(RuntimeError):
@@ -80,6 +85,11 @@ class FaultInjector:
         # per-kind fire counters: the bench/service stats report exactly
         # how many of each fault the run actually saw
         self.fired: Dict[str, int] = {k: 0 for k in FAULT_KINDS}
+        fam = REGISTRY.counter(
+            FAULTS_INJECTED_TOTAL,
+            "Injected chaos faults that actually fired, by kind.",
+            ("kind",))
+        self._metric = {k: fam.labels(kind=k) for k in FAULT_KINDS}
 
     @classmethod
     def from_config(cls, config: EngineConfig, *,
@@ -125,6 +135,7 @@ class FaultInjector:
             fired = bool(self._rng.random() < rate)
             if fired:
                 self.fired[kind] += 1
+                self._metric[kind].inc()
             return fired
 
     def maybe_raise(self, kind: str, detail: str = "") -> None:

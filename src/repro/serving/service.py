@@ -63,8 +63,22 @@ from repro.core import sampler as sampler_mod
 from repro.core.engine import BatchedPredictor
 from repro.core.engine_config import EngineConfig
 from repro.core.rt_cache import RTCache
+from repro.obs import Observability
 from repro.serving.engine import Request, validate_request
 from repro.serving.faults import FaultInjector
+
+# service-level metric names (see README's Observability section).
+# Every family carries an ``instance`` label (svc0, svc1, ...) so two
+# services in one process — or an abandoned watchdog thread outliving a
+# rebuilt one — never write into each other's series.
+TIER_EVENTS_TOTAL = "capsim_service_tier_events_total"
+TIER_TRANSITIONS_TOTAL = "capsim_service_tier_transitions_total"
+ADMISSION_TOTAL = "capsim_service_admission_total"
+QUEUE_DEPTH = "capsim_service_queue_depth"
+QUEUED_CLIPS = "capsim_service_queued_clips"
+FLUSH_SECONDS = "capsim_service_flush_seconds"
+ABANDONED_THREADS = "capsim_service_abandoned_flush_threads"
+ABANDONED_THREADS_TOTAL = "capsim_service_abandoned_flush_threads_total"
 
 # typed result statuses: the full closed set a caller can observe
 STATUS_OK = "ok"                          # served at the top tier
@@ -169,21 +183,80 @@ class _QueuedRequest:
     deadline: float                      # absolute time
 
 
-@dataclasses.dataclass
 class TierStats:
-    name: str
-    flushes: int = 0
-    clips: int = 0
-    demotions: int = 0                   # guard trips demoting FROM here
-    promotions: int = 0                  # promotions INTO this tier
-    nan_trips: int = 0
-    relerr_trips: int = 0
-    fault_trips: int = 0                 # exceptions during flush
-    watchdog_trips: int = 0
-    persist_failures: int = 0
+    """Live per-tier counters, as a view over the metrics registry
+    (``capsim_service_tier_events_total{instance,tier,event}``).  The
+    attribute surface of the retired accumulator dataclass is kept:
+    ``ts.nan_trips`` etc. read the registry; writers call ``inc``."""
 
-    def as_dict(self) -> Dict[str, int]:
+    # event label values == the legacy dataclass field names
+    EVENTS = ("flushes", "clips", "demotions", "promotions", "nan_trips",
+              "relerr_trips", "fault_trips", "watchdog_trips",
+              "persist_failures")
+
+    def __init__(self, name: str, obs: Observability, instance: str):
+        self.name = name
+        self._obs = obs
+        self._instance = instance
+        fam = obs.metrics.counter(
+            TIER_EVENTS_TOTAL,
+            "Per-tier serving events (flushes, clips, guard trips, ...).",
+            ("instance", "tier", "event"))
+        self._handles = {e: fam.labels(instance=instance, tier=name,
+                                       event=e) for e in self.EVENTS}
+
+    def inc(self, event: str, n: int = 1) -> None:
+        self._handles[event].inc(n)
+
+    def _val(self, event: str) -> int:
+        return int(self._obs.metrics.value(
+            TIER_EVENTS_TOTAL, instance=self._instance, tier=self.name,
+            event=event))
+
+    def __getattr__(self, item: str) -> int:
+        if item in TierStats.EVENTS:
+            return self._val(item)
+        raise AttributeError(item)
+
+    def as_dict(self) -> Dict[str, object]:
+        d: Dict[str, object] = {"name": self.name}
+        d.update({e: self._val(e) for e in self.EVENTS})
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceSnapshot:
+    """One immutable, JSON-stable view of the whole service: admission
+    ledger, degradation state, per-tier counters, chaos activity, and
+    the abandoned-watchdog-thread ledger.  ``stats()`` is a thin compat
+    wrapper returning ``snapshot().to_dict()``; the key set is frozen —
+    benches, the flight recorder, and the CI chaos leg all parse it."""
+
+    submitted: int
+    statuses: Dict[str, int]
+    current_tier: str
+    backoff: int
+    healthy_streak: int
+    queued: int
+    queued_clips: int
+    clips_per_s_ewma: Optional[float]
+    n_flushes: int
+    tiers: Dict[str, Dict[str, object]]
+    faults_fired: Dict[str, int]
+    abandoned_flush_threads: int         # still alive right now
+    abandoned_flush_threads_total: int   # ever abandoned (monotone)
+
+    def to_dict(self) -> Dict[str, object]:
         return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "ServiceSnapshot":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown ServiceSnapshot fields "
+                             f"{sorted(unknown)}")
+        return cls(**d)  # type: ignore[arg-type]
 
 
 class DegradationController:
@@ -239,20 +312,23 @@ class _Tier:
 
     def __init__(self, name: str, config: EngineConfig, params, cfg,
                  cache: Optional[RTCache],
-                 injector: Optional[FaultInjector]):
+                 injector: Optional[FaultInjector],
+                 obs: Optional[Observability] = None):
         self.name = name
         self.config = config
         self.params = params
         self.cfg = cfg
         self.cache = cache
         self._injector = injector
+        self._obs = obs
         self._backend: Optional[BatchedPredictor] = None
 
     def backend(self) -> BatchedPredictor:
         if self._backend is None:
             self._backend = BatchedPredictor(
                 self.params, self.cfg, config=self.config,
-                rt_cache=self.cache, fault_injector=self._injector)
+                rt_cache=self.cache, fault_injector=self._injector,
+                obs=self._obs)
         return self._backend
 
     def invalidate_backend(self) -> None:
@@ -303,6 +379,9 @@ class SimulationService:
                  start_tier: int = 0):
         self.config = config or EngineConfig()
         self.sla = sla or ServiceSLA()
+        self.obs = Observability.from_config(self.config.observability)
+        m = self.obs.metrics
+        self.instance = m.next_instance("svc")
         self._injector = fault_injector
         if self._injector is None and self.config.faults:
             # slow_flush must out-sleep the watchdog, or the chaos fault
@@ -332,26 +411,54 @@ class SimulationService:
                         n_shards=tcfg.n_shards,
                         store_dir=tcfg.rt_store_dir,
                         store_extra=build_vocab().signature(),
-                        fault_injector=self._injector)
+                        fault_injector=self._injector,
+                        obs=self.obs)
                 cache = caches[key]
             self._tiers.append(_Tier(name, tcfg, tparams, rcfg, cache,
-                                     self._injector))
+                                     self._injector, self.obs))
         # the trusted auditor: monolithic fp32, NO fault injector — spot
         # checks must measure the tier under test, not their own chaos
         mono_cfg = ladder[-1][1]
         self._reference = _Tier("reference", mono_cfg, params,
                                 pred_mod.inference_config(cfg, None),
-                                None, None)
+                                None, None, self.obs)
 
         if not 0 <= start_tier < len(self._tiers):
             raise ValueError(f"start_tier {start_tier} outside the "
                              f"{len(self._tiers)}-rung ladder")
         self._ctrl = DegradationController(len(self._tiers), self.sla)
         self._ctrl.idx = start_tier
-        self.tier_stats = [TierStats(t.name) for t in self._tiers]
+        self.tier_stats = [TierStats(t.name, self.obs, self.instance)
+                           for t in self._tiers]
         self._status_counts: Dict[str, int] = {s: 0 for s in STATUSES}
         self._n_submitted = 0
         self._n_flushes = 0
+
+        self._fam_transitions = m.counter(
+            TIER_TRANSITIONS_TOTAL,
+            "Degradation-ladder transitions by edge and reason.",
+            ("instance", "from_tier", "to_tier", "reason"))
+        self._fam_admission = m.counter(
+            ADMISSION_TOTAL, "Admission decisions (admitted vs shed).",
+            ("instance", "decision"))
+        self._g_queue_depth = m.gauge(
+            QUEUE_DEPTH, "Requests waiting in the admission queue.",
+            ("instance",)).labels(instance=self.instance)
+        self._g_queued_clips = m.gauge(
+            QUEUED_CLIPS, "Clips waiting in the admission queue.",
+            ("instance",)).labels(instance=self.instance)
+        self._h_flush = m.histogram(
+            FLUSH_SECONDS, "Watchdogged flush latency by serving tier.",
+            ("instance", "tier"))
+        self._g_abandoned = m.gauge(
+            ABANDONED_THREADS,
+            "Abandoned watchdog flush threads still alive.",
+            ("instance",)).labels(instance=self.instance)
+        self._c_abandoned = m.counter(
+            ABANDONED_THREADS_TOTAL,
+            "Watchdog flush threads ever abandoned.",
+            ("instance",)).labels(instance=self.instance)
+        self._abandoned: List[threading.Thread] = []
 
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
@@ -396,6 +503,7 @@ class SimulationService:
                         tier=None, n_clips=qr.ticket.n_clips,
                         queue_seconds=now - qr.arrival,
                         error="service stopped without drain"))
+                self._update_queue_gauges()
             self._cond.notify_all()
         if self._worker is not None:
             self._worker.join(timeout)
@@ -451,12 +559,14 @@ class SimulationService:
         with self._cond:
             self._n_submitted += 1
             if not self._running:
+                self._admission("not_running")
                 self._resolve_ticket(ticket, ServiceResult(
                     request_id=req.request_id, status=STATUS_OVERLOADED,
                     total_cycles=None, tier=None, n_clips=n_clips,
                     error="service is not running"))
                 return ticket
             if len(self._queue) >= self.sla.queue_limit:
+                self._admission("queue_full")
                 self._resolve_ticket(ticket, ServiceResult(
                     request_id=req.request_id, status=STATUS_OVERLOADED,
                     total_cycles=None, tier=None, n_clips=n_clips,
@@ -469,6 +579,7 @@ class SimulationService:
             if self._rate:
                 est_wait = self._queued_clips / self._rate
                 if est_wait > deadline:
+                    self._admission("predicted_wait")
                     self._resolve_ticket(ticket, ServiceResult(
                         request_id=req.request_id,
                         status=STATUS_OVERLOADED, total_cycles=None,
@@ -476,12 +587,23 @@ class SimulationService:
                         error=f"predicted wait {est_wait:.2f}s exceeds "
                               f"deadline {deadline:.2f}s"))
                     return ticket
+            self._admission("admitted")
             self._queue.append(_QueuedRequest(
                 req=req, ticket=ticket, arrival=now,
                 deadline=now + deadline))
             self._queued_clips += n_clips
+            self._update_queue_gauges()
             self._cond.notify()
         return ticket
+
+    def _admission(self, decision: str) -> None:
+        self._fam_admission.labels(instance=self.instance,
+                                   decision=decision).inc()
+
+    def _update_queue_gauges(self) -> None:
+        """Mirror the queue state into the registry (lock held)."""
+        self._g_queue_depth.set(len(self._queue))
+        self._g_queued_clips.set(self._queued_clips)
 
     def _resolve_ticket(self, ticket: ServiceTicket,
                         result: ServiceResult) -> None:
@@ -531,6 +653,7 @@ class SimulationService:
                 continue
             window.append(qr)
             clips += qr.ticket.n_clips
+        self._update_queue_gauges()
         return window
 
     def _serve_batch(self, batch: List[_QueuedRequest]) -> None:
@@ -566,23 +689,23 @@ class SimulationService:
             try:
                 times, flush_s = self._flush_watchdogged(tier, batch)
             except FlushTimeout:
-                ts.watchdog_trips += 1
+                ts.inc("watchdog_trips")
                 tier.invalidate_backend()
                 last_error = (f"watchdog abort after "
                               f"{self.sla.watchdog_s:.2f}s at {tier.name}")
-                self._demote(idx, "watchdog")
+                self._demote(idx, "watchdog", last_error)
                 continue
             except Exception as exc:          # noqa: BLE001 — typed fail
-                ts.fault_trips += 1
+                ts.inc("fault_trips")
                 tier.invalidate_backend()
                 last_error = f"{type(exc).__name__}: {exc} at {tier.name}"
-                self._demote(idx, "fault")
+                self._demote(idx, "fault", last_error)
                 continue
 
             if not np.isfinite(times).all():
-                ts.nan_trips += 1
+                ts.inc("nan_trips")
                 last_error = f"non-finite predictions at {tier.name}"
-                self._demote(idx, "nan")
+                self._demote(idx, "nan", last_error)
                 continue
 
             self._n_flushes += 1
@@ -593,15 +716,15 @@ class SimulationService:
                 tol = self.sla.tier_tolerances.get(
                     tier.name, float("inf"))
                 if err is not None and err > tol:
-                    ts.relerr_trips += 1
+                    ts.inc("relerr_trips")
                     last_error = (f"spot-check rel err {err:.2e} > "
                                   f"{tol:.2e} gate at {tier.name}")
-                    self._demote(idx, "relerr")
+                    self._demote(idx, "relerr", last_error)
                     continue
 
             # healthy flush: resolve, update throughput, maybe promote
-            ts.flushes += 1
-            ts.clips += int(times.shape[0])
+            ts.inc("flushes")
+            ts.inc("clips", int(times.shape[0]))
             if flush_s > 1e-6:
                 rate = times.shape[0] / flush_s
                 self._rate = (rate if self._rate is None
@@ -620,7 +743,9 @@ class SimulationService:
                 off += k
             promoted = self._ctrl.on_healthy()
             if promoted is not None:
-                self.tier_stats[promoted].promotions += 1
+                self.tier_stats[promoted].inc("promotions")
+                self._transition(tier.name, self._tiers[promoted].name,
+                                 "promotion")
             return
 
         # ladder exhausted (or attempt cap): typed failure, never a hang
@@ -633,9 +758,34 @@ class SimulationService:
                 service_seconds=now - t_start,
                 error=f"all serving tiers failed ({last_error})"))
 
-    def _demote(self, from_idx: int, reason: str) -> None:
-        self.tier_stats[from_idx].demotions += 1
-        self._ctrl.on_trip()
+    def _transition(self, from_tier: str, to_tier: str,
+                    reason: str) -> None:
+        """One ladder move: counter + flight/trace event, same ledger
+        the CI chaos leg cross-checks against the bench JSON."""
+        self._fam_transitions.labels(
+            instance=self.instance, from_tier=from_tier,
+            to_tier=to_tier, reason=reason).inc()
+        self.obs.event("tier_transition", from_tier=from_tier,
+                       to_tier=to_tier, reason=reason)
+
+    def _demote(self, from_idx: int, reason: str,
+                detail: str = "") -> None:
+        self.tier_stats[from_idx].inc("demotions")
+        new_idx = self._ctrl.on_trip()
+        from_name = self._tiers[from_idx].name
+        if new_idx is not None:
+            self._transition(from_name, self._tiers[new_idx].name,
+                             reason)
+        else:
+            # ladder floor: a trip with nowhere to go is still an event
+            self.obs.event("tier_trip_floor", tier=from_name,
+                           reason=reason)
+        # postmortem AFTER the transition event so the flight ring
+        # captures it; the snapshot is the post-demotion state
+        state = self.snapshot().to_dict()
+        if detail:
+            state["detail"] = detail
+        self.obs.postmortem(f"demote_{reason}", state=state)
 
     def _flush_watchdogged(self, tier: _Tier,
                            batch: Sequence[_QueuedRequest]
@@ -668,10 +818,15 @@ class SimulationService:
                               daemon=True)
         th.start()
         if not done.wait(self.sla.watchdog_s):
+            self._abandoned.append(th)
+            self._c_abandoned.inc()
+            self._prune_abandoned()
             raise FlushTimeout(tier.name)
         if "exc" in box:
             raise box["exc"]                  # type: ignore[misc]
         flush_s = time.time() - t0
+        self._h_flush.labels(instance=self.instance,
+                             tier=tier.name).observe(flush_s)
         if tier.cache is not None:
             # persist failures must not discard a finished flush: the
             # previous store generation is intact (atomic publish), so
@@ -680,7 +835,7 @@ class SimulationService:
                 tier.cache.persist()
             except Exception:                 # noqa: BLE001
                 self.tier_stats[self._tiers.index(tier)] \
-                    .persist_failures += 1
+                    .inc("persist_failures")
         return box["times"], flush_s          # type: ignore[return-value]
 
     def _drain_sampled(self, backend: BatchedPredictor,
@@ -756,19 +911,37 @@ class SimulationService:
 
     # ------------------------------ stats ------------------------------ #
 
-    def stats(self) -> Dict[str, object]:
+    def _prune_abandoned(self) -> None:
+        """Drop finished stragglers; mirror the alive count into the
+        gauge.  A straggler that finally finishes was writing into its
+        OLD backend's per-instance metric series — never this one's."""
+        self._abandoned = [t for t in self._abandoned if t.is_alive()]
+        self._g_abandoned.set(len(self._abandoned))
+
+    def snapshot(self) -> ServiceSnapshot:
+        """One consistent, frozen, JSON-stable view of the service."""
         with self._lock:
-            d = {
-                "submitted": self._n_submitted,
-                "statuses": dict(self._status_counts),
-                "current_tier": self.current_tier,
-                "backoff": self._ctrl.backoff,
-                "healthy_streak": self._ctrl.healthy_streak,
-                "queued": len(self._queue),
-                "clips_per_s_ewma": self._rate,
-                "tiers": {t.name: s.as_dict() for t, s in
-                          zip(self._tiers, self.tier_stats)},
-            }
-            if self._injector is not None:
-                d["faults_fired"] = self._injector.stats()
-            return d
+            self._prune_abandoned()
+            return ServiceSnapshot(
+                submitted=self._n_submitted,
+                statuses=dict(self._status_counts),
+                current_tier=self.current_tier,
+                backoff=self._ctrl.backoff,
+                healthy_streak=self._ctrl.healthy_streak,
+                queued=len(self._queue),
+                queued_clips=self._queued_clips,
+                clips_per_s_ewma=self._rate,
+                n_flushes=self._n_flushes,
+                tiers={t.name: s.as_dict() for t, s in
+                       zip(self._tiers, self.tier_stats)},
+                faults_fired=(self._injector.stats()
+                              if self._injector is not None else {}),
+                abandoned_flush_threads=len(self._abandoned),
+                abandoned_flush_threads_total=int(self.obs.metrics.value(
+                    ABANDONED_THREADS_TOTAL, instance=self.instance)),
+            )
+
+    def stats(self) -> Dict[str, object]:
+        """Compat wrapper: ``snapshot().to_dict()`` (same keys as the
+        pre-observability dict, plus the new snapshot fields)."""
+        return self.snapshot().to_dict()

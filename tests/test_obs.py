@@ -1,0 +1,314 @@
+"""Observability layer: metrics registry, tracer, flight recorder.
+
+Covers the tentpole's own contracts (thread-safe counters, Prometheus
+exposition format, ring wraparound, disabled-mode zero cost) and the
+integration path that matters most: an injected NaN demotion in the
+real ``SimulationService`` must produce a postmortem JSON whose
+tier-transition ledger agrees with the service snapshot's counters.
+"""
+import json
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import predictor
+from repro.core.engine_config import EngineConfig, ObservabilityConfig
+from repro.core.standardize import build_vocab
+from repro.obs import NULL_SPAN, MetricsRegistry, Observability, Tracer
+from repro.obs.exporter import serve_metrics
+from repro.serving.engine import Request
+from repro.serving.faults import FaultInjector
+from repro.serving.service import (ServiceSLA, ServiceSnapshot,
+                                   SimulationService)
+
+VOCAB = build_vocab()
+SMALL_CFG = get_config("capsim").replace(
+    d_model=32, head_dim=8, d_ff=64, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return predictor.init_params(SMALL_CFG, jax.random.PRNGKey(0))
+
+
+def _req(i, n=4):
+    rng = np.random.RandomState(i)
+    tok = rng.randint(0, VOCAB.size, (n, 128, SMALL_CFG.clip_tokens)
+                      ).astype(np.int32)
+    ctx = rng.randint(0, VOCAB.size, (n, SMALL_CFG.context_tokens)
+                      ).astype(np.int32)
+    return Request(i, tok, ctx, np.ones((n, 128), np.float32))
+
+
+# --------------------------------------------------------------------------- #
+# Metrics registry
+# --------------------------------------------------------------------------- #
+
+def test_counter_gauge_histogram_basics():
+    m = MetricsRegistry()
+    c = m.counter("c_total", "c", ("k",)).labels(k="a")
+    c.inc()
+    c.inc(2.5)
+    assert m.value("c_total", k="a") == 3.5
+    assert m.value("c_total", k="missing") == 0.0
+    g = m.gauge("g", "g", ()).labels()
+    g.set(7)
+    g.dec(3)
+    assert m.value("g") == 4
+    h = m.histogram("h_seconds", "h", (), buckets=(1.0, 10.0)).labels()
+    h.observe(0.5)
+    h.observe(5.0)
+    h.observe(50.0)
+    [(labels, (total, count))] = m.collect("h_seconds")
+    assert count == 3 and total == 55.5
+
+
+def test_counter_negative_inc_rejected():
+    m = MetricsRegistry()
+    c = m.counter("n_total", "n", ()).labels()
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_registration_idempotent_but_kind_checked():
+    m = MetricsRegistry()
+    f1 = m.counter("x_total", "x", ("a",))
+    f2 = m.counter("x_total", "x", ("a",))
+    assert f1 is f2
+    with pytest.raises(ValueError):
+        m.gauge("x_total", "x", ("a",))
+    with pytest.raises(ValueError):
+        m.counter("x_total", "x", ("b",))
+
+
+def test_registry_thread_safety():
+    """N writers hammering one counter and one histogram concurrently:
+    the final totals must be exact (the registry lock is real)."""
+    m = MetricsRegistry()
+    c = m.counter("race_total", "r", ("w",))
+    h = m.histogram("race_seconds", "r", ())
+    n_threads, n_iter = 8, 2_000
+    barrier = threading.Barrier(n_threads)
+
+    def work(w):
+        handle = c.labels(w=str(w % 2))       # two shared series
+        hh = h.labels()
+        barrier.wait()
+        for _ in range(n_iter):
+            handle.inc()
+            hh.observe(1.0)
+
+    threads = [threading.Thread(target=work, args=(w,))
+               for w in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    total = (m.value("race_total", w="0")
+             + m.value("race_total", w="1"))
+    assert total == n_threads * n_iter
+    [(_, (hsum, hcount))] = m.collect("race_seconds")
+    assert hcount == n_threads * n_iter and hsum == float(hcount)
+
+
+def test_prometheus_exposition_golden():
+    """Exact text-format golden: HELP/TYPE lines, escaped label values,
+    cumulative histogram buckets with +Inf, _sum and _count."""
+    m = MetricsRegistry()
+    m.counter("req_total", 'requests with "quotes"\nand newline',
+              ("tier",)).labels(tier="fused").inc(3)
+    m.gauge("depth", "queue depth", ()).labels().set(2.5)
+    h = m.histogram("lat_seconds", "latency", (),
+                    buckets=(0.1, 1.0)).labels()
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(5.0)
+    got = m.render_prometheus()
+    want = "\n".join([
+        '# HELP depth queue depth',
+        '# TYPE depth gauge',
+        'depth 2.5',
+        '# HELP lat_seconds latency',
+        '# TYPE lat_seconds histogram',
+        'lat_seconds_bucket{le="0.1"} 1',
+        'lat_seconds_bucket{le="1"} 2',
+        'lat_seconds_bucket{le="+Inf"} 3',
+        'lat_seconds_sum 5.55',
+        'lat_seconds_count 3',
+        '# HELP req_total requests with "quotes"\\nand newline',
+        '# TYPE req_total counter',
+        'req_total{tier="fused"} 3',
+    ]) + "\n"
+    assert got == want
+
+
+def test_snapshot_is_json_roundtrippable():
+    m = MetricsRegistry()
+    m.counter("a_total", "a", ("x",)).labels(x="1").inc()
+    m.histogram("b_seconds", "b", ()).labels().observe(0.2)
+    snap = m.snapshot()
+    assert json.loads(json.dumps(snap)) == snap
+
+
+def test_exporter_serves_registry():
+    m = MetricsRegistry()
+    m.counter("served_total", "s", ()).labels().inc(5)
+    server = serve_metrics(m, port=0)
+    try:
+        import urllib.request
+        port = server.server_address[1]
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/metrics", timeout=10) as r:
+            body = r.read().decode()
+            assert r.headers["Content-Type"].startswith("text/plain")
+        assert "served_total 5" in body
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/healthz", timeout=10) as r:
+            assert r.read() == b"ok\n"
+    finally:
+        server.shutdown()
+
+
+# --------------------------------------------------------------------------- #
+# Tracer
+# --------------------------------------------------------------------------- #
+
+def test_disabled_tracer_is_free():
+    """Disabled tracing returns THE null span singleton — no per-call
+    allocation, no ring append."""
+    tr = Tracer(enabled=False)
+    assert tr.span("x") is NULL_SPAN
+    assert tr.span("y", args={"a": 1}) is NULL_SPAN
+    with tr.span("z") as sp:
+        pass
+    assert sp.seconds == 0.0
+    tr.instant("ev")
+    tr.record("pre", 0, 100)
+    assert tr.spans() == []
+
+
+def test_ring_wraparound_keeps_last_n():
+    tr = Tracer(ring_size=8, enabled=True)
+    for i in range(20):
+        tr.record(f"s{i}", start_ns=i * 1000, dur_ns=10)
+    spans = tr.spans()
+    assert len(spans) == 8
+    assert [s.name for s in spans] == [f"s{i}" for i in range(12, 20)]
+
+
+def test_chrome_export_shape():
+    tr = Tracer(enabled=True)
+    with tr.span("outer", args={"k": "v"}):
+        with tr.span("inner"):
+            pass
+    tr.instant("mark")
+    doc = tr.export_chrome()
+    events = doc["traceEvents"]
+    names = [e["name"] for e in events]
+    assert names == ["inner", "outer", "mark"]   # inner closes first
+    outer = events[1]
+    assert outer["ph"] == "X" and outer["args"]["k"] == "v"
+    assert events[0]["args"]["depth"] == 1       # nested under outer
+    assert events[2]["ph"] == "i"
+    json.dumps(doc)                              # must be serializable
+
+
+def test_obs_span_records_metrics_and_trace(tmp_path):
+    obs = Observability.from_config(
+        ObservabilityConfig(trace=True, trace_ring=16))
+    with obs.span("unit.work", instance="t0") as sp:
+        x = sum(range(100))
+    assert x == 4950 and sp.seconds > 0
+    assert obs.metrics.value("capsim_span_seconds_total",
+                             span="unit.work", instance="t0") \
+        == pytest.approx(sp.seconds)
+    [rec] = [r for r in obs.tracer.spans() if r.name == "unit.work"]
+    assert rec.args["instance"] == "t0"
+    out = tmp_path / "trace.json"
+    obs.tracer.dump(str(out))
+    assert json.loads(out.read_text())["traceEvents"]
+
+
+# --------------------------------------------------------------------------- #
+# ServiceSnapshot
+# --------------------------------------------------------------------------- #
+
+def test_service_snapshot_roundtrip_and_stable_keys(params):
+    svc = SimulationService(params, SMALL_CFG, EngineConfig(batch_size=8),
+                            sla=ServiceSLA())
+    snap = svc.snapshot()
+    d = snap.to_dict()
+    # the frozen key set benches and the CI chaos leg parse
+    assert list(d) == [
+        "submitted", "statuses", "current_tier", "backoff",
+        "healthy_streak", "queued", "queued_clips", "clips_per_s_ewma",
+        "n_flushes", "tiers", "faults_fired",
+        "abandoned_flush_threads", "abandoned_flush_threads_total"]
+    assert list(d["tiers"]) == ["fused_int8", "fused", "rt", "monolithic"]
+    assert list(d["tiers"]["rt"]) == [
+        "name", "flushes", "clips", "demotions", "promotions",
+        "nan_trips", "relerr_trips", "fault_trips", "watchdog_trips",
+        "persist_failures"]
+    back = ServiceSnapshot.from_dict(json.loads(json.dumps(d)))
+    assert back.to_dict() == d
+    with pytest.raises(ValueError):
+        ServiceSnapshot.from_dict({**d, "bogus": 1})
+    # stats() is the thin compat wrapper over the same snapshot
+    assert svc.stats() == svc.snapshot().to_dict()
+
+
+# --------------------------------------------------------------------------- #
+# Flight recorder on the real degradation path
+# --------------------------------------------------------------------------- #
+
+def test_nan_demotion_writes_consistent_postmortem(params, tmp_path):
+    """A forced NaN on the top tier must demote AND dump a postmortem
+    whose event ring agrees with the snapshot counters it embeds."""
+    flight_dir = tmp_path / "flight"
+    config = EngineConfig(
+        batch_size=8, faults={"nan_output": 1.0},
+        observability=ObservabilityConfig(flight_dir=str(flight_dir)))
+    inj = FaultInjector({"nan_output": 1.0}, seed=3)
+    inj.set_enabled(False)
+    sla = ServiceSLA(watchdog_s=120.0, promote_after=1, check_every=0)
+    with SimulationService(params, SMALL_CFG, config, sla=sla,
+                           fault_injector=inj) as svc:
+        svc.prewarm(_req(0, n=2))
+        assert svc.submit(_req(1)).result(timeout=300).status == "ok"
+        inj.set_enabled(True)                 # every retire goes NaN now
+        res = svc.submit(_req(2)).result(timeout=300)
+        inj.set_enabled(False)
+        assert res.status in ("degraded", "failed")
+        snap = svc.snapshot()
+    fl = svc.obs.flight
+    assert fl is not None and fl.postmortems
+    post = json.loads(open(fl.postmortems[-1]).read())
+    assert post["schema_version"] == 1
+    assert post["reason"].startswith("demote_")
+    assert post["metrics"] is not None
+    # ledger consistency: transition events vs embedded snapshot counters
+    tiers = post["state"]["tiers"]
+    names = list(tiers)
+    exp_demote = sum(tiers[n]["demotions"] for n in names[:-1])
+    ev = [e for e in post["events"] if e["kind"] == "tier_transition"]
+    got_demote = sum(1 for e in ev if e["reason"] != "promotion")
+    assert got_demote == exp_demote > 0
+    # the nan reason made it into both ledgers
+    assert any(e["reason"] == "nan" for e in ev)
+    assert sum(t["nan_trips"] for t in tiers.values()) > 0
+    # the final live snapshot counts at least as many demotions
+    live = sum(t["demotions"] for t in snap.tiers.values())
+    assert live >= exp_demote
+
+
+def test_faults_counter_lands_in_registry():
+    from repro.obs import REGISTRY
+    from repro.serving.faults import FAULTS_INJECTED_TOTAL
+    before = REGISTRY.value(FAULTS_INJECTED_TOTAL, kind="device_error")
+    inj = FaultInjector({"device_error": 1.0}, seed=0)
+    assert inj.maybe("device_error")
+    after = REGISTRY.value(FAULTS_INJECTED_TOTAL, kind="device_error")
+    assert after == before + 1
